@@ -1,0 +1,119 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.compiler import compile_strategy
+from repro.core.device import testbed, cloud, two_1080ti, homogeneous_2v100
+from repro.core.graph import group_graph
+from repro.core.jax_export import trace_training_graph
+from repro.core.mcts import MCTS
+from repro.core.partition import partition
+from repro.core.simulator import simulate
+from repro.core.strategy import (
+    Action, Option, Strategy, candidate_actions, data_parallel_all)
+from repro.core.tag import dp_baseline, sfb_post_pass
+from repro.core.zoo import ZOO, build
+
+MODELS = list(ZOO)
+
+_GG_CACHE: dict = {}
+
+
+def grouped(name: str, batch=None, n_groups: int = 30):
+    key = (name, batch, n_groups)
+    if key not in _GG_CACHE:
+        loss_fn, params, bspec = build(name, batch=batch)
+        g = trace_training_graph(loss_fn, params, bspec, name).simplify()
+        _GG_CACHE[key] = group_graph(g, partition(g, n_groups))
+    return _GG_CACHE[key]
+
+
+def sim_time(gg, strat, topo, *, sfb=False, proportional=False,
+             overlap_sync=False):
+    plans = sfb_post_pass(gg, strat, topo) if sfb else {}
+    tg = compile_strategy(gg, strat, topo, proportional=proportional,
+                          sfb_plans=plans)
+    if overlap_sync:
+        # Horovod-style: AllReduce overlaps with remaining backward compute
+        # (modelled as non-blocking ring transfers, like the PS path)
+        for t in tg.tasks:
+            if t.kind == "allreduce":
+                t.kind = "ps"
+    return simulate(tg, topo).makespan
+
+
+def dp_time(gg, topo, **kw):
+    return sim_time(gg, dp_baseline(gg, topo), topo, **kw)
+
+
+def mcmc_search(gg, topo, iters: int = 300, seed: int = 0,
+                heterogeneity_blind: bool = True):
+    """FlexFlow-style MCMC over the same strategy space. When
+    heterogeneity_blind, proposals are COSTED on a homogenized cluster
+    (all devices = mean speed) and the result is evaluated on the true
+    one — reproducing FlexFlow's blindness to device heterogeneity."""
+    from dataclasses import replace as dreplace
+    import copy
+    rng = np.random.default_rng(seed)
+    topo_cost = topo
+    if heterogeneity_blind:
+        topo_cost = copy.deepcopy(topo)
+        mean_flops = np.mean([g.flops for g in topo.groups])
+        for g in topo_cost.groups:
+            g.flops = float(mean_flops)
+
+    cands = [candidate_actions(topo, has_grad=gg.groups[g].has_grad)
+             for g in range(gg.n)]
+    cur = dp_baseline(gg, topo)
+    cur_t = sim_time(gg, cur, topo_cost)
+    best, best_t = cur, cur_t
+    T = 0.1 * cur_t
+    for _ in range(iters):
+        gid = int(rng.integers(gg.n))
+        prop = cur.with_action(gid, cands[gid][int(rng.integers(
+            len(cands[gid])))])
+        t = sim_time(gg, prop, topo_cost)
+        if t < cur_t or rng.random() < np.exp(-(t - cur_t) / max(T, 1e-9)):
+            cur, cur_t = prop, t
+            if t < best_t:
+                best, best_t = prop, t
+    return best, sim_time(gg, best, topo)   # evaluate on TRUE topology
+
+
+def canonical_strategies(gg, topo):
+    """Warm-start candidates inside TAG's space: DP-AR/PS over all devices,
+    each GPU type alone (AR/PS), and the fastest-half prefix."""
+    out = [Strategy([data_parallel_all(topo, o)] * gg.n)
+           for o in (Option.AR, Option.PS)]
+    by_type: dict = {}
+    for g, dg in enumerate(topo.groups):
+        by_type.setdefault(dg.gpu_type, []).append(g)
+    order = sorted(range(topo.m),
+                   key=lambda g: -(topo.groups[g].flops
+                                   * topo.groups[g].num_gpus))
+    subsets = [tuple(sorted(v)) for v in by_type.values()]
+    subsets.append(tuple(sorted(order[:max(1, topo.m // 2)])))
+    for p in subsets:
+        for o in (Option.AR, Option.PS):
+            out.append(Strategy([Action(p, o)] * gg.n))
+    return out
+
+
+def tag_search(gg, topo, *, policy=None, iters: int = 60, seed: int = 0,
+               sfb: bool = True):
+    mcts = MCTS(gg, topo, policy=policy, seed=seed)
+    sr = mcts.search(iters)
+    best_t = sim_time(gg, sr.best_strategy, topo, sfb=sfb)
+    for strat in canonical_strategies(gg, topo):
+        t = sim_time(gg, strat, topo, sfb=sfb)
+        if t < best_t:
+            best_t = t
+            sr.best_strategy = strat
+    return sr, best_t
+
+
+def fmt_row(*cells):
+    return ",".join(str(c) for c in cells)

@@ -1,0 +1,36 @@
+"""Fig. 7: GNN training loss with vs without the runtime-feedback features
+(paper §5.5 — feedback features significantly speed learning)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fmt_row, grouped
+from repro.core.trainer import init_trainer, train_policy
+
+
+def run(steps=12):
+    graphs = [grouped("bert_small"), grouped("inception_v3")]
+    with_fb = init_trainer(seed=0)
+    train_policy(with_fb, graphs, steps=steps, mcts_iters=14, seed=0,
+                 use_feedback=True)
+    without_fb = init_trainer(seed=0)
+    train_policy(without_fb, graphs, steps=steps, mcts_iters=14, seed=0,
+                 use_feedback=False)
+    return {"with_feedback": with_fb.losses,
+            "without_feedback": without_fb.losses}
+
+
+def main():
+    r = run()
+    print("fig7,step,loss_with_feedback,loss_without_feedback")
+    for i, (a, b) in enumerate(zip(r["with_feedback"],
+                                   r["without_feedback"])):
+        print(fmt_row("fig7", i, f"{a:.4f}", f"{b:.4f}"))
+    wa = float(np.mean(r["with_feedback"][-3:]))
+    wb = float(np.mean(r["without_feedback"][-3:]))
+    print(fmt_row("fig7", "final_mean", f"{wa:.4f}", f"{wb:.4f}"))
+    return r
+
+
+if __name__ == "__main__":
+    main()

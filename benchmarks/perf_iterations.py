@@ -1,0 +1,226 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> re-analyse,
+for the three chosen (arch x shape) pairs:
+
+  * kimi-k2-1t-a32b x train_4k  — worst roofline fraction (memory 289 s,
+    collective 139 s at baseline)
+  * olmoe-1b-7b    x train_4k  — most collective-bound (coll/compute ~38x)
+  * qwen2-1.5b     x train_4k  — most representative of the paper's
+    technique: the levers below are exactly TAG strategy choices
+    (replication degree / partial placement / sync mode) lowered to mesh
+    rules.
+
+Each iteration records hypothesis, napkin-math prediction, and the
+measured before/after roofline terms into results/perf_iterations.json.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations [pair ...]
+"""
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+from repro.launch import mesh as mesh_mod          # noqa: E402
+from repro.launch import steps as steps_mod        # noqa: E402
+from repro.launch.dryrun import lower_one          # noqa: E402
+
+OUT = "results/perf_iterations.json"
+
+# Each experiment: (id, description/hypothesis, kwargs for lower_one)
+EXPERIMENTS = {
+    "qwen2-1.5b/train_4k": [
+        ("q0b-baseline-v2",
+         "re-baseline after the scatter-accounting fix (the embedding "
+         "gradient scatter was charged the full (V, D) buffer per step).",
+         {}),
+        ("q5-pure-dp-v2",
+         "q3 re-measured under fixed accounting. HYPOTHESIS: flops/chip "
+         "also drop ~1.6x because baseline TP replicated attention "
+         "compute across the model axis (12 heads % 16 != 0).",
+         {"overrides": {"batch": ("data", "model"), "q_heads": None,
+                        "kv_heads": None, "mlp": None, "vocab": None,
+                        "experts": None, "ssm_heads": None,
+                        "ssm_inner": None}}),
+        ("q6-pure-dp+dots+chunk-v2",
+         "HYPOTHESIS: on top of q5, remat=dots cuts recompute flops ~20% "
+         "for some saved-activation traffic; loss chunking is ~free.",
+         {"overrides": {"batch": ("data", "model"), "q_heads": None,
+                        "kv_heads": None, "mlp": None, "vocab": None,
+                        "experts": None, "ssm_heads": None,
+                        "ssm_inner": None},
+          "options": steps_mod.StepOptions(loss_chunk=512,
+                                           remat_policy="dots")}),
+        ("q0-baseline", "paper-faithful DP(data)+TP(model) baseline", {}),
+        ("q1-remat-dots",
+         "HYPOTHESIS: policy=dots_with_no_batch_dims saves small dot "
+         "outputs, cutting bwd recompute (~1/4 of compute term) at little "
+         "HBM cost since only non-batch dots are saved.",
+         {"options": steps_mod.StepOptions(remat_policy="dots")}),
+        ("q2-loss-chunk",
+         "HYPOTHESIS: chunking the loss avoids materializing the "
+         "(tokens, vocab/16) logits (+grad) ~4x1.2GB/chip rounds: memory "
+         "term down ~0.6s/chip; flops unchanged.",
+         {"options": steps_mod.StepOptions(loss_chunk=512)}),
+        ("q3-pure-dp",
+         "HYPOTHESIS: qwen2 has 12 heads / 2 kv heads — indivisible by "
+         "model=16, so attention runs REPLICATED across the model axis "
+         "(16x wasted score traffic). Mapping batch onto BOTH axes "
+         "(256-way DP, tensor dims unsharded) divides activation traffic "
+         "by 16 at the price of an all-reduce of the full 1.5B-param "
+         "grads (~3GB wire): memory term should drop several x, "
+         "collective term rise ~0.1s. Net large win. This is exactly a "
+         "TAG 'replicate-everywhere' strategy for an ill-fitting TP mesh.",
+         {"overrides": {"batch": ("data", "model"), "q_heads": None,
+                        "kv_heads": None, "mlp": None, "vocab": None,
+                        "experts": None, "ssm_heads": None,
+                        "ssm_inner": None}}),
+        ("q4-pure-dp+chunk+dots",
+         "HYPOTHESIS: q1-q3 compose (independent mechanisms).",
+         {"overrides": {"batch": ("data", "model"), "q_heads": None,
+                        "kv_heads": None, "mlp": None, "vocab": None,
+                        "experts": None, "ssm_heads": None,
+                        "ssm_inner": None},
+          "options": steps_mod.StepOptions(loss_chunk=512,
+                                           remat_policy="dots")}),
+    ],
+    "olmoe-1b-7b/train_4k": [
+        ("o0b-baseline-v2",
+         "re-baseline after fixing in-place scatter accounting in the "
+         "analyzer (wrapped_scatter fusions were charged the full buffer).",
+         {}),
+        ("o5-scatter-combine",
+         "PROFILE-DRIVEN: the dominant collective is ONE all-gather "
+         "(1.17e12 B wire) — the combine gather indexes the model-sharded "
+         "(E*C, D) expert outputs, so XLA all-gathers the full expert "
+         "output per chip. HYPOTHESIS: combining on the expert side "
+         "(weight + scatter-add into (Tg, D), then an implicit "
+         "all-reduce of partial sums) moves only Tg*D*2B per chip "
+         "(~3.4e7 B/layer): collective term should drop ~10x.",
+         {"cfg_overrides": {"moe_combine": "scatter"}}),
+        ("o6-scatter+capacity",
+         "HYPOTHESIS: o5 + capacity 1.0 compose.",
+         {"cfg_overrides": {"moe_combine": "scatter",
+                            "capacity_factor": 1.0}}),
+        ("o0-baseline", "baseline: experts on model axis, capacity 1.25", {}),
+        ("o1-capacity-1.0",
+         "HYPOTHESIS: dispatch/combine tensors (E,G,C,D) scale linearly "
+         "with capacity factor; cf 1.25->1.0 cuts a2a + expert-side "
+         "traffic by 20% with moderate drop risk.",
+         {"cfg_overrides": {"capacity_factor": 1.0}}),
+        ("o2-expert-fsdp",
+         "HYPOTHESIS: expert weights (64,2048,1024)x3 are replicated "
+         "across data; mapping expert_embed->data shards them 16-way "
+         "(FSDP): collective term rises (per-layer all-gather of "
+         "weights) but memory/footprint falls ~8x on expert params; "
+         "for a collective-BOUND pair this should LOSE -> refutation "
+         "test of the FSDP lever here.",
+         {"overrides": {"expert_embed": "data"}}),
+        ("o3-batch-on-model-too",
+         "HYPOTHESIS: olmoe has only 16 experts-per-layer active paths "
+         "worth of TP; batch->(data,model) with experts unsharded "
+         "removes the dispatch all-to-alls entirely (dispatch becomes "
+         "chip-local), trading them for full-param grad all-reduce "
+         "(~7B x 2B = 14GB wire ~ 0.07s). Collective term should "
+         "collapse from 10.2s.",
+         {"overrides": {"batch": ("data", "model"), "q_heads": None,
+                        "kv_heads": None, "mlp": None, "vocab": None,
+                        "experts": None, "expert_embed": None}}),
+        ("o4-combo",
+         "HYPOTHESIS: o1 + o3 compose.",
+         {"overrides": {"batch": ("data", "model"), "q_heads": None,
+                        "kv_heads": None, "mlp": None, "vocab": None,
+                        "experts": None, "expert_embed": None},
+          "cfg_overrides": {"capacity_factor": 1.0},
+          "options": steps_mod.StepOptions(loss_chunk=512)}),
+    ],
+    "kimi-k2-1t-a32b/train_4k": [
+        ("k0b-baseline-v2",
+         "re-baseline after the scatter-accounting fix.", {}),
+        ("k5-scatter-combine",
+         "HYPOTHESIS: same mechanism as o5 at kimi scale — the combine "
+         "all-gather across 384 model-sharded experts is the bulk of the "
+         "139s collective term; scatter-add combine should collapse it.",
+         {"cfg_overrides": {"moe_combine": "scatter"}}),
+        ("k6-best-combo",
+         "HYPOTHESIS: scatter-combine + expert FSDP + capacity 1.0 "
+         "compose: collective down ~10x, args footprint 16x down, "
+         "dispatch traffic -20%.",
+         {"cfg_overrides": {"moe_combine": "scatter",
+                            "capacity_factor": 1.0},
+          "overrides": {"expert_embed": "data"},
+          "options": steps_mod.StepOptions(loss_chunk=512)}),
+        ("k0-baseline", "baseline: experts on model, batch on data", {}),
+        ("k1-loss-chunk",
+         "HYPOTHESIS: kimi vocab=163840; logits block is "
+         "(65536, 10240)x2B x fwd/bwd — chunking saves ~2.7GB/chip "
+         "traffic per pass; small relative to 290s memory term but free.",
+         {"options": steps_mod.StepOptions(loss_chunk=512)}),
+        ("k2-expert-fsdp",
+         "HYPOTHESIS: kimi's 1T expert params replicated over data is "
+         "the memory-footprint blocker (390GB args/chip); "
+         "expert_embed->data shards them 16x: args ~25GB/chip. "
+         "Collective term rises by per-layer weight all-gathers "
+         "(384x7168x2048x3x2B/16 ~ 2GB/layer gathered): predicted "
+         "collective +0.6s/layer-ish amortized, memory args 16x down. "
+         "Footprint, not traffic, is the target.",
+         {"overrides": {"expert_embed": "data"}}),
+        ("k3-capacity-1.0",
+         "HYPOTHESIS: same 20% dispatch-traffic cut as o1, at kimi's "
+         "scale the a2a bytes are 139s of collective: expect ~20% off "
+         "the collective term.",
+         {"cfg_overrides": {"capacity_factor": 1.0}}),
+        ("k4-combo",
+         "HYPOTHESIS: k1+k2+k3 compose.",
+         {"overrides": {"expert_embed": "data"},
+          "cfg_overrides": {"capacity_factor": 1.0},
+          "options": steps_mod.StepOptions(loss_chunk=512)}),
+    ],
+}
+
+
+def main():
+    sel = sys.argv[1:]
+    mesh = mesh_mod.make_production_mesh()
+    results = []
+    if os.path.exists(OUT):
+        results = json.load(open(OUT))
+    done = {(r["pair"], r["step"]) for r in results}
+    for pair, steps in EXPERIMENTS.items():
+        if sel and not any(s in pair for s in sel):
+            continue
+        arch, shape = pair.split("/")
+        for (step_id, hypothesis, kw) in steps:
+            if (pair, step_id) in done:
+                continue
+            t0 = time.time()
+            try:
+                r = lower_one(arch, shape, mesh, **kw)
+                rec = {"pair": pair, "step": step_id,
+                       "hypothesis": hypothesis, "ok": True,
+                       "roofline": r["roofline"], "dominant": r["dominant"],
+                       "hlo_flops": r["hlo_flops"],
+                       "hlo_bytes": r["hlo_bytes"],
+                       "collective_bytes":
+                           r["collectives"]["total_bytes"],
+                       "memory": r["memory"],
+                       "wall_s": round(time.time() - t0, 1)}
+                t = r["roofline"]
+                print(f"{pair} {step_id}: c={t['compute_s']:.3f} "
+                      f"m={t['memory_s']:.3f} x={t['collective_s']:.3f} "
+                      f"args={r['memory']['argument_bytes']/1e9:.0f}GB "
+                      f"temp={r['memory']['temp_bytes']/1e9:.0f}GB",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001
+                rec = {"pair": pair, "step": step_id,
+                       "hypothesis": hypothesis, "ok": False,
+                       "error": f"{type(e).__name__}: {e}"}
+                print(f"{pair} {step_id}: FAIL {rec['error']}", flush=True)
+            results.append(rec)
+            with open(OUT, "w") as f:
+                json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

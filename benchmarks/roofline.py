@@ -1,0 +1,62 @@
+"""Roofline table: read the dry-run artifacts (results/dryrun_*.json) and
+print the three roofline terms per (arch x shape x mesh), the dominant
+bottleneck, and the useful-flops ratio MODEL_FLOPS / HLO_FLOPs."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import fmt_row
+from repro.configs import SHAPES, config_for_shape
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode = one token per seq."""
+    shape = SHAPES[shape_name]
+    cfg = config_for_shape(arch, shape_name)
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token/seq
+
+
+def load_results(paths):
+    rows = []
+    for p in paths:
+        if not os.path.exists(p):
+            continue
+        with open(p) as f:
+            rows.extend(json.load(f))
+    return rows
+
+
+def main(paths=("results/dryrun_final.json",)):
+    rows = load_results(paths)
+    print("roofline,arch,shape,mesh,compute_s,memory_s,collective_s,"
+          "dominant,model_tflops,hlo_tflops_per_chip,useful_ratio")
+    out = []
+    for r in rows:
+        if not r.get("ok"):
+            print(fmt_row("roofline", r["arch"], r["shape"],
+                          r.get("mesh", "?"), "FAIL", r.get("error", "")))
+            continue
+        mf = model_flops(r["arch"], r["shape"])
+        per_chip = mf / r["n_chips"]
+        useful = per_chip / r["hlo_flops"] if r["hlo_flops"] else 0.0
+        t = r["roofline"]
+        out.append(dict(r, useful_ratio=useful, model_flops=mf))
+        print(fmt_row(
+            "roofline", r["arch"], r["shape"], r["mesh"],
+            f"{t['compute_s']:.4f}", f"{t['memory_s']:.4f}",
+            f"{t['collective_s']:.4f}", r["dominant"],
+            f"{mf/1e12:.1f}", f"{r['hlo_flops']/1e12:.3f}",
+            f"{useful:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark driver — one entry per paper table/figure + the roofline
+table from the dry-run artifacts. Prints CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run              # all
+    PYTHONPATH=src python -m benchmarks.run fig5 table5  # subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+BENCHES = [
+    ("fig5", "benchmarks.fig5_heterogeneous",
+     "per-iteration time, heterogeneous testbed"),
+    ("fig6", "benchmarks.fig6_homogeneous",
+     "homogeneous 2xV100 vs reported baselines"),
+    ("table4", "benchmarks.table4_strategies",
+     "strategy composition"),
+    ("table5", "benchmarks.table5_sfb",
+     "SFB on/off, 2x1080Ti batch 4"),
+    ("table6", "benchmarks.table6_dup_ops",
+     "top duplicated op types"),
+    ("table7", "benchmarks.table7_mcts",
+     "MCTS iterations: pure vs GNN-guided"),
+    ("table8", "benchmarks.table8_generalization",
+     "hold-out model generalization"),
+    ("fig7", "benchmarks.fig7_feedback",
+     "GNN loss with/without runtime feedback"),
+    ("fig8", "benchmarks.fig8_overhead",
+     "strategy generation overhead"),
+    ("roofline", "benchmarks.roofline",
+     "dry-run roofline terms per arch x shape x mesh"),
+]
+
+
+def main() -> None:
+    sel = set(sys.argv[1:])
+    print("bench,name,seconds,note")
+    for key, mod_name, desc in BENCHES:
+        if sel and key not in sel:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+            status = "ok"
+        except Exception as e:  # noqa: BLE001 — report and continue
+            status = f"FAIL {type(e).__name__}: {e}"
+        print(f"bench,{key},{time.time()-t0:.1f},{desc} [{status}]",
+              flush=True)
+
+
+if __name__ == '__main__':
+    main()

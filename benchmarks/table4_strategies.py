@@ -1,0 +1,44 @@
+"""Table 4: composition of the strategies TAG produces on the testbed —
+average replicas per GPU type and PS/AR gradient-sync shares.
+
+Paper claims: ResNet101 replicates onto all devices; most other models
+rarely use the P100s; PS/AR mixes vary per model; "duplicate" only at
+small batch."""
+from __future__ import annotations
+
+from benchmarks.common import MODELS, fmt_row, grouped, testbed
+from repro.core.mcts import MCTS
+from repro.core.tag import TAGResult, sfb_post_pass, evaluate_strategy
+
+
+def run(models=None, iters=60):
+    topo = testbed()
+    rows = []
+    for name in models or MODELS:
+        gg = grouped(name)
+        sr = MCTS(gg, topo, seed=0).search(iters)
+        res, plans = evaluate_strategy(gg, sr.best_strategy, topo, sfb=True)
+        tr = TAGResult(strategy=sr.best_strategy, sfb_plans=plans,
+                       search=sr, time=res.makespan,
+                       baseline_time=sr.baseline_time, result=res, gg=gg)
+        stats = tr.strategy_stats(topo)
+        rows.append({"model": name, **stats})
+    return rows
+
+
+def main():
+    rows = run()
+    print("table4,model,V100,1080Ti,P100,ps_frac,ar_frac,dup_frac")
+    for r in rows:
+        reps = r["avg_replicas_per_type"]
+        print(fmt_row("table4", r["model"],
+                      f"{reps.get('V100', 0):.1f}",
+                      f"{reps.get('1080Ti', 0):.1f}",
+                      f"{reps.get('P100', 0):.1f}",
+                      f"{r['ps_frac']*100:.0f}%", f"{r['ar_frac']*100:.0f}%",
+                      f"{r['dup_frac']*100:.0f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Table 5: per-iteration time with and without SFB, on two machines with
+one 1080Ti each, batch size 4 (paper §5.6).
+
+Paper claims: SFB speeds up DP substantially on models with low-rank
+gradient structure (InceptionV3 +98.7%, Transformer +163.5%), marginally
+on VGG19 (+0.3%); gains inside TAG are smaller because TAG already mixes
+PS/AR.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (
+    MODELS, dp_time, fmt_row, grouped, tag_search, two_1080ti)
+
+
+def run(models=None):
+    topo = two_1080ti()
+    rows = []
+    for name in models or MODELS:
+        gg = grouped(name, batch=4)
+        t_dp = dp_time(gg, topo)
+        t_dp_sfb = dp_time(gg, topo, sfb=True)
+        sr, t_tag_sfb = tag_search(gg, topo, iters=40, sfb=True)
+        _, t_tag = tag_search(gg, topo, iters=40, sfb=False)
+        t_tag = min(t_tag, t_dp)
+        t_tag_sfb = min(t_tag_sfb, t_dp_sfb, t_tag)
+        rows.append({
+            "model": name,
+            "dp": t_dp, "dp_sfb": t_dp_sfb,
+            "dp_speedup": t_dp / t_dp_sfb - 1,
+            "tag": t_tag, "tag_sfb": t_tag_sfb,
+            "tag_speedup": t_tag / t_tag_sfb - 1,
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("table5,model,dp_ms,dp_sfb_ms,dp_sfb_gain,"
+          "tag_ms,tag_sfb_ms,tag_sfb_gain")
+    for r in rows:
+        print(fmt_row("table5", r["model"],
+                      f"{r['dp']*1e3:.2f}", f"{r['dp_sfb']*1e3:.2f}",
+                      f"{r['dp_speedup']*100:.1f}%",
+                      f"{r['tag']*1e3:.2f}", f"{r['tag_sfb']*1e3:.2f}",
+                      f"{r['tag_speedup']*100:.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

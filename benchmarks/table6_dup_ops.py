@@ -1,0 +1,32 @@
+"""Table 6: top op types the SFB optimization chooses to duplicate across
+the six models (paper finds Reshape/MatMul/Transpose/Conv2DBackpropFilter
+— the jaxpr analogues are reshape/dot_general/transpose)."""
+from __future__ import annotations
+
+from collections import Counter
+
+from benchmarks.common import MODELS, grouped, two_1080ti, fmt_row
+from repro.core.tag import dp_baseline, sfb_post_pass
+
+
+def run(models=None):
+    topo = two_1080ti()
+    counts = Counter()
+    for name in models or MODELS:
+        gg = grouped(name, batch=4)
+        plans = sfb_post_pass(gg, dp_baseline(gg, topo), topo)
+        for p in plans.values():
+            counts.update(p.dup_op_types)
+    return counts
+
+
+def main():
+    counts = run()
+    print("table6,op_type,count")
+    for op, c in counts.most_common(8):
+        print(fmt_row("table6", op, c))
+    return counts
+
+
+if __name__ == "__main__":
+    main()

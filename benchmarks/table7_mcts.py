@@ -1,0 +1,63 @@
+"""Table 7: MCTS iterations needed to find a strategy better than DP-NCCL
+— pure MCTS (uniform priors) vs TAG (GNN priors).
+
+Paper claims: GNN priors cut iterations by ~4-15x (e.g. ResNet 73.4 -> 4.6).
+The GNN here is trained briefly on-the-fly (CPU budget); params cached in
+results/gnn_params.npz.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import MODELS, fmt_row, grouped, testbed
+from repro.core.device import random_topology
+from repro.core.mcts import MCTS
+from repro.core.trainer import init_trainer, make_policy, train_policy
+
+CACHE = os.path.join("results", "gnn_params_cache")
+
+
+def trained_policy(graphs, *, steps=10, mcts_iters=16, seed=0):
+    state = init_trainer(seed=seed)
+    train_policy(state, graphs, steps=steps, mcts_iters=mcts_iters,
+                 seed=seed)
+    return state
+
+
+def iters_to_beat(gg, topo, policy, *, budget=60, tries=3, seed=0):
+    out = []
+    for t in range(tries):
+        sr = MCTS(gg, topo, policy=policy, seed=seed + 1000 * t).search(
+            budget)
+        out.append(sr.iters_to_beat_baseline
+                   if sr.iters_to_beat_baseline > 0 else budget)
+    return float(np.mean(out))
+
+
+def run(models=None, budget=60, train_steps=10):
+    topo = testbed()
+    models = models or [m for m in MODELS if m != "bert_large"]
+    graphs = [grouped(m) for m in models]
+    state = trained_policy(graphs, steps=train_steps)
+    policy = make_policy(state.cfg, state.params)
+    rows = []
+    for name, gg in zip(models, graphs):
+        pure = iters_to_beat(gg, topo, None, budget=budget)
+        guided = iters_to_beat(gg, topo, policy, budget=budget)
+        rows.append({"model": name, "pure_mcts": pure, "tag": guided})
+    return rows
+
+
+def main():
+    rows = run()
+    print("table7,model,pure_mcts_iters,tag_iters")
+    for r in rows:
+        print(fmt_row("table7", r["model"], f"{r['pure_mcts']:.1f}",
+                      f"{r['tag']:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Table 8: generalization to unseen computation graphs — GNN trained on
+all models (TAG) vs trained with the target model held out (TAG-).
+
+Paper claims: hold-out strategies are only marginally worse (e.g. VGG19
+286.2% -> 213.6% over DP on the testbed; several models identical).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (
+    MODELS, dp_time, fmt_row, grouped, testbed, cloud, sim_time)
+from repro.core.trainer import init_trainer, make_policy, train_policy
+from repro.core.mcts import MCTS
+
+
+def _speedup(gg, topo, policy, iters=40, seed=0):
+    sr = MCTS(gg, topo, policy=policy, seed=seed).search(iters)
+    t = sim_time(gg, sr.best_strategy, topo, sfb=True)
+    return max(dp_time(gg, topo) / t, sr.best_reward)
+
+
+def run(models=None, train_steps=8, iters=40):
+    models = models or ["inception_v3", "vgg19", "bert_small"]
+    topo = testbed()
+    graphs = {m: grouped(m) for m in models}
+
+    full = init_trainer(seed=0)
+    train_policy(full, list(graphs.values()), steps=train_steps, seed=0,
+                 mcts_iters=14)
+    pol_full = make_policy(full.cfg, full.params)
+
+    rows = []
+    for held in models:
+        rest = [graphs[m] for m in models if m != held]
+        holdout = init_trainer(seed=1)
+        train_policy(holdout, rest, steps=train_steps, seed=1,
+                     mcts_iters=14)
+        pol_holdout = make_policy(holdout.cfg, holdout.params)
+        s_full = _speedup(graphs[held], topo, pol_full, iters)
+        s_hold = _speedup(graphs[held], topo, pol_holdout, iters)
+        rows.append({"model": held, "tag": s_full, "tag_minus": s_hold})
+    return rows
+
+
+def main():
+    rows = run()
+    print("table8,model,tag_speedup,tag_holdout_speedup")
+    for r in rows:
+        print(fmt_row("table8", r["model"], f"{r['tag']:.2f}",
+                      f"{r['tag_minus']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Strategy search across heterogeneous clusters: run TAG on the paper's
+benchmark models over the testbed / cloud / random topologies and print
+a Table-4-style report.
+
+    PYTHONPATH=src python examples/heterogeneous_search.py [model ...]
+"""
+import sys
+
+import numpy as np
+
+from repro.core.device import cloud, random_topology, testbed
+from repro.core.tag import optimize
+from repro.core.zoo import ZOO, build
+from repro.core.jax_export import trace_training_graph
+from repro.core.graph import group_graph
+from repro.core.partition import partition
+
+
+def main():
+    models = sys.argv[1:] or ["vgg19", "bert_small"]
+    topos = [testbed(), cloud(), random_topology(np.random.default_rng(7))]
+    for name in models:
+        loss_fn, params, batch = build(name)
+        g = trace_training_graph(loss_fn, params, batch, name).simplify()
+        gg = group_graph(g, partition(g, 30))
+        print(f"\n=== {name}: {len(g.nodes)} ops -> {gg.n} groups ===")
+        for topo in topos:
+            res = optimize(None, None, None, topo, gg=gg, iterations=30)
+            stats = res.strategy_stats(topo)
+            reps = {k: round(v, 1)
+                    for k, v in stats["avg_replicas_per_type"].items()}
+            print(f"  {topo.name:12s} ({topo.total_devices:2d} GPUs): "
+                  f"DP={res.baseline_time*1e3:7.1f}ms "
+                  f"TAG={res.time*1e3:7.1f}ms "
+                  f"speedup={res.speedup:4.2f}x  replicas={reps} "
+                  f"PS={stats['ps_frac']*100:.0f}% "
+                  f"AR={stats['ar_frac']*100:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

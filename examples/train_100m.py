@@ -1,0 +1,35 @@
+"""End-to-end driver: train a ~100M-parameter model for a few hundred
+steps on the synthetic pipeline (the paper's kind is training, so this is
+the e2e deliverable). On this CPU container the default is a scaled-down
+schedule; pass --full for the real thing on accelerators.
+
+    PYTHONPATH=src python examples/train_100m.py             # CPU-sized
+    PYTHONPATH=src python examples/train_100m.py --full      # ~100M params
+"""
+import sys
+
+from repro.configs import get_config
+from repro.launch.train import main as train_main
+
+
+def main():
+    full = "--full" in sys.argv
+    if full:
+        # mamba2-130m IS the ~100M-class assigned architecture — train it
+        # directly for a few hundred steps.
+        args = ["--arch", "mamba2-130m", "--steps", "300", "--batch", "8",
+                "--seq", "512", "--lr", "3e-4",
+                "--ckpt-dir", "results/ckpt_mamba2",
+                "--ckpt-every", "100", "--log-every", "10"]
+    else:
+        args = ["--arch", "mamba2-130m", "--smoke", "--steps", "60",
+                "--batch", "8", "--seq", "128", "--lr", "1e-3",
+                "--ckpt-dir", "results/ckpt_mamba2_smoke",
+                "--ckpt-every", "30", "--log-every", "10"]
+    losses = train_main(args)
+    assert losses[-1] < losses[0], "loss should decrease"
+    print(f"final loss {losses[-1]:.4f} (started {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Flat-npz checkpointing with pytree structure + dtype metadata.
+
+Tree leaves are flattened to ``path.to.leaf`` keys. bf16 arrays are stored
+as uint16 views (npz has no bf16) and restored exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+_BF16 = "bfloat16"
+
+
+def _flatten_tree(tree):
+    flat = {}
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(v, path + (k,))
+        else:
+            flat[".".join(path)] = node
+    rec(tree, ())
+    return flat
+
+
+def _unflatten(flat: dict):
+    tree: dict = {}
+    for key, val in flat.items():
+        parts = key.split(".")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def save_checkpoint(path: str, step: int, tree) -> str:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_tree(tree)
+    arrays, meta = {}, {}
+    for k, v in flat.items():
+        a = np.asarray(v)
+        if a.dtype == jnp.bfloat16:
+            arrays[k] = a.view(np.uint16)
+            meta[k] = _BF16
+        else:
+            arrays[k] = a
+            meta[k] = str(a.dtype)
+    fn = os.path.join(path, f"ckpt_{step:08d}.npz")
+    np.savez(fn, **arrays)
+    with open(fn + ".meta.json", "w") as f:
+        json.dump({"step": step, "dtypes": meta}, f)
+    return fn
+
+
+def latest_step(path: str):
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(path)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(path: str, step: int | None = None):
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    fn = os.path.join(path, f"ckpt_{step:08d}.npz")
+    with open(fn + ".meta.json") as f:
+        meta = json.load(f)
+    data = np.load(fn)
+    flat = {}
+    for k in data.files:
+        a = data[k]
+        if meta["dtypes"].get(k) == _BF16:
+            a = a.view(jnp.bfloat16)
+        flat[k] = jnp.asarray(a)
+    return step, _unflatten(flat)

@@ -1,0 +1,95 @@
+"""GNN input featurization (paper §4.2.1, Table 1).
+
+The unified heterogeneous graph has op-group nodes and device-group nodes;
+three link types (op-op tensors, dev-dev links, op-dev placements). The
+four feature parts: raw graph/device features, the strategy encoding,
+runtime feedback from the simulator, and search progress. Features are
+log-scaled where sizes/times appear so unseen model scales stay in range.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.device import Topology
+from repro.core.graph import GroupedGraph
+from repro.core.simulator import SimResult, device_group_stats
+from repro.core.strategy import Option, Strategy
+
+OP_F = 13      # per-op-node features (5-wide option one-hot)
+DEV_F = 8      # per-device-node features
+EDGE_F = 2     # per-edge features (both etypes)
+
+_AVG_FLOPS = 5e12  # normalizing device speed
+
+
+def _log1p(x, scale=1.0):
+    return math.log1p(max(x, 0.0) / scale)
+
+
+@dataclass
+class HetGraph:
+    op_x: np.ndarray       # (N, OP_F)
+    dev_x: np.ndarray      # (M, DEV_F)
+    oo_mask: np.ndarray    # (N, N) bool
+    oo_e: np.ndarray       # (N, N, EDGE_F)
+    dd_mask: np.ndarray    # (M, M)
+    dd_e: np.ndarray       # (M, M, EDGE_F)
+    od_e: np.ndarray       # (N, M, EDGE_F) — full bipartite, placement bit
+
+
+def featurize(gg: GroupedGraph, topo: Topology, strat: Strategy,
+              res: SimResult | None, next_gid: int | None) -> HetGraph:
+    N, M = gg.n, topo.m
+    op_x = np.zeros((N, OP_F), np.float32)
+    stats = device_group_stats(res, topo) if res is not None else None
+    for i, grp in enumerate(gg.groups):
+        a = strat.actions[i]
+        t_avg = grp.flops / _AVG_FLOPS
+        op_x[i, 0] = _log1p(t_avg, 1e-3)                   # computation time
+        op_x[i, 1] = _log1p(grp.param_bytes, 1e6)          # parameter size
+        if a is not None:
+            op_x[i, 2 + int(a.option)] = 1.0               # replication plan
+        if res is not None:
+            op_x[i, 7] = _log1p(
+                res.group_finish.get(i, 0.0) - res.group_start.get(i, 0.0),
+                1e-3)                                       # makespan
+            op_x[i, 8] = _log1p(
+                res.group_idle_before_xfer.get(i, 0.0), 1e-3)
+        op_x[i, 9] = 1.0 if a is not None else 0.0          # decided
+        op_x[i, 10] = 1.0 if i == next_gid else 0.0         # produced next
+        op_x[i, 11] = 1.0 if grp.has_grad else 0.0
+        op_x[i, 12] = _log1p(grp.bytes_out, 1e6)
+
+    dev_x = np.zeros((M, DEV_F), np.float32)
+    for j, dg in enumerate(topo.groups):
+        dev_x[j, 0] = dg.num_gpus / 8.0
+        dev_x[j, 1] = _log1p(dg.mem_bytes, 1e9)
+        dev_x[j, 2] = _log1p(dg.intra_bw, 1e9)
+        dev_x[j, 3] = dg.flops / _AVG_FLOPS
+        if stats is not None:
+            dev_x[j, 4] = stats[j]["mem_frac"]              # peak memory
+            dev_x[j, 5] = stats[j]["idle_frac"]             # idling %
+    oo_mask = np.zeros((N, N), bool)
+    oo_e = np.zeros((N, N, EDGE_F), np.float32)
+    for (gi, gj), b in gg.edges.items():
+        oo_mask[gi, gj] = oo_mask[gj, gi] = True
+        oo_e[gi, gj, 0] = oo_e[gj, gi, 0] = _log1p(b, 1e6)  # tensor size
+
+    dd_mask = np.ones((M, M), bool)
+    dd_e = np.zeros((M, M, EDGE_F), np.float32)
+    for i in range(M):
+        for j in range(M):
+            dd_e[i, j, 0] = _log1p(topo.bw(i, j), 1e9)      # inter-group bw
+            if res is not None:
+                dd_e[i, j, 1] = res.link_idle_frac(i, j)    # link idling %
+
+    od_e = np.zeros((N, M, EDGE_F), np.float32)
+    for i, a in enumerate(strat.actions):
+        if a is None:
+            continue
+        for j in a.placement:
+            od_e[i, j, 0] = 1.0                             # placement bit
+    return HetGraph(op_x, dev_x, oo_mask, oo_e, dd_mask, dd_e, od_e)

@@ -1,0 +1,170 @@
+"""Heterogeneous GNN (paper §4.2.1, Fig. 2) in pure JAX.
+
+Two node types (op groups, device groups), three link types (op-op,
+dev-dev, op-dev/dev-op). Each of the 4 layers does GAT-style multi-head
+attention aggregation per edge type:
+
+    h_u^{l+1} = AGG_{v in N(u)} gamma_etype * sigma(W_etype [h_v ; e_uv])
+
+with gamma = 1 for same-type edges and 0.1 for cross-type edges (paper's
+balance weights). A thin decoder scores a strategy slice (P_i, O_i) from
+[sum_j E_dev[j] P_ij ; E_op[i] ; onehot(O_i)] and a softmax over candidate
+slices yields the MCTS priors G(s, a).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import DEV_F, EDGE_F, OP_F, HetGraph
+from repro.core.strategy import Option
+
+GAMMA_SAME = 1.0
+GAMMA_CROSS = 0.1
+N_OPTIONS = len(Option)
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    hidden: int = 48
+    heads: int = 4
+    layers: int = 4
+    decoder_hidden: int = 64
+
+
+def _dense_init(key, fan_in, fan_out):
+    s = math.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * s
+
+
+def init_gnn(cfg: GNNConfig, key) -> dict:
+    keys = iter(jax.random.split(key, 200))
+    H = cfg.hidden
+    p = {
+        "enc_op": _dense_init(next(keys), OP_F, H),
+        "enc_dev": _dense_init(next(keys), DEV_F, H),
+    }
+    for layer in range(cfg.layers):
+        for et in ("oo", "dd", "od", "do"):
+            p[f"W_{layer}_{et}"] = _dense_init(next(keys), H + EDGE_F, H)
+            p[f"b_{layer}_{et}"] = jnp.zeros((H,), jnp.float32)
+            p[f"a_{layer}_{et}"] = jax.random.normal(
+                next(keys), (cfg.heads, 2 * (H // cfg.heads)),
+                jnp.float32) * 0.1
+        p[f"self_{layer}"] = _dense_init(next(keys), H, H)
+    D = cfg.decoder_hidden
+    p["dec1"] = _dense_init(next(keys), 2 * H + N_OPTIONS, D)
+    p["dec1b"] = jnp.zeros((D,), jnp.float32)
+    p["dec2"] = _dense_init(next(keys), D, 1)
+    return p
+
+
+def _gat_message(cfg: GNNConfig, W, b, a, h_dst, h_src, e, mask):
+    """One edge-type aggregation. h_dst: (U, H); h_src: (V, H);
+    e: (U, V, EDGE_F); mask: (U, V) -> (U, H)."""
+    U, V = e.shape[0], e.shape[1]
+    H = h_dst.shape[-1]
+    hd = H // cfg.heads
+    src_e = jnp.concatenate(
+        [jnp.broadcast_to(h_src[None, :, :], (U, V, H)), e], axis=-1)
+    m = jax.nn.leaky_relu(src_e @ W + b)                   # (U, V, H)
+    mh = m.reshape(U, V, cfg.heads, hd)
+    dh = h_dst.reshape(U, cfg.heads, hd)
+    att_in = jnp.concatenate(
+        [jnp.broadcast_to(dh[:, None], (U, V, cfg.heads, hd)), mh], axis=-1)
+    logits = jnp.einsum("uvkd,kd->uvk", jax.nn.leaky_relu(att_in), a)
+    logits = jnp.where(mask[..., None], logits, -1e30)
+    alpha = jax.nn.softmax(logits, axis=1)
+    alpha = jnp.where(mask[..., None], alpha, 0.0)
+    out = jnp.einsum("uvk,uvkd->ukd", alpha, mh).reshape(U, H)
+    return out
+
+
+def gnn_forward(cfg: GNNConfig, p: dict, g: HetGraph):
+    """Returns (E_op (N,H), E_dev (M,H))."""
+    h_op = jnp.asarray(g.op_x) @ p["enc_op"]
+    h_dev = jnp.asarray(g.dev_x) @ p["enc_dev"]
+    oo_mask = jnp.asarray(g.oo_mask)
+    dd_mask = jnp.asarray(g.dd_mask)
+    N, M = h_op.shape[0], h_dev.shape[0]
+    od_mask = jnp.ones((N, M), bool)
+    oo_e, dd_e = jnp.asarray(g.oo_e), jnp.asarray(g.dd_e)
+    od_e = jnp.asarray(g.od_e)
+    do_e = jnp.swapaxes(od_e, 0, 1)
+    for layer in range(cfg.layers):
+        def msg(et, hd_, hs_, e_, m_):
+            return _gat_message(cfg, p[f"W_{layer}_{et}"],
+                                p[f"b_{layer}_{et}"], p[f"a_{layer}_{et}"],
+                                hd_, hs_, e_, m_)
+        new_op = h_op @ p[f"self_{layer}"] \
+            + GAMMA_SAME * msg("oo", h_op, h_op, oo_e, oo_mask) \
+            + GAMMA_CROSS * msg("do", h_op, h_dev, od_e, od_mask)
+        new_dev = h_dev @ p[f"self_{layer}"] \
+            + GAMMA_SAME * msg("dd", h_dev, h_dev, dd_e, dd_mask) \
+            + GAMMA_CROSS * msg("od", h_dev, h_op, do_e,
+                                jnp.swapaxes(od_mask, 0, 1))
+        h_op = jax.nn.elu(new_op) + h_op
+        h_dev = jax.nn.elu(new_dev) + h_dev
+    return h_op, h_dev
+
+
+def actions_to_arrays(actions, m: int, bucket: int = 8):
+    """(P (A',M), O (A',4), mask (A',)) padded to a bucket size so jitted
+    calls hit a small number of compiled shapes."""
+    A = len(actions)
+    Ap = -(-A // bucket) * bucket
+    P = np.zeros((Ap, m), np.float32)
+    O = np.zeros((Ap, N_OPTIONS), np.float32)
+    mask = np.zeros((Ap,), np.float32)
+    for k, a in enumerate(actions):
+        for j in a.placement:
+            P[k, j] = 1.0
+        O[k, int(a.option)] = 1.0
+        mask[k] = 1.0
+    return P, O, mask
+
+
+def score_actions(cfg: GNNConfig, p: dict, e_op, e_dev, gid, P, O):
+    """Thin decoder: scores for (padded) strategy slices."""
+    dev_sum = P @ e_dev                                     # (A, H)
+    op_e = jnp.broadcast_to(e_op[gid][None], (P.shape[0], e_op.shape[1]))
+    x = jnp.concatenate([dev_sum, op_e, O], axis=-1)
+    h = jax.nn.relu(x @ p["dec1"] + p["dec1b"])
+    return (h @ p["dec2"])[:, 0]
+
+
+def _policy_core(cfg, p, arrays, gid, P, O, mask):
+    g = HetGraph(*arrays)
+    e_op, e_dev = gnn_forward(cfg, p, g)
+    logits = score_actions(cfg, p, e_op, e_dev, gid, P, O)
+    return jnp.where(mask > 0, logits, -1e30)
+
+
+_policy_jit = jax.jit(_policy_core, static_argnums=(0,))
+
+
+def _het_arrays(g: HetGraph):
+    return (g.op_x, g.dev_x, g.oo_mask, g.oo_e, g.dd_mask, g.dd_e, g.od_e)
+
+
+def policy_logits(cfg: GNNConfig, p: dict, g: HetGraph, gid: int, actions):
+    P, O, mask = actions_to_arrays(actions, g.dev_x.shape[0])
+    out = _policy_jit(cfg, p, _het_arrays(g), jnp.asarray(gid), P, O, mask)
+    return out[:len(actions)]
+
+
+def policy_probs(cfg: GNNConfig, p: dict, g: HetGraph, gid: int, actions):
+    return jax.nn.softmax(policy_logits(cfg, p, g, gid, actions))
+
+
+def record_loss_core(cfg, p, arrays, gid, P, O, mask, pi):
+    """Cross-entropy between GNN prior and (padded) MCTS visit dist."""
+    g = HetGraph(*arrays)
+    e_op, e_dev = gnn_forward(cfg, p, g)
+    logits = score_actions(cfg, p, e_op, e_dev, gid, P, O)
+    logits = jnp.where(mask > 0, logits, -1e30)
+    return -jnp.sum(pi * jax.nn.log_softmax(logits))

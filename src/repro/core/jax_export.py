@@ -1,0 +1,234 @@
+"""Graph analyzer front-end: trace a JAX training function into TAG's
+CompGraph IR (paper §4.1.1).
+
+The paper consumes TF graphs; here the "execution engine" is JAX/XLA, so
+the analyzer walks jaxprs: every equation becomes an op node with a FLOP
+estimate and output bytes; higher-order primitives (pjit, scan, remat,
+custom_vjp) are inlined (scan bodies once, costs multiplied by length).
+
+Splittability (paper's three categories) is derived by propagating the
+batch dimension from the data inputs:
+  * output keeps the batch dim            -> Split.CONCAT
+  * batch dim contracted away (dW = x^T dy, reduce over batch) -> Split.SUM
+  * no batch relationship                 -> Split.OTHER
+
+Gradient producers and synthetic ApplyGradient nodes are attached by
+tracing ``value_and_grad`` so the SFB solver can find its subgraphs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.extend.core import Literal
+
+from repro.core.graph import CompGraph, OpNode, Split, TensorEdge
+
+_ELEMWISE = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "exp", "log", "tanh",
+    "logistic", "rsqrt", "sqrt", "neg", "sign", "abs", "floor", "ceil",
+    "select_n", "clamp", "and", "or", "not", "xor", "rem", "integer_pow",
+    "erf", "sin", "cos", "squeeze", "expand_dims", "convert_element_type",
+    "stop_gradient", "copy", "real", "imag", "add_any", "cumsum",
+    "cumlogsumexp", "cummax", "is_finite", "square",
+}
+
+_REDUCERS = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+             "reduce_and", "reduce_or", "argmax", "argmin",
+             "reduce_precision", "logsumexp"}
+
+
+def _size_bytes(aval) -> float:
+    try:
+        return float(math.prod(aval.shape) * np.dtype(aval.dtype).itemsize)
+    except Exception:  # tokens/abstract
+        return 0.0
+
+
+def _elems(aval) -> float:
+    try:
+        return float(math.prod(aval.shape))
+    except Exception:
+        return 0.0
+
+
+def _eqn_flops(eqn) -> float:
+    prim = eqn.primitive.name
+    out = eqn.outvars[0].aval if eqn.outvars else None
+    if prim == "dot_general":
+        dims = eqn.params["dimension_numbers"]
+        (lc, _), _ = dims
+        lhs = eqn.invars[0].aval
+        k = math.prod(lhs.shape[d] for d in lc) if lc else 1
+        return 2.0 * _elems(out) * k
+    if prim == "conv_general_dilated":
+        rhs = eqn.invars[1].aval
+        groups = eqn.params.get("feature_group_count", 1)
+        kernel = math.prod(rhs.shape[:-1]) / max(groups, 1)
+        return 2.0 * _elems(out) * kernel
+    if prim in _REDUCERS or prim.startswith("reduce"):
+        return _elems(eqn.invars[0].aval)
+    if prim in _ELEMWISE:
+        return _elems(out)
+    if prim in ("softmax", "logsumexp"):
+        return 5.0 * _elems(eqn.invars[0].aval)
+    if prim in ("sort", "top_k"):
+        n = _elems(eqn.invars[0].aval)
+        return n * max(1.0, math.log2(max(n, 2)))
+    return 0.0
+
+
+class _Exporter:
+    def __init__(self, batch_size: int):
+        self.g = CompGraph()
+        self.next_id = 0
+        self.var_src: dict = {}      # jaxpr var -> op_id
+        self.var_batch: dict = {}    # jaxpr var -> bool (carries batch dim)
+        self.batch_size = batch_size
+
+    def new_node(self, **kw) -> OpNode:
+        node = OpNode(op_id=self.next_id, **kw)
+        self.next_id += 1
+        self.g.add_node(node)
+        return node
+
+    def _has_batch(self, aval) -> bool:
+        shape = getattr(aval, "shape", ())
+        return bool(shape) and shape[0] == self.batch_size
+
+    def walk(self, jaxpr, scale: float = 1.0, prefix: str = ""):
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            sub = None
+            mult = 1.0
+            if prim == "pjit":
+                sub = eqn.params["jaxpr"].jaxpr
+            elif prim in ("custom_vjp_call", "custom_jvp_call",
+                          "custom_vjp_call_jaxpr"):
+                cj = eqn.params.get("call_jaxpr") or eqn.params.get("fun_jaxpr")
+                sub = cj.jaxpr if hasattr(cj, "jaxpr") else cj
+            elif prim == "remat" or prim == "checkpoint":
+                sub = eqn.params["jaxpr"]
+            elif prim == "scan":
+                sub = eqn.params["jaxpr"].jaxpr
+                mult = float(eqn.params.get("length", 1))
+            elif prim == "while":
+                sub = eqn.params["body_jaxpr"].jaxpr
+                mult = 1.0
+            elif prim == "cond":
+                sub = eqn.params["branches"][0].jaxpr
+
+            if sub is not None:
+                # connect: map outer invars into sub invars
+                for iv, sv in zip(eqn.invars, sub.invars):
+                    if hasattr(iv, "aval") and not isinstance(iv, Literal):
+                        self.var_src[sv] = self.var_src.get(iv)
+                        self.var_batch[sv] = self.var_batch.get(iv, False)
+                    else:
+                        self.var_batch[sv] = False
+                self.walk(sub, scale * mult, prefix)
+                for ov, sv in zip(eqn.outvars, sub.outvars):
+                    self.var_src[ov] = self.var_src.get(sv)
+                    self.var_batch[ov] = self.var_batch.get(sv, False)
+                continue
+
+            in_batch = [
+                self.var_batch.get(v, False) for v in eqn.invars
+                if not isinstance(v, Literal)]
+            out_aval = eqn.outvars[0].aval if eqn.outvars else None
+            out_has_batch = self._has_batch(out_aval) if out_aval is not None \
+                else False
+            any_in_batch = any(in_batch)
+            if any_in_batch and out_has_batch:
+                split = Split.CONCAT
+            elif any_in_batch and prim in ("dot_general",
+                                           "conv_general_dilated") \
+                    or (any_in_batch and prim in _REDUCERS):
+                split = Split.SUM
+            elif any_in_batch:
+                split = Split.SUM if prim == "transpose" else Split.OTHER
+            else:
+                split = Split.OTHER
+
+            node = self.new_node(
+                name=f"{prefix}{prim}_{self.next_id}",
+                op_type=prim,
+                flops=_eqn_flops(eqn) * scale,
+                bytes_out=sum(_size_bytes(v.aval) for v in eqn.outvars),
+                split=split,
+                batch_dim=out_has_batch,
+            )
+            for v in eqn.invars:
+                if isinstance(v, Literal):
+                    continue
+                src = self.var_src.get(v)
+                if src is not None:
+                    self.g.add_edge(src, node.op_id, _size_bytes(v.aval))
+            for v in eqn.outvars:
+                self.var_src[v] = node.op_id
+                self.var_batch[v] = self._has_batch(v.aval)
+
+
+def trace_training_graph(loss_fn, params, batch, name: str = "") -> CompGraph:
+    """Trace ``value_and_grad(loss_fn)(params, batch)`` into a CompGraph
+    with parameter sources, gradient producers, and ApplyGradient sinks."""
+    vg = jax.value_and_grad(loss_fn)
+    closed = jax.make_jaxpr(vg)(params, batch)
+    jaxpr = closed.jaxpr
+
+    plist, ptree = jax.tree.flatten(params)
+    blist, _ = jax.tree.flatten(batch)
+    batch_size = int(blist[0].shape[0]) if blist and len(blist[0].shape) else 0
+
+    def leaf_bytes(x) -> float:
+        return float(math.prod(x.shape) * np.dtype(x.dtype).itemsize)
+
+    ex = _Exporter(batch_size)
+    n_params = len(plist)
+    param_nodes = []
+    for i, v in enumerate(jaxpr.invars):
+        is_param = i < n_params
+        arr = plist[i] if is_param else blist[i - n_params]
+        node = ex.new_node(
+            name=f"param_{i}" if is_param else f"input_{i - n_params}",
+            op_type="parameter",
+            bytes_out=leaf_bytes(arr),
+            param_bytes=leaf_bytes(arr) if is_param else 0.0,
+            split=Split.OTHER if is_param else Split.CONCAT,
+            is_param=is_param,
+            batch_dim=not is_param and ex._has_batch(arr),
+        )
+        if is_param:
+            param_nodes.append(node)
+        ex.var_src[v] = node.op_id
+        ex.var_batch[v] = node.batch_dim
+
+    ex.walk(jaxpr)
+
+    # outputs: (loss, *grads) in tree order
+    outvars = jaxpr.outvars
+    grad_vars = outvars[1:1 + n_params]
+    for i, gv in enumerate(grad_vars):
+        src = ex.var_src.get(gv)
+        if src is None:
+            continue
+        gnode = ex.g.nodes[src]
+        gnode.is_grad_producer = True
+        pb = leaf_bytes(plist[i])
+        gnode.grad_bytes += pb
+        apply_node = ex.new_node(
+            name=f"apply_grad_{i}",
+            op_type="apply_gradient",
+            flops=3.0 * math.prod(plist[i].shape),   # adam-style update
+            bytes_out=pb,
+            split=Split.OTHER,
+            is_apply_grad=True,
+        )
+        gnode.grad_of = apply_node.op_id
+        ex.g.add_edge(src, apply_node.op_id, pb)
+        ex.g.add_edge(param_nodes[i].op_id, apply_node.op_id, pb)
+
+    ex.g.name = name
+    ex.g.build_adj()
+    return ex.g

@@ -1,0 +1,177 @@
+"""GNN-guided Monte-Carlo tree search (paper §4.2.2).
+
+Vertices are partial strategies; level k decides the deployment of the
+k-th op group in descending computation-time order. Edge statistics
+(visit count N, running-average reward Q) drive PUCT selection:
+
+    U(s,a) = Q(s,a) + c * G(s,a) * sqrt(sum_a' N(s,a')) / (1 + N(s,a))
+
+Rewards are simulated speed-ups over the DP-AllReduce baseline (OOM = -1,
+paper's interactive OOM-rejection). Priors G come from the heterogeneous
+GNN fed with the partial strategy + its simulated runtime feedback; a
+uniform prior gives the "pure MCTS" ablation (Table 7).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.compiler import compile_strategy
+from repro.core.device import Topology
+from repro.core.features import featurize
+from repro.core.graph import GroupedGraph
+from repro.core.simulator import simulate
+from repro.core.strategy import (
+    Strategy, candidate_actions, data_parallel_all)
+
+
+@dataclass
+class Vertex:
+    strategy: Strategy
+    depth: int                       # number of decided groups
+    actions: list = None             # candidates for the next group
+    prior: np.ndarray = None
+    N: np.ndarray = None
+    Q: np.ndarray = None
+    children: dict = field(default_factory=dict)
+    reward: float = 0.0
+    feedback: object = None          # SimResult of the filled strategy
+
+
+@dataclass
+class SearchResult:
+    best_strategy: Strategy
+    best_reward: float
+    best_time: float
+    baseline_time: float
+    iters_to_beat_baseline: int      # -1 if never
+    rewards: list
+    visit_records: list              # (featurized state, gid, actions, pi)
+
+
+class MCTS:
+    def __init__(self, gg: GroupedGraph, topo: Topology, *, policy=None,
+                 c_puct: float = 1.5, seed: int = 0,
+                 record_threshold: int = 8):
+        self.gg = gg
+        self.topo = topo
+        self.policy = policy          # callable(hetgraph, gid, actions)->probs
+        self.c = c_puct
+        self.rng = np.random.default_rng(seed)
+        self.order = gg.sorted_by_cost()
+        self.record_threshold = record_threshold
+
+        base = Strategy([data_parallel_all(topo)] * gg.n)
+        res = simulate(compile_strategy(gg, base, topo), self.topo)
+        self.baseline_time = res.makespan
+        self.default_action = data_parallel_all(topo)
+
+    # ---------------------------------------------------------------- eval
+    def _evaluate(self, strat: Strategy):
+        filled = strat.fill_undecided(self._fill_action(strat))
+        tg = compile_strategy(self.gg, filled, self.topo)
+        res = simulate(tg, self.topo)
+        if not res.feasible:
+            return -1.0, res
+        return self.baseline_time / res.makespan, res
+
+    def _fill_action(self, strat: Strategy):
+        """Paper footnote 2: undecided groups copy the strategy of the most
+        computation-expensive decided group."""
+        for gid in self.order:
+            if strat.actions[gid] is not None:
+                return strat.actions[gid]
+        return self.default_action
+
+    def _priors(self, vertex: Vertex):
+        gid = self.order[vertex.depth]
+        actions = candidate_actions(
+            self.topo, has_grad=self.gg.groups[gid].has_grad)
+        if self.policy is None:
+            return actions, np.full(len(actions), 1.0 / len(actions))
+        het = featurize(self.gg, self.topo, vertex.strategy,
+                        vertex.feedback, gid)
+        probs = np.asarray(self.policy(het, gid, actions), np.float64)
+        probs = probs / max(probs.sum(), 1e-9)
+        return actions, probs
+
+    # -------------------------------------------------------------- search
+    def search(self, iterations: int = 100) -> SearchResult:
+        root = Vertex(Strategy.empty(self.gg.n), 0)
+        root.reward, root.feedback = self._evaluate(root.strategy)
+        best = {"r": root.reward, "s": root.strategy, "iters": -1}
+        rewards = []
+        records = []
+
+        for it in range(iterations):
+            # selection
+            path = []
+            v = root
+            while True:
+                if v.depth >= self.gg.n:
+                    break
+                if v.actions is None:  # unexpanded leaf
+                    break
+                total_n = v.N.sum()
+                u = v.Q + self.c * v.prior * math.sqrt(total_n + 1e-9) \
+                    / (1.0 + v.N)
+                a_idx = int(np.argmax(u))
+                path.append((v, a_idx))
+                if a_idx not in v.children:
+                    gid = self.order[v.depth]
+                    child = Vertex(
+                        v.strategy.with_action(gid, v.actions[a_idx]),
+                        v.depth + 1)
+                    v.children[a_idx] = child
+                    v = child
+                    break
+                v = v.children[a_idx]
+
+            # expansion + evaluation
+            r, res = self._evaluate(v.strategy)
+            v.reward, v.feedback = r, res
+            if v.depth < self.gg.n and v.actions is None:
+                v.actions, v.prior = self._priors(v)
+                v.N = np.zeros(len(v.actions))
+                v.Q = np.zeros(len(v.actions))
+
+            # back-propagation
+            for (pv, ai) in path:
+                pv.N[ai] += 1
+                pv.Q[ai] += (r - pv.Q[ai]) / pv.N[ai]
+
+            rewards.append(r)
+            if r > best["r"]:
+                best = {"r": r, "s": v.strategy,
+                        "iters": best["iters"]}
+            if best["iters"] < 0 and r > 1.0:
+                best["iters"] = it + 1
+
+        # collect training records from well-visited vertices
+        def visit(v):
+            if v.actions is not None and v.N is not None \
+                    and v.N.sum() >= self.record_threshold:
+                pi = np.log(np.maximum(v.N, 1e-9))
+                pi = np.exp(pi - pi.max())
+                pi = pi / pi.sum()
+                gid = self.order[v.depth]
+                het = featurize(self.gg, self.topo, v.strategy,
+                                v.feedback, gid)
+                records.append((het, gid, v.actions, pi))
+            for ch in v.children.values():
+                visit(ch)
+        visit(root)
+
+        filled = best["s"].fill_undecided(self._fill_action(best["s"]))
+        r_best, res_best = self._evaluate(best["s"])
+        return SearchResult(
+            best_strategy=filled,
+            best_reward=best["r"],
+            best_time=self.baseline_time / max(best["r"], 1e-9)
+            if best["r"] > 0 else float("inf"),
+            baseline_time=self.baseline_time,
+            iters_to_beat_baseline=best["iters"],
+            rewards=rewards,
+            visit_records=records)

@@ -1,0 +1,89 @@
+"""Strategy -> JAX execution bridge (hardware adaptation layer).
+
+TAG strategies speak op-group placement on heterogeneous device groups; the
+real execution engine here is XLA SPMD on a homogeneous TPU mesh. This
+module lowers a searched Strategy into:
+
+  * an ``AxisRules`` set (logical-axis -> mesh-axis mapping) consumed by the
+    models' ``logical_shard`` constraints,
+  * per-block gradient-sync modes ("allreduce" | "ps" | "sfb") consumed by
+    ``parallel/sfb_dense`` style layers and the optimizer-state sharding
+    choice (PS => ZeRO-style sharded moments).
+
+Mapping rules (documented in DESIGN.md §3):
+  * dominant option MP            -> tensor parallelism over "model"
+  * AR / PS replication           -> data parallelism over "pod"+"data";
+                                     PS additionally shards optimizer
+                                     moments over "data" (ZeRO-1)
+  * DUP (SFB)                     -> grad_sync "sfb" for the dense blocks
+                                     whose gradients the ILP duplicated
+  * partial placement (subset of
+    device groups)                -> smaller data-parallel degree: batch
+                                     maps to "data" only (not "pod")
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass
+
+from repro.core.strategy import Option, Strategy
+from repro.parallel.sharding import AxisRules
+
+
+@dataclass
+class ExecutionPlan:
+    rules: AxisRules
+    grad_sync: dict              # block/param prefix -> sync mode
+    zero1: bool                  # shard optimizer moments over data axis
+    summary: dict
+
+
+def lower_strategy(strat: Strategy, gg, topo, mesh) -> ExecutionPlan:
+    opts = Counter(a.option for a in strat.actions if a is not None)
+    n = max(sum(opts.values()), 1)
+    placements = [a.placement for a in strat.actions if a is not None]
+    full_m = topo.m
+    partial = sum(1 for p in placements if len(p) < full_m) / max(
+        len(placements), 1)
+
+    multi = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if multi else ("data",)
+    if partial > 0.5 and multi:
+        batch_axes = ("data",)      # partial replication: keep DP inside pod
+
+    rules = {
+        "batch": batch_axes,
+        "cache_seq": ("data",),
+        "embed": None, "expert_embed": None, "layers": None, "seq": None,
+        "q_heads": None, "kv_heads": None, "mlp": None, "experts": None,
+        "vocab": None, "ssm_heads": None, "ssm_inner": None,
+    }
+    mp_frac = (opts.get(Option.MP, 0) + opts.get(Option.PIPE, 0)) / n
+    if mp_frac > 0.1 or full_m == 1:
+        for k in ("q_heads", "kv_heads", "mlp", "experts", "vocab",
+                  "ssm_heads", "ssm_inner"):
+            rules[k] = "model"
+
+    grad_sync = {}
+    zero1 = False
+    for gid, a in enumerate(strat.actions):
+        if a is None:
+            continue
+        if a.option == Option.PS:
+            grad_sync[f"group{gid}"] = "ps"
+            zero1 = True
+        elif a.option == Option.DUP:
+            grad_sync[f"group{gid}"] = "sfb"
+        else:
+            grad_sync[f"group{gid}"] = "allreduce"
+
+    ar = AxisRules(mesh=mesh, rules=rules, grad_sync=grad_sync)
+    return ExecutionPlan(
+        rules=ar, grad_sync=grad_sync, zero1=zero1,
+        summary={
+            "options": {o.name: c for o, c in opts.items()},
+            "partial_placement_frac": partial,
+            "mp_frac": mp_frac,
+            "pipe_frac": opts.get(Option.PIPE, 0) / n,
+            "batch_axes": batch_axes,
+        })

@@ -1,0 +1,112 @@
+"""Profiler (paper §4.1.2).
+
+Per-op compute times per device type follow the paper's finding that time
+is (piecewise) linear in batch size: we model t(op, dev, frac) =
+overhead + flops*frac / dev_throughput, and provide the measure-then-
+regress pipeline (LinearBatchModel / SegmentedLinear) used to fit real
+measurements — exercised on CPU in tests to validate the linearity
+assumption, and used to fit GRPC/AllReduce-style comm curves.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+OP_OVERHEAD = 5e-6     # per-op launch overhead (s)
+
+
+@dataclass
+class LinearBatchModel:
+    """t(batch) = a + b * batch, fit on profiled batch sizes (paper: <=60)."""
+    a: float
+    b: float
+
+    @classmethod
+    def fit(cls, batches, times) -> "LinearBatchModel":
+        x = np.asarray(batches, float)
+        y = np.asarray(times, float)
+        b, a = np.polyfit(x, y, 1)
+        return cls(a=float(max(a, 0.0)), b=float(max(b, 0.0)))
+
+    def __call__(self, batch: float) -> float:
+        return self.a + self.b * batch
+
+
+@dataclass
+class SegmentedLinear:
+    """Piecewise-linear size->time model (paper: GRPC/NCCL regressions fit
+    on 1KB..1GB doubling sizes)."""
+    knots: np.ndarray      # sizes (sorted)
+    times: np.ndarray
+
+    @classmethod
+    def fit(cls, sizes, times) -> "SegmentedLinear":
+        order = np.argsort(sizes)
+        return cls(np.asarray(sizes, float)[order],
+                   np.asarray(times, float)[order])
+
+    def __call__(self, size: float) -> float:
+        k, t = self.knots, self.times
+        if size <= k[0]:
+            return float(t[0] * size / k[0])
+        if size >= k[-1]:
+            return float(t[-1] * size / k[-1])
+        i = int(np.searchsorted(k, size)) - 1
+        f = (size - k[i]) / (k[i + 1] - k[i])
+        return float(t[i] + f * (t[i + 1] - t[i]))
+
+
+def compute_time(flops: float, dev_flops: float, frac: float = 1.0) -> float:
+    return OP_OVERHEAD + flops * frac / dev_flops
+
+
+def transfer_time(nbytes: float, bw: float, latency: float) -> float:
+    if nbytes <= 0:
+        return 0.0
+    return latency + nbytes / bw
+
+
+def allreduce_time(nbytes: float, n_dev: int, bw: float,
+                   latency: float) -> float:
+    """Ring AllReduce: 2(D-1)/D * bytes / bottleneck_bw."""
+    if n_dev <= 1 or nbytes <= 0:
+        return 0.0
+    return 2 * (n_dev - 1) / n_dev * nbytes / bw + 2 * n_dev * latency
+
+
+def ps_round_time(nbytes: float, n_dev: int, bw: float,
+                  latency: float) -> float:
+    """Sharded PS (round-robin owners) push+pull for one worker's share."""
+    if n_dev <= 1 or nbytes <= 0:
+        return 0.0
+    return 2 * (n_dev - 1) / n_dev * nbytes / bw + 2 * latency
+
+
+# --------------------------------------------------------- measurement
+
+def measure_op(fn, *args, repeats: int = 5) -> float:
+    """Median wall time of a jitted callable (CPU profiling mode)."""
+    import jax
+    fn(*args)  # warmup/compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def profile_matmul_batches(batches, dim: int = 256) -> LinearBatchModel:
+    """Measure matmul time vs batch size on the host device and fit the
+    linear model (validates the paper's linearity assumption in tests)."""
+    import jax
+    import jax.numpy as jnp
+    w = jnp.ones((dim, dim), jnp.float32)
+    f = jax.jit(lambda x: x @ w)
+    times = []
+    for b in batches:
+        x = jnp.ones((int(b), dim), jnp.float32)
+        times.append(measure_op(f, x))
+    return LinearBatchModel.fit(batches, times)

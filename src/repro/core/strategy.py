@@ -1,0 +1,136 @@
+"""Deployment strategies (paper §4.2).
+
+A strategy assigns every op group a placement row P_i over device groups
+and one of the four replication options O_i:
+  AR  — replicate with AllReduce gradient sync
+  PS  — replicate with parameter-server sync (round-robin shard owners)
+  DUP — duplicate: inputs broadcast, identical compute on every device
+        (this is how SFB manifests: broadcast sufficient factors,
+        recompute gradients locally — no sync op)
+  MP  — model parallelism: ops split across the devices of the group
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+
+from repro.core.device import Topology
+
+
+class Option(enum.IntEnum):
+    AR = 0
+    PS = 1
+    DUP = 2
+    MP = 3
+    PIPE = 4   # beyond-paper: the paper's stated future work (§6) —
+               # pipeline the group's stages across devices w/ microbatches
+
+
+@dataclass(frozen=True)
+class Action:
+    """Deployment of one op group: device groups + replication option."""
+    placement: tuple          # sorted tuple of device-group ids
+    option: Option
+
+    def __repr__(self):
+        return f"<{self.option.name}@{','.join(map(str, self.placement))}>"
+
+
+@dataclass
+class Strategy:
+    actions: list             # index = group id; None = undecided
+
+    @classmethod
+    def empty(cls, n_groups: int) -> "Strategy":
+        return cls(actions=[None] * n_groups)
+
+    def with_action(self, gid: int, action: Action) -> "Strategy":
+        acts = list(self.actions)
+        acts[gid] = action
+        return Strategy(acts)
+
+    @property
+    def n_decided(self):
+        return sum(a is not None for a in self.actions)
+
+    def complete(self):
+        return all(a is not None for a in self.actions)
+
+    def fill_undecided(self, default: Action) -> "Strategy":
+        """Paper footnote 2: undecided groups take the strategy of the most
+        expensive decided group (the default here)."""
+        return Strategy([a if a is not None else default
+                         for a in self.actions])
+
+
+def data_parallel_all(topo: Topology, option: Option = Option.AR) -> Action:
+    """The DP baseline action: replicate on every device group."""
+    return Action(tuple(range(topo.m)), option)
+
+
+def candidate_actions(topo: Topology, *, has_grad: bool,
+                      max_actions: int = 96) -> list:
+    """Enumerate the candidate deployments for one op group.
+
+    The raw space (2^M - 1 placements x 4 options) is intractable for MCTS
+    branching; following the paper's device-group abstraction we enumerate:
+    each single device group, each same-GPU-type set, the fastest-k
+    prefixes, and all groups.
+    """
+    m = topo.m
+    placements: list = []
+    if m > 1:
+        placements.append(tuple(range(m)))   # DP-all first (never truncated)
+    for g in range(m):
+        placements.append((g,))
+    by_type: dict = {}
+    for g, dg in enumerate(topo.groups):
+        by_type.setdefault(dg.gpu_type, []).append(g)
+    for t, gs in by_type.items():
+        if len(gs) > 1:
+            placements.append(tuple(sorted(gs)))
+    order = sorted(range(m), key=lambda g: -(topo.groups[g].flops
+                                             * topo.groups[g].num_gpus))
+    for k in range(2, m):
+        placements.append(tuple(sorted(order[:k])))
+    if m > 1:
+        placements.append(tuple(range(m)))
+    # dedupe, preserve order
+    seen, uniq = set(), []
+    for p in placements:
+        if p not in seen:
+            seen.add(p)
+            uniq.append(p)
+
+    actions = []
+    for p in uniq:
+        n_dev = sum(topo.groups[g].num_gpus for g in p)
+        opts = [Option.AR, Option.PS] if (has_grad and n_dev > 1) \
+            else [Option.AR]
+        if has_grad and n_dev > 1:
+            opts.append(Option.DUP)
+        if n_dev > 1:
+            opts.append(Option.MP)
+            opts.append(Option.PIPE)
+        for o in opts:
+            actions.append(Action(p, o))
+    return actions[:max_actions]
+
+
+def devices_of(topo: Topology, placement) -> list:
+    """Flat device ids for a placement (group-major)."""
+    out = []
+    for g in placement:
+        base = sum(topo.groups[k].num_gpus for k in range(g))
+        out.extend(range(base, base + topo.groups[g].num_gpus))
+    return out
+
+
+def device_group_of(topo: Topology, dev: int) -> int:
+    acc = 0
+    for g, dg in enumerate(topo.groups):
+        acc += dg.num_gpus
+        if dev < acc:
+            return g
+    raise ValueError(dev)

@@ -1,0 +1,133 @@
+"""TAG public API (paper Fig. 1 workflow).
+
+    result = tag.optimize(loss_fn, params, batch, topology)
+
+runs: graph analyzer (trace + simplify) -> METIS-style grouping ->
+GNN-guided MCTS over placements/replication options -> SFB post-pass ->
+final simulated deployment. ``result.strategy`` is the deployment plan;
+``result.sfb_plans`` the per-group SFB duplications; ``result.time`` the
+simulated per-iteration time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import sfb as sfb_mod
+from repro.core.compiler import compile_strategy
+from repro.core.device import Topology
+from repro.core.graph import CompGraph, GroupedGraph, group_graph
+from repro.core.jax_export import trace_training_graph
+from repro.core.mcts import MCTS, SearchResult
+from repro.core.partition import partition
+from repro.core.simulator import SimResult, simulate
+from repro.core.strategy import Option, Strategy, data_parallel_all, devices_of
+
+
+@dataclass
+class TAGResult:
+    strategy: Strategy
+    sfb_plans: dict
+    search: SearchResult
+    time: float                   # simulated per-iteration seconds
+    baseline_time: float          # DP-AllReduce baseline
+    result: SimResult
+    gg: GroupedGraph
+
+    @property
+    def speedup(self):
+        return self.baseline_time / self.time if self.time > 0 else 0.0
+
+    def strategy_stats(self, topo: Topology) -> dict:
+        """Table-4-style summary: avg replicas per GPU type; PS/AR shares."""
+        per_type: dict = {}
+        counts: dict = {}
+        ps = ar = dup = 0.0
+        total_grad = 0.0
+        for gid, a in enumerate(self.strategy.actions):
+            grp = self.gg.groups[gid]
+            for g in a.placement:
+                t = topo.groups[g].gpu_type
+                per_type[t] = per_type.get(t, 0.0) + topo.groups[g].num_gpus
+            counts["n"] = counts.get("n", 0) + 1
+            if grp.has_grad and grp.grad_bytes > 0:
+                total_grad += grp.grad_bytes
+                if a.option == Option.AR:
+                    ar += grp.grad_bytes
+                elif a.option == Option.PS:
+                    ps += grp.grad_bytes
+                elif a.option == Option.DUP:
+                    dup += grp.grad_bytes
+        n = max(counts.get("n", 1), 1)
+        return {
+            "avg_replicas_per_type": {t: v / n for t, v in per_type.items()},
+            "ps_frac": ps / total_grad if total_grad else 0.0,
+            "ar_frac": ar / total_grad if total_grad else 0.0,
+            "dup_frac": dup / total_grad if total_grad else 0.0,
+        }
+
+
+def build_grouped(loss_fn, params, batch, name: str = "",
+                  n_groups: int = 60) -> GroupedGraph:
+    g = trace_training_graph(loss_fn, params, batch, name=name).simplify()
+    return group_graph(g, partition(g, n_groups))
+
+
+_SFB_CACHE: dict = {}
+
+
+def sfb_post_pass(gg: GroupedGraph, strat: Strategy, topo: Topology) -> dict:
+    """Paper §4.2.3: for every replicated group MCTS decided (AR/PS), solve
+    the SFB ILP per gradient and collect beneficial duplications. Results
+    are cached per (graph, group, placement) — the ILP depends only on the
+    replica count and bottleneck bandwidth."""
+    plans = {}
+    for gid, a in enumerate(strat.actions):
+        grp = gg.groups[gid]
+        if a.option not in (Option.AR, Option.PS) or not grp.has_grad:
+            continue
+        devs = devices_of(topo, a.placement)
+        if len(devs) <= 1:
+            continue
+        tau = topo.bottleneck_bw(a.placement)
+        dev_flops = min(topo.groups[g].flops for g in a.placement)
+        key = (id(gg), gid, len(devs), round(tau / 1e6),
+               round(dev_flops / 1e9))
+        if key not in _SFB_CACHE:
+            _SFB_CACHE[key] = sfb_mod.optimize_group(
+                gg.base, grp.op_ids, len(devs), tau, dev_flops)
+        plan = _SFB_CACHE[key]
+        if plan.saved_sync_bytes > 0 or plan.extra_flops > 0:
+            plans[gid] = plan
+    return plans
+
+
+def optimize(loss_fn, params, batch, topo: Topology, *, name: str = "",
+             policy=None, iterations: int = 100, n_groups: int = 60,
+             enable_sfb: bool = True, seed: int = 0,
+             gg: GroupedGraph | None = None) -> TAGResult:
+    if gg is None:
+        gg = build_grouped(loss_fn, params, batch, name, n_groups)
+    mcts = MCTS(gg, topo, policy=policy, seed=seed)
+    search = mcts.search(iterations)
+    strat = search.best_strategy
+    plans = sfb_post_pass(gg, strat, topo) if enable_sfb else {}
+    res = simulate(compile_strategy(gg, strat, topo, sfb_plans=plans), topo)
+    return TAGResult(
+        strategy=strat, sfb_plans=plans, search=search,
+        time=res.makespan, baseline_time=search.baseline_time,
+        result=res, gg=gg)
+
+
+def evaluate_strategy(gg: GroupedGraph, strat: Strategy, topo: Topology,
+                      *, sfb: bool = False, proportional: bool = False):
+    plans = sfb_post_pass(gg, strat, topo) if sfb else {}
+    tg = compile_strategy(gg, strat, topo, proportional=proportional,
+                          sfb_plans=plans)
+    return simulate(tg, topo), plans
+
+
+def dp_baseline(gg: GroupedGraph, topo: Topology,
+                option: Option = Option.AR) -> Strategy:
+    return Strategy([data_parallel_all(topo, option)] * gg.n)

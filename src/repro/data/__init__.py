@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticDataset, make_batch_specs  # noqa: F401

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """Naive full-softmax attention. q/k/v: (B, H, S, hd) (same H — GQA
+    expansion happens in ops.py). Returns (B, H, S, hd)."""
+    S = q.shape[2]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(S)[:, None]
+        kpos = jnp.arange(S)[None, :]
+        mask = kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def ref_ssd(x, dt, A, B, C):
+    """Naive sequential SSD recurrence.
+
+    x: (Bb, S, nh, hd); dt: (Bb, S, nh); A: (nh,);
+    B, C: (Bb, S, nh, ds). Returns y (Bb, S, nh, hd), h (Bb, nh, hd, ds).
+    """
+    Bb, S, nh, hd = x.shape
+    ds = B.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                      # (Bb, nh, ...)
+        dA = jnp.exp(dtt * A)                      # (Bb, nh)
+        h = h * dA[..., None, None] + jnp.einsum(
+            "bhd,bhs->bhds", (xt * dtt[..., None]).astype(jnp.float32),
+            Bt.astype(jnp.float32))
+        y = jnp.einsum("bhs,bhds->bhd", Ct.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, nh, hd, ds), jnp.float32)
+    xs = (x.swapaxes(0, 1), dt.astype(jnp.float32).swapaxes(0, 1),
+          B.swapaxes(0, 1), C.swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), h

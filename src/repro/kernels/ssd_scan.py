@@ -1,0 +1,95 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+Grid: (B*nh, n_chunks) — chunks are the minor (sequential) axis, so the
+(hd, ds) f32 state scratch in VMEM carries the inter-chunk recurrence.
+Per chunk the kernel computes the intra-chunk quadratic term
+(C B^T ⊙ decay) @ (x·dt) on the MXU plus the carried-state contribution,
+then updates the state — the SSD algorithm of arXiv:2405.21060 §6 laid
+out for VMEM tiles (chunk=128 keeps every operand MXU-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)             # (Q, hd)
+    dt = dt_ref[0].astype(jnp.float32)           # (Q,)
+    A = a_ref[0].astype(jnp.float32)             # scalar decay rate (<0)
+    Bm = b_ref[0].astype(jnp.float32)            # (Q, ds)
+    Cm = c_ref[0].astype(jnp.float32)            # (Q, ds)
+
+    a = dt * A                                   # (Q,) log-decays
+    cum = jnp.cumsum(a)                          # inclusive
+    # L[i, t] = exp(cum_i - cum_t) for t <= i
+    diff = cum[:, None] - cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_t = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(iota_t <= iota_i, jnp.exp(diff), 0.0)
+
+    xdt = x * dt[:, None]                        # (Q, hd)
+    scores = (Cm @ Bm.T) * L                     # (Q, Q)
+    y_intra = scores @ xdt                       # (Q, hd)
+
+    h = h_ref[...]                               # (hd, ds)
+    y_inter = (Cm @ h.T) * jnp.exp(cum)[:, None]  # (Q, hd)... via transpose
+
+    total = jnp.exp(cum[-1])
+    decay_out = jnp.exp(cum[-1] - cum)           # (Q,)
+    h_new = h * total + (xdt * decay_out[:, None]).T @ Bm   # (hd, ds)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+    h_ref[...] = h_new
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = True):
+    """Chunked SSD scan.
+
+    x: (Bb, S, nh, hd); dt: (Bb, S, nh) (already softplus'd);
+    A: (nh,) negative decay rates; B, C: (Bb, S, nh, ds) (groups already
+    broadcast to heads). Returns y: (Bb, S, nh, hd).
+    """
+    Bb, S, nh, hd = x.shape
+    ds = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    # (B*nh, S, ...) layout, head-major
+    xf = x.transpose(0, 2, 1, 3).reshape(Bb * nh, S, hd)
+    dtf = dt.transpose(0, 2, 1).reshape(Bb * nh, S)
+    bf = B.transpose(0, 2, 1, 3).reshape(Bb * nh, S, ds)
+    cf = C.transpose(0, 2, 1, 3).reshape(Bb * nh, S, ds)
+    af = jnp.tile(A, Bb)                          # (B*nh,)
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q)
+    y = pl.pallas_call(
+        kernel,
+        grid=(Bb * nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, Q), lambda b, j: (b, j)),
+            pl.BlockSpec((1,), lambda b, j: (b,)),
+            pl.BlockSpec((1, Q, ds), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, Q, ds), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, hd), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb * nh, S, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf)
+    return y.reshape(Bb, nh, S, hd).transpose(0, 2, 1, 3)

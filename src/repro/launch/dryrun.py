@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) combination
+on the production meshes, without allocating real arrays (ShapeDtypeStruct
+stand-ins only), and extract the roofline terms from the compiled artifact.
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+      PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, config_for_shape
+from repro.core.hlo_analysis import analyze_hlo
+from repro.launch import mesh as mesh_mod
+from repro.launch import steps as steps_mod
+from repro.optim.adam import AdamW
+
+
+def roofline_terms(flops, hbm_bytes, coll_bytes, n_chips, links_per_chip=4):
+    hw = mesh_mod.HW
+    return {
+        # cost_analysis is per-partition (per-chip) on SPMD modules
+        "compute_s": flops / hw["peak_flops_bf16"],
+        "memory_s": hbm_bytes / hw["hbm_bw"],
+        "collective_s": coll_bytes / (hw["ici_bw"] * links_per_chip),
+    }
+
+
+def lower_one(arch: str, shape_name: str, mesh, *, overrides=None,
+              grad_sync=None, options=None, cfg_overrides=None,
+              profile: bool = False):
+    """Lower + compile one (arch, shape) on a mesh; return stats dict."""
+    shape = SHAPES[shape_name]
+    cfg = config_for_shape(arch, shape_name)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    rules = steps_mod.baseline_rules(mesh, overrides=overrides,
+                                     grad_sync=grad_sync)
+    opts = options or steps_mod.StepOptions()
+    opt = AdamW()
+
+    aparams = __import__("repro.models", fromlist=["abstract_params"])\
+        .abstract_params(cfg)
+    t0 = time.time()
+    if shape.kind == "train":
+        jitted, ps, opt_sh, bs = steps_mod.jit_train_step(
+            cfg, opt, rules, shape, opts)
+        aopt = {"mu": aparams, "nu": aparams}
+        astep = jax.ShapeDtypeStruct((), jnp.int32)
+        abatch = __import__("repro.models", fromlist=["input_specs"])\
+            .input_specs(cfg, shape)
+        lowered = jitted.lower(aparams, aopt, astep, abatch)
+    elif shape.kind == "prefill":
+        jitted, ps, _, bs = steps_mod.jit_prefill_step(cfg, rules, shape)
+        abatch = __import__("repro.models", fromlist=["input_specs"])\
+            .input_specs(cfg, shape)
+        lowered = jitted.lower(aparams, abatch)
+    else:  # decode
+        from repro.models import model as model_mod
+        jitted, ps, cs, bs = steps_mod.jit_serve_step(cfg, rules, shape)
+        acache = model_mod.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        atok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        apos = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = jitted.lower(aparams, acache, atok, apos)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    # cost_analysis counts while bodies once; analyze_hlo multiplies by the
+    # known_trip_count along the call graph (see core/hlo_analysis.py).
+    stats = analyze_hlo(compiled.as_text())
+    if profile:
+        print(stats.summary(18), flush=True)
+    n_chips = mesh.devices.size
+    terms = roofline_terms(stats.flops, stats.bytes_accessed,
+                           stats.collective_wire_bytes, n_chips)
+    dominant = max(terms, key=terms.get)
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_chips": int(n_chips),
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_flops": stats.flops,
+        "hlo_bytes": stats.bytes_accessed,
+        "xla_cost_analysis": {"flops": float(ca.get("flops", 0.0)),
+                              "bytes": float(ca.get("bytes accessed", 0.0))},
+        "collectives": {"bytes": dict(stats.collective_bytes),
+                        "counts": dict(stats.collective_counts),
+                        "total_bytes": stats.collective_wire_bytes},
+        "while_trips": stats.while_trips,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "roofline": terms,
+        "dominant": dominant,
+        "params": config_for_shape(arch, shape_name).param_count(),
+        "active_params": config_for_shape(arch, shape_name).param_count(
+            active_only=True),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--remat-policy", default="full",
+                    choices=["full", "dots", "none"])
+    ap.add_argument("--attn-chunk", type=int, default=0)
+    ap.add_argument("--capacity-factor", type=float, default=0.0)
+    ap.add_argument("--profile", action="store_true",
+                    help="print per-op byte/flop attribution")
+    ap.add_argument("--override", action="append", default=[],
+                    help="logical=mesh_axis rule override, e.g. embed=data")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, _, v = ov.partition("=")
+        overrides[k] = None if v in ("", "none", "None") else (
+            tuple(v.split("+")) if "+" in v else v)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [mesh_mod.make_production_mesh(multi_pod=False),
+                  mesh_mod.make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [mesh_mod.make_production_mesh(multi_pod=args.multi_pod)]
+
+    combos = []
+    if args.all:
+        combos = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        combos = [(args.arch, args.shape)]
+
+    opts = steps_mod.StepOptions(loss_chunk=args.loss_chunk,
+                                 remat_policy=args.remat_policy)
+    cfg_overrides = {}
+    if args.attn_chunk:
+        cfg_overrides["attn_chunk"] = args.attn_chunk
+    if args.capacity_factor:
+        cfg_overrides["capacity_factor"] = args.capacity_factor
+    results = []
+    for mesh in meshes:
+        for arch, shape in combos:
+            tag = f"{arch} x {shape} @ {mesh.devices.shape}"
+            try:
+                r = lower_one(arch, shape, mesh, overrides=overrides or None,
+                              options=opts, cfg_overrides=cfg_overrides or None,
+                              profile=args.profile)
+                r["ok"] = True
+                terms = r["roofline"]
+                print(f"OK  {tag}: compile={r['compile_s']}s "
+                      f"flops={r['hlo_flops']:.3e} bytes={r['hlo_bytes']:.3e} "
+                      f"coll={r['collectives']['total_bytes']:.3e} "
+                      f"dominant={r['dominant']} "
+                      f"terms=({terms['compute_s']:.4f},"
+                      f"{terms['memory_s']:.4f},{terms['collective_s']:.4f})s",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — report per-combo failures
+                r = {"arch": arch, "shape": shape,
+                     "mesh": "x".join(str(s) for s in mesh.devices.shape),
+                     "ok": False, "error": f"{type(e).__name__}: {e}"}
+                print(f"FAIL {tag}: {r['error']}", flush=True)
+            results.append(r)
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} combinations lowered + compiled")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,83 @@
+"""Batched serving driver: prefill a batch of prompts, then decode tokens
+step by step against the KV/SSM cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.launch import mesh as mesh_mod
+from repro.launch import steps as steps_mod
+from repro.models import decode_step, init_cache, init_params
+from repro.parallel.sharding import axis_rules
+
+
+def generate(cfg, params, prompts, gen_tokens: int, rules,
+             prefix=None):
+    """prompts: (B, P) int32. Returns (B, gen_tokens) int32."""
+    B, P = prompts.shape
+    total = P + gen_tokens + (cfg.frontend_tokens
+                              if cfg.frontend != "none" else 0)
+    cache = init_cache(cfg, B, total)
+
+    @jax.jit
+    def step(params, cache, tok, pos):
+        with axis_rules(rules):
+            logits, cache = decode_step(cfg, params, cache, tok, pos)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    # prefill by stepping the prompt (cache-building path is the decode
+    # path; a fused prefill exists as launch.steps.make_prefill_step)
+    tok = prompts[:, :1]
+    pos = 0
+    for i in range(P):
+        nxt, cache = step(params, cache, prompts[:, i:i + 1],
+                          jnp.asarray(pos, jnp.int32))
+        pos += 1
+    out = []
+    cur = nxt
+    for _ in range(gen_tokens):
+        out.append(cur)
+        cur, cache = step(params, cache, cur, jnp.asarray(pos, jnp.int32))
+        pos += 1
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="mamba2-130m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.smoke else get_config(args.arch)
+    mesh = mesh_mod.make_host_mesh()
+    rules = steps_mod.baseline_rules(mesh)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+    t0 = time.time()
+    out = generate(cfg, params, prompts, args.gen, rules)
+    dt = time.time() - t0
+    print(f"generated {out.shape} tokens in {dt:.1f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("sample:", np.asarray(out[0])[:16])
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Builders for the jitted train / prefill / serve steps, plus the logical
+axis-rule sets that TAG strategies lower into.
+
+The returned step functions enter the ``axis_rules`` context *inside* the
+jitted body, so model-level ``logical_shard`` constraints are applied at
+trace time under whatever mesh the launcher chose.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import model as model_mod
+from repro.optim.adam import AdamW, clip_by_global_norm
+from repro.parallel.sharding import AxisRules, axis_rules, logical_spec
+
+
+def baseline_rules(mesh, *, overrides: dict | None = None,
+                   grad_sync: dict | None = None) -> AxisRules:
+    """Paper-faithful DP(+TP) baseline: batch over pod+data, tensor dims over
+    model. TAG strategies produce ``overrides``/``grad_sync`` on top."""
+    multi = "pod" in mesh.axis_names
+    rules = {
+        "batch": ("pod", "data") if multi else ("data",),
+        "cache_seq": ("data",),
+        "q_heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "experts": "model",
+        "vocab": "model",
+        "ssm_heads": "model",
+        "ssm_inner": "model",
+        "embed": None,
+        "expert_embed": None,
+        "layers": None,
+        "seq": None,
+    }
+    if overrides:
+        rules.update(overrides)
+    return AxisRules(mesh=mesh, rules=rules, grad_sync=dict(grad_sync or {}))
+
+
+def param_shardings(cfg: ModelConfig, rules: AxisRules):
+    """NamedSharding tree matching abstract_params(cfg)."""
+    axes = model_mod.param_axes(cfg)
+    aparams = model_mod.abstract_params(cfg)
+
+    def mk(ax, spec):
+        with axis_rules(rules):
+            return NamedSharding(rules.mesh, logical_spec(ax, shape=spec.shape))
+    return jax.tree.map(mk, axes, aparams,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_shardings(cfg: ModelConfig, shape: InputShape, rules: AxisRules):
+    specs = model_mod.input_specs(cfg, shape)
+    out = {}
+    with axis_rules(rules):
+        for k, v in specs.items():
+            ax = ("batch",) + (None,) * (len(v.shape) - 1)
+            out[k] = NamedSharding(rules.mesh, logical_spec(ax, shape=v.shape))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, shape: InputShape, rules: AxisRules):
+    specs = model_mod.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    axes = model_mod.cache_axes(cfg)
+
+    def mk(ax, spec):
+        with axis_rules(rules):
+            return NamedSharding(rules.mesh, logical_spec(ax, shape=spec.shape))
+    return jax.tree.map(mk, axes, specs, is_leaf=lambda x: isinstance(x, tuple))
+
+
+@dataclass(frozen=True)
+class StepOptions:
+    remat: bool = True
+    loss_chunk: int = 0
+    clip_norm: float = 1.0
+    remat_policy: str = "full"
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, rules: AxisRules,
+                    options: StepOptions = StepOptions()):
+    def train_step(params, opt_state, step, batch):
+        with axis_rules(rules):
+            def loss(p):
+                l, m = model_mod.loss_fn(
+                    cfg, p, batch, remat=options.remat,
+                    loss_chunk=options.loss_chunk,
+                    remat_policy=options.remat_policy)
+                return l, m
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            grads, gnorm = clip_by_global_norm(grads, options.clip_norm)
+            params, opt_state = opt.update(params, opt_state, grads, step)
+            metrics = dict(metrics, loss=l, grad_norm=gnorm)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules: AxisRules):
+    def prefill(params, batch):
+        with axis_rules(rules):
+            return model_mod.prefill_step(cfg, params, batch)
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, rules: AxisRules):
+    """One decode step: greedy next token + updated cache."""
+    def serve(params, cache, tokens, pos):
+        with axis_rules(rules):
+            logits, cache = model_mod.decode_step(cfg, params, cache, tokens, pos)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+    return serve
+
+
+def jit_train_step(cfg, opt, rules, shape, options=StepOptions()):
+    ps = param_shardings(cfg, rules)
+    bs = batch_shardings(cfg, shape, rules)
+    os_ = jax.tree.map(lambda s: s, ps)  # opt moments follow params
+    opt_sh = {"mu": os_, "nu": os_}
+    fn = make_train_step(cfg, opt, rules, options)
+    return jax.jit(
+        fn,
+        in_shardings=(ps, opt_sh, NamedSharding(rules.mesh, P()), bs),
+        out_shardings=(ps, opt_sh, NamedSharding(rules.mesh, P())),
+    ), ps, opt_sh, bs
+
+
+def jit_serve_step(cfg, rules, shape):
+    ps = param_shardings(cfg, rules)
+    cs = cache_shardings(cfg, shape, rules)
+    bs = batch_shardings(cfg, shape, rules)
+    fn = make_serve_step(cfg, rules)
+    rep = NamedSharding(rules.mesh, P())
+    return jax.jit(
+        fn,
+        in_shardings=(ps, cs, bs["tokens"], rep),
+        out_shardings=(bs["tokens"], cs),
+    ), ps, cs, bs
+
+
+def jit_prefill_step(cfg, rules, shape):
+    ps = param_shardings(cfg, rules)
+    bs = batch_shardings(cfg, shape, rules)
+    fn = make_prefill_step(cfg, rules)
+    return jax.jit(fn, in_shardings=(ps, bs)), ps, None, bs

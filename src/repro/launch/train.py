@@ -1,0 +1,116 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 20 --batch 8 --seq 128
+
+Runs the full loop on whatever devices exist (CPU smoke by default):
+synthetic data pipeline -> jitted train step (sharded when a mesh is
+requested) -> checkpointing -> metrics log. ``--tag-search`` runs the TAG
+strategy search on a reduced trace of the model first and applies the
+resulting execution plan's axis rules.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.data import SyntheticDataset
+from repro.launch import mesh as mesh_mod
+from repro.launch import steps as steps_mod
+from repro.models import init_params
+from repro.optim.adam import AdamW
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--tag-search", action="store_true",
+                    help="run TAG strategy search and apply its plan")
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.smoke else get_config(args.arch)
+    mesh = mesh_mod.make_host_mesh()
+    rules = steps_mod.baseline_rules(mesh)
+
+    if args.tag_search:
+        from repro.core import tag as tag_mod
+        from repro.core.plan import lower_strategy
+        from repro.core.device import tpu_pods
+        from repro.models import loss_fn as model_loss
+        red = get_reduced(args.arch)
+        rp = init_params(red, jax.random.PRNGKey(0))
+        ds0 = SyntheticDataset(red.vocab_size, 32, 4,
+                               frontend_tokens=red.frontend_tokens
+                               if red.frontend != "none" else 0,
+                               d_model=red.d_model)
+        rb = jax.tree.map(jnp.asarray, ds0.batch(0))
+        topo = tpu_pods()
+        result = tag_mod.optimize(
+            lambda p, b: model_loss(red, p, b, remat=False)[0],
+            rp, rb, topo, name=args.arch, iterations=24, n_groups=24)
+        plan = lower_strategy(result.strategy, result.gg, topo, mesh)
+        print(f"TAG plan: speedup={result.speedup:.2f}x "
+              f"summary={json.dumps(plan.summary)}", flush=True)
+
+    opt = AdamW(lr=args.lr)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    opt_state = opt.init(params)
+    start_step = 0
+    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        start_step, tree = load_checkpoint(args.ckpt_dir)
+        params, opt_state = tree["params"], tree["opt_state"]
+        print(f"resumed from step {start_step}", flush=True)
+
+    ds = SyntheticDataset(
+        cfg.vocab_size, args.seq, args.batch, seed=args.seed,
+        frontend_tokens=cfg.frontend_tokens if cfg.frontend != "none" else 0,
+        d_model=cfg.d_model)
+
+    options = steps_mod.StepOptions(loss_chunk=args.loss_chunk)
+    step_fn = jax.jit(steps_mod.make_train_step(cfg, opt, rules, options))
+
+    losses = []
+    t_start = time.time()
+    for step in range(start_step, args.steps):
+        batch = jax.tree.map(jnp.asarray, ds.batch(step))
+        params, opt_state, metrics = step_fn(
+            params, opt_state, jnp.asarray(step, jnp.int32), batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss={loss:.4f} "
+                  f"ce={float(metrics['ce']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f}", flush=True)
+        if args.ckpt_dir and args.ckpt_every and \
+                (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, step + 1,
+                            {"params": params, "opt_state": opt_state})
+    dt = time.time() - t_start
+    n = max(args.steps - start_step, 1)
+    print(f"done: {n} steps in {dt:.1f}s ({dt/n*1e3:.0f} ms/step); "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}", flush=True)
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.model import (  # noqa: F401
+    init_params, param_axes, forward, loss_fn, init_cache,
+    prefill_step, decode_step, input_specs, abstract_params)

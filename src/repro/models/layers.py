@@ -1,0 +1,119 @@
+"""Parameter definitions and basic layers (pure-functional JAX).
+
+Parameters live in nested dicts. Every leaf is declared via ``ParamDef``
+(shape + logical sharding axes + initializer), so a single definition tree
+yields: materialized params, abstract ShapeDtypeStructs (dry-run), and the
+logical-axes tree used by the sharding rules.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import logical_shard
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple                      # logical axis name (or None) per dim
+    init: str = "normal"             # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _materialize(d: ParamDef, key, dtype):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    return (jax.random.normal(key, d.shape, jnp.float32) * d.scale).astype(dtype)
+
+
+def init_tree(defs, key, dtype):
+    """Materialize a nested dict of ParamDefs."""
+    flat, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(flat))
+    return jax.tree.unflatten(
+        treedef, [_materialize(d, k, dtype) for d, k in zip(flat, keys)])
+
+
+def abstract_tree(defs, dtype):
+    """ShapeDtypeStructs for a nested dict of ParamDefs (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def axes_tree(defs):
+    return jax.tree.map(
+        lambda d: d.axes, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def stack_defs(defs, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dimension (for scan-over-layers params)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n, *d.shape), (axis_name, *d.axes), d.init, d.scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------- layers
+
+def rms_norm(x, gamma, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def dense(x, w, b=None):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def mlp_defs(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_gate": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "w_up": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "w_down": ParamDef((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp_fwd(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = logical_shard(h, "batch", "seq", "mlp")
+    return h @ p["w_down"]
+
+
+def rotary(x, pos, theta: float):
+    """Apply rotary embedding. x: (..., S, H, hd); pos: (S,) or scalar."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.arange(half, dtype=jnp.float32)
+    inv = theta ** (-freqs / half)
+    angles = jnp.asarray(pos, jnp.float32)[..., None] * inv     # (S, half)
+    cos = jnp.cos(angles)[..., None, :]                          # (S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits, labels):
+    """Mean next-token CE. logits: (B, S, V) float; labels: (B, S) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,183 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk quadratic
+(attention-like) term + inter-chunk linear recurrence, scanned over chunks
+(pure jnp here; kernels/ssd_scan.py is the Pallas TPU mirror of the chunk
+kernel). Decode is the O(1) recurrent state update.
+
+State layout: h (B, nheads, head_dim, d_state); conv ring (B, K-1, conv_ch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, rms_norm
+from repro.parallel.sharding import logical_shard
+
+
+def ssm_defs(cfg) -> dict:
+    D = cfg.d_model
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    g = cfg.ssm_ngroups
+    conv_ch = di + 2 * g * ds
+    in_dim = 2 * di + 2 * g * ds + nh
+    return {
+        "in_proj": ParamDef((D, in_dim), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_ch), (None, "ssm_inner")),
+        "conv_b": ParamDef((conv_ch,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamDef((nh,), ("ssm_heads",), init="zeros"),
+        "dt_bias": ParamDef((nh,), ("ssm_heads",), init="zeros"),
+        "D_skip": ParamDef((nh,), ("ssm_heads",), init="ones"),
+        "norm": ParamDef((di,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamDef((di, D), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, ds, g, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * ds], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, kernel K. xbc: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _segsum_decay(a):
+    """a: (..., Q) per-step log-decays -> (..., Q, Q) lower-tri decay matrix
+    L[i, j] = exp(sum_{j < t <= i} a_t) for j <= i else 0."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]       # (..., i, j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (B, S, nh, hd)      inputs (post-conv)
+    dt: (B, S, nh)          softplus'd step sizes
+    A:  (nh,)               negative decay rates
+    Bm: (B, S, nh, ds)      input gates (groups already broadcast to heads)
+    Cm: (B, S, nh, ds)      output gates
+    Returns y: (B, S, nh, hd).
+    """
+    Bb, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    def reshape_c(t):
+        return t.reshape(Bb, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, Bc, Cc = map(reshape_c, (x, dt, Bm, Cm))   # (nc, B, Q, ...)
+
+    def chunk_body(h, inp):
+        xq, dtq, Bq, Cq = inp                            # (B, Q, ...)
+        a = (dtq * A).astype(jnp.float32)                # (B, Q, nh)
+        a_h = a.swapaxes(1, 2)                           # (B, nh, Q)
+        L = _segsum_decay(a_h)                           # (B, nh, Q, Q)
+        cum = jnp.cumsum(a_h, axis=-1)                   # (B, nh, Q)
+        total = jnp.exp(cum[..., -1])                    # (B, nh)
+        xdt = xq * dtq[..., None]                        # (B, Q, nh, hd)
+
+        # intra-chunk: (C B^T ⊙ L) @ (x·dt)
+        scores = jnp.einsum("bqhs,bkhs->bhqk", Cq, Bq).astype(jnp.float32)
+        y_intra = jnp.einsum("bhqk,bkhd->bqhd", scores * L, xdt.astype(jnp.float32))
+
+        # inter-chunk: contribution of the carried state
+        decay_in = jnp.exp(cum).swapaxes(1, 2)           # (B, Q, nh)
+        y_inter = jnp.einsum(
+            "bqhs,bhds->bqhd", Cq.astype(jnp.float32), h) * decay_in[..., None]
+
+        # state update: h' = h * exp(sum a) + Σ_j exp(cum_Q - cum_j) dt_j x_j B_j
+        decay_out = jnp.exp(cum[..., -1:] - cum).swapaxes(1, 2)  # (B, Q, nh)
+        h_new = h * total[..., None, None] + jnp.einsum(
+            "bqhd,bqhs->bhds", (xdt * decay_out[..., None]).astype(jnp.float32),
+            Bq.astype(jnp.float32))
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    h0 = jnp.zeros((Bb, nh, hd, ds), jnp.float32)
+    h_final, yc = jax.lax.scan(chunk_body, h0, (xc, dtc, Bc, Cc))
+    y = yc.swapaxes(0, 1).reshape(Bb, S, nh, hd)
+    return y, h_final
+
+
+def mamba_fwd(cfg, p, u):
+    """Full-sequence Mamba-2 mixer. u: (B, S, D) -> (y, final_state)."""
+    B, S, D = u.shape
+    di, ds, g, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    hd = cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(cfg, u @ p["in_proj"])
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    x, Bm, Cm = jnp.split(xbc, [di, di + g * ds], axis=-1)
+    x = x.reshape(B, S, nh, hd)
+    x = logical_shard(x, "batch", "seq", "ssm_heads", None)
+    rep = nh // g
+    Bm = jnp.repeat(Bm.reshape(B, S, g, ds), rep, axis=2)
+    Cm = jnp.repeat(Cm.reshape(B, S, g, ds), rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = ssd_chunked(x, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + x * p["D_skip"][None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], h
+
+
+def init_ssm_cache(cfg, batch: int, dtype):
+    di, ds, g, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    conv_ch = di + 2 * g * ds
+    return {
+        "h": jnp.zeros((batch, nh, cfg.ssm_head_dim, ds), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def ssm_cache_specs(cfg, batch: int, dtype):
+    di, ds, g, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    conv_ch = di + 2 * g * ds
+    return {
+        "h": jax.ShapeDtypeStruct((batch, nh, cfg.ssm_head_dim, ds), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+SSM_CACHE_AXES = {"h": ("batch", "ssm_heads", None, None),
+                  "conv": ("batch", None, "ssm_inner")}
+
+
+def mamba_decode(cfg, p, u, cache):
+    """One-token recurrent step. u: (B, 1, D)."""
+    B = u.shape[0]
+    di, ds, g, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    hd = cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(cfg, u[:, 0] @ p["in_proj"])       # (B, ...)
+    window = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B, K, C)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])
+    new_conv = window[:, 1:]
+    x, Bm, Cm = jnp.split(conv_out, [di, di + g * ds], axis=-1)
+    x = x.reshape(B, nh, hd)
+    rep = nh // g
+    Bm = jnp.repeat(Bm.reshape(B, g, ds), rep, axis=1)          # (B, nh, ds)
+    Cm = jnp.repeat(Cm.reshape(B, g, ds), rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                        # (B, nh)
+    h = cache["h"] * dA[..., None, None] + jnp.einsum(
+        "bhd,bhs->bhds", (x * dt[..., None]).astype(jnp.float32),
+        Bm.astype(jnp.float32))
+    y = jnp.einsum("bhs,bhds->bhd", Cm.astype(jnp.float32), h)
+    y = y.astype(u.dtype) + x * p["D_skip"][None, :, None]
+    y = y.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,2 @@
+from repro.parallel.sharding import (  # noqa: F401
+    AxisRules, axis_rules, current_rules, logical_shard, logical_spec)

@@ -1,0 +1,134 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates activations/params with *logical* axis names
+("batch", "seq", "heads", "mlp", "experts", "vocab", ...). An ``AxisRules``
+context maps logical names to mesh axes. ``logical_shard`` applies a
+``with_sharding_constraint`` only when the mapping is defined, the mesh is
+active, and the dimension is divisible by the mesh-axis size — so the same
+model code runs unsharded on one CPU device and fully sharded on a 512-chip
+mesh.
+
+TAG's strategy output (core/plan.py) is lowered to one of these rule-sets:
+the searched choices (data-parallel degree, tensor-parallel placement,
+gradient-sync mode) become the rule mapping + the sync mode consumed by the
+optimizer step.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclass
+class AxisRules:
+    """Mapping logical axis name -> mesh axis name (or tuple of them)."""
+    mesh: "jax.sharding.Mesh | None" = None
+    rules: dict = field(default_factory=dict)
+    # gradient sync mode per parameter-name prefix, from TAG strategies:
+    #   "allreduce" (default) | "ps" | "sfb"
+    grad_sync: dict = field(default_factory=dict)
+
+    def mesh_axes(self, logical: str):
+        ax = self.rules.get(logical)
+        if ax is None:
+            return None
+        # drop mappings to axes the active mesh doesn't have (e.g. "model"
+        # on a 1-D host mesh) so the same rules work on any mesh
+        present = set(self.mesh.axis_names) if self.mesh is not None else set()
+        if isinstance(ax, (tuple, list)):
+            ax = tuple(a for a in ax if a in present)
+            return ax or None
+        return ax if ax in present else None
+
+    def axis_size(self, mesh_axis) -> int:
+        assert self.mesh is not None
+        if isinstance(mesh_axis, (tuple, list)):
+            n = 1
+            for a in mesh_axis:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[mesh_axis]
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_STATE, "rules", None)
+
+
+def rules_fingerprint():
+    """Hashable signature of the active rules — passed as a STATIC arg
+    through cached transforms (jax.checkpoint caches traces keyed on
+    (fun, static args, avals); the thread-local rules are invisible to
+    that key, so without this fingerprint a retrace under different rules
+    would silently reuse the previous trace)."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return None
+    items = tuple(sorted(
+        (k, tuple(v) if isinstance(v, (list, tuple)) else v)
+        for k, v in r.rules.items()))
+    mesh_sig = (tuple(r.mesh.axis_names),
+                tuple(r.mesh.shape[a] for a in r.mesh.axis_names))
+    return (items, mesh_sig)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: AxisRules):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def logical_spec(logical_axes, shape=None) -> P:
+    """Build a PartitionSpec for the given logical axes under current rules.
+
+    ``logical_axes`` is a tuple with one entry (str or None) per dim.
+    When ``shape`` is given, divisibility is checked and non-divisible dims
+    fall back to replication.
+    """
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return P()
+    spec, used = [], set()
+    for i, name in enumerate(logical_axes):
+        ax = r.mesh_axes(name) if name is not None else None
+        if ax is None:
+            spec.append(None)
+            continue
+        key = tuple(ax) if isinstance(ax, (list, tuple)) else (ax,)
+        if used & set(key):  # a mesh axis may appear only once in a spec
+            spec.append(None)
+            continue
+        if shape is not None and shape[i] % r.axis_size(ax) != 0:
+            spec.append(None)
+            continue
+        used |= set(key)
+        spec.append(tuple(ax) if isinstance(ax, (list, tuple)) else ax)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def logical_shard(x, *logical_axes):
+    """Constrain ``x`` to the sharding implied by logical axes (no-op when
+    no rules are active)."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    spec = logical_spec(logical_axes, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def named_sharding(logical_axes, shape=None) -> "NamedSharding | None":
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return None
+    return NamedSharding(r.mesh, logical_spec(logical_axes, shape=shape))

@@ -1,0 +1,170 @@
+"""Graph export, splittability, partitioner properties (incl. hypothesis
+on random DAGs)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import CompGraph, OpNode, Split, group_graph
+from repro.core.jax_export import trace_training_graph
+from repro.core.partition import cut_bytes, partition
+from repro.core.zoo import build
+
+
+@pytest.fixture(scope="module")
+def bert_graph():
+    loss_fn, params, batch = build("bert_small")
+    return trace_training_graph(loss_fn, params, batch, "bert_small") \
+        .simplify()
+
+
+def test_trace_marks_gradients_and_params(bert_graph):
+    g = bert_graph
+    n_param = sum(1 for n in g.nodes.values() if n.is_param)
+    n_grad = sum(1 for n in g.nodes.values() if n.is_grad_producer)
+    n_apply = sum(1 for n in g.nodes.values() if n.is_apply_grad)
+    assert n_param == n_apply  # one optimizer op per parameter
+    assert n_grad > 0
+    # total grad bytes == total param bytes
+    pb = sum(n.param_bytes for n in g.nodes.values())
+    gb = sum(n.grad_bytes for n in g.nodes.values())
+    assert abs(pb - gb) / pb < 1e-6
+
+
+def test_splittability_categories(bert_graph):
+    g = bert_graph
+    cats = {s: 0 for s in Split}
+    for n in g.nodes.values():
+        cats[n.split] += 1
+    # forward ops carry the batch dim; gradient contractions drop it
+    assert cats[Split.CONCAT] > 0
+    assert cats[Split.SUM] > 0
+    assert cats[Split.OTHER] > 0
+    # every gradient producer is where batch is contracted or OTHER
+    for n in g.nodes.values():
+        if n.is_apply_grad:
+            assert n.split == Split.OTHER
+
+
+def test_scan_flops_scaling():
+    """Scan bodies must be multiplied by trip count in the trace."""
+    import jax
+    import jax.numpy as jnp
+
+    def loss_long(p, b):
+        def body(x, _):
+            return jnp.tanh(x @ p["w"]), None
+        x, _ = jax.lax.scan(body, b["x"], None, length=8)
+        return jnp.sum(x)
+
+    def loss_short(p, b):
+        def body(x, _):
+            return jnp.tanh(x @ p["w"]), None
+        x, _ = jax.lax.scan(body, b["x"], None, length=2)
+        return jnp.sum(x)
+
+    w = jnp.ones((16, 16))
+    batch = {"x": jnp.ones((4, 16))}
+    g8 = trace_training_graph(loss_long, {"w": w}, batch)
+    g2 = trace_training_graph(loss_short, {"w": w}, batch)
+    assert g8.total_flops() > 3 * g2.total_flops()
+
+
+def test_partition_respects_group_count_and_balance(bert_graph):
+    for n_groups in (10, 30, 60):
+        asn = partition(bert_graph, n_groups)
+        assert max(asn.values()) + 1 <= n_groups
+        gg = group_graph(bert_graph, asn)
+        flops = [g.flops for g in gg.groups]
+        # capacity: no group above balance * average (loose factor 3 for
+        # indivisible single ops)
+        assert max(flops) <= 3.0 * sum(flops) / len(flops) + max(
+            n.flops for n in bert_graph.nodes.values())
+
+
+def test_partition_group_graph_is_acyclic(bert_graph):
+    asn = partition(bert_graph, 40)
+    # every edge must go from group i to group j with i <= j after
+    # topological renumbering... acyclicity is the real requirement:
+    gg = group_graph(bert_graph, asn)
+    n = gg.n
+    adj = {i: set() for i in range(n)}
+    for (a, b) in gg.edges:
+        adj[a].add(b)
+    # DFS cycle check
+    state = [0] * n
+
+    def dfs(u):
+        state[u] = 1
+        for v in adj[u]:
+            if state[v] == 1:
+                return False
+            if state[v] == 0 and not dfs(v):
+                return False
+        state[u] = 2
+        return True
+
+    assert all(dfs(u) for u in range(n) if state[u] == 0)
+
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(5, 40))
+    edges = []
+    for j in range(1, n):
+        for i in range(j):
+            if draw(st.booleans()) and len(edges) < 4 * n:
+                edges.append((i, j))
+    return n, edges
+
+
+@given(random_dag(), st.integers(2, 8))
+@settings(max_examples=25, deadline=None)
+def test_partition_acyclic_on_random_dags(dag, n_groups):
+    n, edges = dag
+    g = CompGraph()
+    rng = np.random.default_rng(42)
+    for i in range(n):
+        g.add_node(OpNode(op_id=i, name=f"op{i}", op_type="dot_general",
+                          flops=float(rng.uniform(1, 100))))
+    for (a, b) in edges:
+        g.add_edge(a, b, float(rng.uniform(1, 1e6)))
+    asn = partition(g, n_groups)
+    assert set(asn) == set(range(n))
+    # group-level acyclicity via topological numbering property
+    gg = group_graph(g, asn)
+    order = {i: i for i in range(gg.n)}
+    state = [0] * gg.n
+    adj = {i: set() for i in range(gg.n)}
+    for (a, b) in gg.edges:
+        adj[a].add(b)
+
+    def dfs(u):
+        state[u] = 1
+        ok = True
+        for v in adj[u]:
+            if state[v] == 1:
+                return False
+            if state[v] == 0:
+                ok = ok and dfs(v)
+        state[u] = 2
+        return ok
+
+    assert all(dfs(u) for u in range(gg.n) if state[u] == 0)
+
+
+def test_refinement_does_not_increase_cut(bert_graph):
+    """Partition cut should beat naive contiguous chunking."""
+    from repro.core.partition import _monotone_refine
+    order = bert_graph.topo_order()
+    n_groups = 20
+    weights = {i: max(bert_graph.nodes[i].flops, 1.0) for i in bert_graph.nodes}
+    total = sum(weights.values())
+    target = total / n_groups
+    naive, gid, acc = {}, 0, 0.0
+    for op in order:
+        naive[op] = gid
+        acc += weights[op]
+        if acc >= target * (gid + 1) and gid < n_groups - 1:
+            gid += 1
+    refined = partition(bert_graph, n_groups)
+    assert cut_bytes(bert_graph, refined) <= cut_bytes(bert_graph, naive)

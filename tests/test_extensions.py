@@ -1,0 +1,149 @@
+"""Beyond-paper extensions + regression tests for the perf-loop fixes:
+MoE combine variants, the sharding-rules trace fingerprint, PIPE actions,
+and in-place scatter accounting in the HLO analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.models import moe as moe_mod
+from repro.models.layers import init_tree
+
+
+@given(st.integers(0, 1 << 16), st.sampled_from([1.0, 1.25, 8.0]))
+@settings(max_examples=10, deadline=None)
+def test_moe_scatter_combine_equals_gather_combine(seed, cf):
+    """The §Perf o5 reformulation must be numerically identical."""
+    cfg = get_reduced("olmoe-1b-7b").replace(capacity_factor=cf)
+    p = init_tree(moe_mod.moe_defs(cfg), jax.random.PRNGKey(1), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 8, cfg.d_model),
+                          jnp.float32)
+    y1, a1 = moe_mod.moe_fwd(cfg, p, x)
+    y2, a2 = moe_mod.moe_fwd(cfg.replace(moe_combine="scatter"), p, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    assert abs(float(a1) - float(a2)) < 1e-6
+
+
+def test_moe_scatter_combine_grads_match():
+    cfg = get_reduced("olmoe-1b-7b")
+    p = init_tree(moe_mod.moe_defs(cfg), jax.random.PRNGKey(1), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, cfg.d_model),
+                          jnp.float32)
+
+    def loss(params, combine):
+        y, aux = moe_mod.moe_fwd(cfg.replace(moe_combine=combine), params, x)
+        return jnp.sum(y ** 2) + 0.01 * aux
+
+    g1 = jax.grad(loss)(p, "gather")
+    g2 = jax.grad(loss)(p, "scatter")
+    for k in g1:
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   atol=2e-4, err_msg=k)
+
+
+def test_rules_fingerprint_distinguishes_rule_sets():
+    from repro.parallel.sharding import (
+        AxisRules, axis_rules, rules_fingerprint)
+
+    class _Mesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+
+    with axis_rules(AxisRules(mesh=_Mesh(), rules={"batch": ("data",)})):
+        fp1 = rules_fingerprint()
+    with axis_rules(AxisRules(mesh=_Mesh(),
+                              rules={"batch": ("data", "model")})):
+        fp2 = rules_fingerprint()
+    assert fp1 != fp2
+    assert rules_fingerprint() is None  # outside any rules context
+    assert hash(fp1) is not None        # must be hashable (static arg)
+
+
+def test_forward_retraces_under_different_rules():
+    """Regression for the jax.checkpoint trace-cache leak: the same config
+    lowered under different rules must honor each rule set (different
+    HLO), not silently reuse the first trace."""
+    from repro.configs import get_reduced
+    from repro.models import abstract_params, input_specs, loss_fn
+    from repro.parallel.sharding import AxisRules, axis_rules
+    from repro.configs.shapes import InputShape
+    import jax
+
+    cfg = get_reduced("qwen2-1.5b")
+    shape = InputShape("t", 32, 4, "train")
+
+    class _Mesh1:
+        axis_names = ("data",)
+        shape = {"data": 1}
+
+    r1 = AxisRules(mesh=None, rules={})
+    r2 = AxisRules(mesh=None, rules={"batch": ("data",)})
+
+    def run(rules):
+        def f(p, b):
+            with axis_rules(rules):
+                return loss_fn(cfg, p, b)[0]
+        ap = abstract_params(cfg)
+        return jax.jit(f).lower(ap, input_specs(cfg, shape)).as_text()
+
+    # both trace cleanly (mesh-free rules are no-ops; the regression was a
+    # crash/stale-shardings only observable on real meshes, covered by
+    # tests/test_parallel.py; here we assert the fingerprint plumbing runs)
+    assert run(r1) and run(r2)
+
+
+def test_pipe_action_reachable_by_mcts():
+    from repro.core.device import testbed
+    from repro.core.strategy import Option, candidate_actions
+    acts = candidate_actions(testbed(), has_grad=True)
+    assert any(a.option == Option.PIPE for a in acts)
+    assert any(a.option == Option.DUP for a in acts)
+    # DP-all placement first => never truncated away
+    assert acts[0].placement == tuple(range(testbed().m))
+
+
+def test_hlo_scatter_counts_update_not_buffer():
+    from repro.core.hlo_analysis import analyze_hlo
+
+    def f(buf, upd, idx):
+        return buf.at[idx].add(upd)
+
+    buf = jnp.zeros((100_000, 64), jnp.float32)
+    upd = jnp.ones((8, 64), jnp.float32)
+    idx = jnp.arange(8)
+    c = jax.jit(f).lower(buf, upd, idx).compile()
+    stats = analyze_hlo(c.as_text())
+    buf_bytes = 100_000 * 64 * 4
+    # must NOT charge read+write of the full buffer
+    assert stats.bytes_accessed < 1.2 * buf_bytes
+
+
+def test_optimizer_bf16_state_dtype():
+    """Kimi-scale mitigation: bf16 moments halve optimizer memory and
+    still converge on a quadratic."""
+    from repro.optim.adam import AdamW
+    opt = AdamW(lr=0.05, weight_decay=0.0, state_dtype="bfloat16")
+    params = {"w": jnp.asarray([4.0, -2.0])}
+    state = opt.init(params)
+    assert state["mu"]["w"].dtype == jnp.bfloat16
+    for step in range(300):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = opt.update(params, state, grads, step)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.2
+
+
+def test_pallas_attention_path_matches_jnp_path():
+    """cfg.attn_impl='pallas' routes the model's attention through the
+    flash kernel and must match the jnp reference path."""
+    from repro.models import forward, init_params
+    cfg = get_reduced("qwen2-1.5b").replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 128),
+                                          0, cfg.vocab_size)}
+    h_jnp, _, _ = forward(cfg, params, batch, remat=False)
+    h_pl, _, _ = forward(cfg.replace(attn_impl="pallas"), params, batch,
+                         remat=False)
+    np.testing.assert_allclose(np.asarray(h_jnp), np.asarray(h_pl),
+                               atol=2e-3)

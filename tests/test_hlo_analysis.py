@@ -1,0 +1,68 @@
+"""HLO analyzer: flops agreement with XLA cost_analysis on loop-free
+modules; trip-count multiplication on scanned modules; collective byte
+extraction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlo_analysis import analyze_hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_flops_match_cost_analysis_loop_free():
+    def f(a, b):
+        return jnp.tanh(a @ b) @ b
+    a = jnp.ones((64, 128), jnp.float32)
+    b = jnp.ones((128, 128), jnp.float32)
+    c = _compile(f, a, b)
+    stats = analyze_hlo(c.as_text())
+    xla = c.cost_analysis()["flops"]
+    # dot flops dominate; agree within 20%
+    assert abs(stats.flops - xla) / xla < 0.2
+
+
+def test_while_trip_count_scaling():
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=16)
+        return h.sum()
+    x = jnp.ones((32, 64), jnp.float32)
+    w = jnp.ones((64, 64), jnp.float32)
+    c = _compile(f, x, w)
+    stats = analyze_hlo(c.as_text())
+    assert 16 in stats.while_trips
+    per_iter = 2 * 32 * 64 * 64
+    assert stats.flops >= 16 * per_iter * 0.9
+    xla = c.cost_analysis()["flops"]       # counts the body once
+    assert stats.flops > 4 * xla
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def inner(h, _):
+            return jnp.tanh(h @ w), None
+
+        def outer(h, _):
+            h, _ = jax.lax.scan(inner, h, None, length=4)
+            return h, None
+        h, _ = jax.lax.scan(outer, x, None, length=3)
+        return h.sum()
+    x = jnp.ones((8, 32), jnp.float32)
+    w = jnp.ones((32, 32), jnp.float32)
+    stats = analyze_hlo(_compile(f, x, w).as_text())
+    per_iter = 2 * 8 * 32 * 32
+    assert stats.flops >= 12 * per_iter * 0.9
+
+
+def test_bytes_nonzero_and_scale_with_size():
+    def f(a):
+        return a * 2.0 + 1.0
+    small = analyze_hlo(_compile(f, jnp.ones((128,), jnp.float32)).as_text())
+    big = analyze_hlo(_compile(
+        f, jnp.ones((128 * 1024,), jnp.float32)).as_text())
+    assert big.bytes_accessed > 100 * small.bytes_accessed > 0

@@ -1,0 +1,127 @@
+"""Model-layer unit tests: decode-vs-full-forward consistency, rope
+relativity, MoE routing invariants, SSM decode equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.models.layers import cross_entropy, rms_norm, rotary
+from repro.models.model import _head
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import init_tree
+
+RNG = np.random.default_rng(1)
+
+
+def test_rms_norm_scale_invariance_of_direction():
+    x = jnp.asarray(RNG.standard_normal((2, 8)), jnp.float32)
+    g = jnp.ones((8,), jnp.float32)
+    a = rms_norm(x, g, 1e-6)
+    b = rms_norm(3.0 * x, g, 1e-6)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(a * a, -1)), 1.0, atol=1e-3)
+
+
+def test_rotary_relative_property():
+    """<rope(q, i), rope(k, j)> depends only on i - j."""
+    hd = 32
+    q = jnp.asarray(RNG.standard_normal((1, 1, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 1, hd)), jnp.float32)
+
+    def dot_at(i, j):
+        qr = rotary(q[None], jnp.asarray([i]), 1e4)[0]
+        kr = rotary(k[None], jnp.asarray([j]), 1e4)[0]
+        return float(jnp.sum(qr * kr))
+
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3
+    assert abs(dot_at(7, 0) - dot_at(17, 10)) < 1e-3
+
+
+def test_cross_entropy_uniform_logits():
+    V = 128
+    logits = jnp.zeros((2, 3, V))
+    labels = jnp.zeros((2, 3), jnp.int32)
+    assert abs(float(cross_entropy(logits, labels)) - np.log(V)) < 1e-4
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-130m",
+                                  "jamba-v0.1-52b", "olmoe-1b-7b"])
+def test_decode_matches_full_forward(arch):
+    """Greedy decode logits at position t must match the full-sequence
+    forward logits at position t (KV-cache / SSM-state correctness)."""
+    cfg = get_reduced(arch).replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.frontend != "none":
+        pytest.skip("frontend archs prepend a prefix; covered elsewhere")
+    h, _, _ = forward(cfg, params, batch, remat=False)
+    full_logits = _head(cfg, params, h)
+
+    cache = init_cache(cfg, B, S + 1)
+    outs = []
+    for t in range(S):
+        logits, cache = decode_step(cfg, params, cache, toks[:, t:t + 1], t)
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full_logits),
+                               atol=2e-2)
+
+
+def test_sliding_window_decode_ring_buffer():
+    cfg = get_reduced("qwen2-1.5b").replace(dtype="float32",
+                                            sliding_window=4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 1, 10
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    cache = init_cache(cfg, B, S)   # ring buffer bounded at window
+    assert cache["layer0"]["mixer"] if False else True
+    kv_len = jax.tree.leaves(cache)[0].shape[2]
+    assert kv_len == cfg.sliding_window
+    for t in range(S):
+        logits, cache = decode_step(cfg, params, cache, toks[:, t:t + 1], t)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+def test_moe_capacity_and_gate_normalization():
+    cfg = get_reduced("olmoe-1b-7b")
+    p = init_tree(moe_mod.moe_defs(cfg), jax.random.PRNGKey(2), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    y, aux = moe_mod.moe_fwd(cfg, p, x)
+    assert y.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3   # Switch aux loss lower bound is 1
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_moe_identical_tokens_capacity_drop():
+    """All-identical tokens overflow one expert's capacity; output must
+    stay finite and dropped tokens contribute zero."""
+    cfg = get_reduced("olmoe-1b-7b")
+    p = init_tree(moe_mod.moe_defs(cfg), jax.random.PRNGKey(2), jnp.float32)
+    x = jnp.ones((1, 64, cfg.d_model), jnp.float32) * 0.3
+    y, _ = moe_mod.moe_fwd(cfg, p, x)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_mamba_decode_matches_scan():
+    cfg = get_reduced("mamba2-130m").replace(dtype="float32")
+    p = init_tree(ssm_mod.ssm_defs(cfg), jax.random.PRNGKey(3), jnp.float32)
+    B, S = 2, 12
+    u = jnp.asarray(RNG.standard_normal((B, S, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    y_full, _ = ssm_mod.mamba_fwd(cfg, p, u)
+    cache = ssm_mod.init_ssm_cache(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        y_t, cache = ssm_mod.mamba_decode(cfg, p, u[:, t:t + 1], cache)
+        outs.append(y_t[:, 0])
+    y_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full),
+                               atol=3e-3)

@@ -1,0 +1,134 @@
+"""Discrete-event simulator properties (paper §4.3.2): lower bounds,
+monotonicity, memory accounting, OOM feasibility — incl. hypothesis
+property tests on random strategies."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compiler import compile_strategy
+from repro.core.device import DeviceGroup, Topology, _full_inter
+from repro.core.device import testbed as make_testbed
+from repro.core.graph import CompGraph, OpNode, group_graph
+from repro.core.jax_export import trace_training_graph
+from repro.core.partition import partition
+from repro.core.profiler import OP_OVERHEAD, compute_time
+from repro.core.simulator import simulate
+from repro.core.strategy import (
+    Action, Option, Strategy, candidate_actions, data_parallel_all)
+from repro.core.zoo import build
+
+
+@pytest.fixture(scope="module")
+def gg():
+    loss_fn, params, batch = build("bert_small")
+    g = trace_training_graph(loss_fn, params, batch, "bert").simplify()
+    return group_graph(g, partition(g, 20))
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return make_testbed()
+
+
+def test_makespan_at_least_compute_lower_bound(gg, topo):
+    strat = Strategy([data_parallel_all(topo)] * gg.n)
+    res = simulate(compile_strategy(gg, strat, topo), topo)
+    total_flops = sum(g.flops for g in gg.groups)
+    agg_speed = sum(dg.flops * dg.num_gpus for dg in topo.groups)
+    assert res.makespan >= total_flops / agg_speed
+    assert res.feasible
+
+
+def test_single_fast_device_beats_single_slow_device(gg, topo):
+    fast = Strategy([Action((0,), Option.MP)] * gg.n)   # V100 group
+    slow = Strategy([Action((5,), Option.MP)] * gg.n)   # P100 group
+    t_fast = simulate(compile_strategy(gg, fast, topo), topo).makespan
+    t_slow = simulate(compile_strategy(gg, slow, topo), topo).makespan
+    assert t_fast < t_slow
+
+
+def test_homogeneous_dp_scales_down_compute(gg):
+    gbps = 1e9 / 8
+    one = Topology([DeviceGroup(0, "V100", 1, intra_bw=300 * gbps)],
+                   _full_inter(1, 0), name="one")
+    four = Topology([DeviceGroup(0, "V100", 4, intra_bw=300 * gbps)],
+                    _full_inter(1, 0), name="four")
+    s1 = Strategy([data_parallel_all(one)] * gg.n)
+    s4 = Strategy([data_parallel_all(four)] * gg.n)
+    t1 = simulate(compile_strategy(gg, s1, one), one).makespan
+    t4 = simulate(compile_strategy(gg, s4, four), four).makespan
+    assert t4 < t1  # DP on 4 devices beats 1 device for a compute-heavy net
+
+
+def test_memory_accounting_positive_and_oom_flag(gg, topo):
+    strat = Strategy([data_parallel_all(topo)] * gg.n)
+    res = simulate(compile_strategy(gg, strat, topo), topo)
+    assert all(v >= 0 for v in res.peak_mem.values())
+    # shrink memory capacity -> infeasible
+    tiny = Topology(
+        [DeviceGroup(g.group_id, g.gpu_type, g.num_gpus, g.intra_bw,
+                     mem_bytes=1e6) for g in topo.groups],
+        topo.inter_bw, name="tiny")
+    res2 = simulate(compile_strategy(gg, strat, tiny), tiny)
+    assert not res2.feasible
+
+
+def test_duplicate_option_no_sync_but_full_compute(gg, topo):
+    dup = Strategy([Action((0,), Option.DUP)] * gg.n)
+    tg = compile_strategy(gg, dup, topo)
+    assert not any(t.kind in ("allreduce", "ps") for t in tg.tasks)
+    # every replica computes the full batch
+    for gid, reps in tg.replicas.items():
+        for r in reps:
+            assert abs(tg.tasks[r.task].flops - gg.groups[gid].flops) < 1e-6
+
+
+def test_slower_interconnect_never_faster(gg):
+    gbps = 1e9 / 8
+    def mk(bw):
+        groups = [DeviceGroup(0, "V100", 2, intra_bw=300 * gbps),
+                  DeviceGroup(1, "P100", 2, intra_bw=64 * gbps)]
+        return Topology(groups, _full_inter(2, bw), name=f"bw{bw}")
+    fastnet, slownet = mk(100 * gbps), mk(1 * gbps)
+    strat = Strategy([data_parallel_all(fastnet)] * gg.n)
+    t_fast = simulate(compile_strategy(gg, strat, fastnet), fastnet).makespan
+    t_slow = simulate(compile_strategy(gg, strat, slownet), slownet).makespan
+    assert t_slow >= t_fast
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_random_strategies_simulate_clean(gg, topo, seed):
+    """Any complete strategy must simulate: positive makespan, all tasks
+    scheduled, non-negative busy times (no deadlock on any action mix)."""
+    rng = np.random.default_rng(seed)
+    actions = []
+    for gid in range(gg.n):
+        cands = candidate_actions(topo, has_grad=gg.groups[gid].has_grad)
+        actions.append(cands[int(rng.integers(len(cands)))])
+    res = simulate(compile_strategy(gg, Strategy(actions), topo), topo)
+    assert res.makespan > 0
+    assert all(b >= 0 for b in res.device_busy.values())
+    assert all(f >= s for s, f in zip(res.task_start, res.task_finish))
+
+
+def test_compute_time_linear_in_flops():
+    t1 = compute_time(1e9, 1e12)
+    t2 = compute_time(2e9, 1e12)
+    assert abs((t2 - OP_OVERHEAD) - 2 * (t1 - OP_OVERHEAD)) < 1e-12
+
+
+def test_pipeline_option_beats_mp_by_overlap(gg, topo):
+    """Beyond-paper (paper §6 future work): the PIPE option overlaps MP
+    stages across micro-batches — must be faster than sequential MP and
+    conserve total compute."""
+    mp = Strategy([Action((0,), Option.MP)] * gg.n)
+    pipe = Strategy([Action((0,), Option.PIPE)] * gg.n)
+    tg_mp = compile_strategy(gg, mp, topo)
+    tg_pipe = compile_strategy(gg, pipe, topo)
+    f_mp = sum(t.flops for t in tg_mp.tasks)
+    f_pipe = sum(t.flops for t in tg_pipe.tasks)
+    assert abs(f_mp - f_pipe) / f_mp < 1e-6      # compute conserved
+    t_mp = simulate(tg_mp, topo).makespan
+    t_pipe = simulate(tg_pipe, topo).makespan
+    assert t_pipe < t_mp
