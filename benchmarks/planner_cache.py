@@ -1,0 +1,115 @@
+"""Planner-service cache benchmark: cold search vs cache hit vs warm-started
+search over a batch of repeated / perturbed planning requests.
+
+Measures (a) wall-clock planning latency per request class, (b) MCTS
+playouts spent, and (c) the warm-start contract: on a perturbed topology,
+a search seeded from the cached strategy reaches the cold search's best
+reward in strictly fewer playouts at equal-or-better simulated makespan.
+
+    PYTHONPATH=src python -m benchmarks.planner_cache
+    # -> results/BENCH_planner.json + CSV rows
+"""
+from __future__ import annotations
+
+import copy
+import json
+import os
+import time
+
+from benchmarks.common import fmt_row, grouped, testbed
+from repro.service import PlannerService
+from repro.service.planner import PlanRequest
+
+
+def perturbed(topo, scale: float):
+    t2 = copy.deepcopy(topo)
+    t2.inter_bw = topo.inter_bw * scale
+    t2.name = f"{topo.name}-x{scale}"
+    return t2
+
+
+def run(model: str = "bert_small", iterations: int = 40,
+        n_groups: int = 20, repeats: int = 4, seed: int = 0) -> dict:
+    gg = grouped(model, n_groups=n_groups)
+    topo = testbed()
+
+    # --- cold reference on the perturbed topology (no cache available)
+    topo_p = perturbed(topo, 0.9)
+    t0 = time.perf_counter()
+    cold_ref = PlannerService().plan_graph(
+        gg, topo_p, iterations=iterations, seed=seed)
+    cold_ref_s = time.perf_counter() - t0
+
+    svc = PlannerService()
+
+    # --- cold: first sighting of (graph, topo)
+    t0 = time.perf_counter()
+    cold = svc.plan_graph(gg, topo, iterations=iterations, seed=seed)
+    cold_s = time.perf_counter() - t0
+
+    # --- hits: a batch of repeated requests
+    reqs = [PlanRequest(gg, topo, iterations=iterations, seed=seed)
+            for _ in range(repeats)]
+    t0 = time.perf_counter()
+    hits = svc.plan_many(reqs)
+    hit_s = (time.perf_counter() - t0) / max(repeats, 1)
+    assert all(r.source == "hit" and r.iterations_run == 0 for r in hits)
+    assert all(r.strategy.canonical_json() ==
+               cold.strategy.canonical_json() for r in hits)
+
+    # --- warm: same graph, perturbed topology, target = cold-ref quality
+    t0 = time.perf_counter()
+    warm = svc.plan_graph(gg, topo_p, iterations=iterations, seed=seed,
+                          stop_reward=cold_ref.best_reward)
+    warm_s = time.perf_counter() - t0
+    assert warm.source == "warm"
+
+    rows = [
+        ("cold", cold_s, cold.iterations_run, cold.time, cold.speedup),
+        ("hit", hit_s, 0, hits[0].time, hits[0].speedup),
+        ("warm", warm_s, warm.iterations_run, warm.time, warm.speedup),
+        ("cold_ref", cold_ref_s, cold_ref.iterations_run, cold_ref.time,
+         cold_ref.speedup),
+    ]
+    print(fmt_row("class", "latency_s", "mcts_iters", "sim_time_s",
+                  "speedup"))
+    for name, lat, it, t, sp in rows:
+        print(fmt_row(name, f"{lat:.3f}", it, f"{t:.5f}", f"{sp:.3f}"))
+
+    summary = {
+        "model": model, "iterations_budget": iterations,
+        "n_groups": n_groups, "repeats": repeats,
+        "cold": {"latency_s": cold_s, "iters": cold.iterations_run,
+                 "sim_time_s": cold.time},
+        "hit": {"latency_s": hit_s, "iters": 0,
+                "sim_time_s": hits[0].time,
+                "byte_identical": hits[0].strategy.canonical_json()
+                == cold.strategy.canonical_json(),
+                "speedup_vs_cold_latency": cold_s / max(hit_s, 1e-9)},
+        "warm": {"latency_s": warm_s, "iters": warm.iterations_run,
+                 "sim_time_s": warm.time,
+                 "cold_ref_iters": cold_ref.iterations_run,
+                 "cold_ref_sim_time_s": cold_ref.time,
+                 "fewer_iters_than_cold": warm.iterations_run
+                 < cold_ref.iterations_run,
+                 "no_worse_makespan": warm.time
+                 <= cold_ref.time * (1 + 1e-9)},
+        "stats": svc.stats(),
+    }
+    os.makedirs("results", exist_ok=True)
+    out = os.path.join("results", "BENCH_planner.json")
+    with open(out, "w") as f:
+        json.dump(summary, f, indent=2)
+    print("wrote", out)
+    return summary
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    s = run()
+    assert s["warm"]["fewer_iters_than_cold"], "warm start saved no playouts"
+    assert s["warm"]["no_worse_makespan"], "warm start regressed makespan"
+    assert s["hit"]["byte_identical"], "cache hit not byte-identical"

@@ -31,6 +31,8 @@ BENCHES = [
      "strategy generation overhead"),
     ("roofline", "benchmarks.roofline",
      "dry-run roofline terms per arch x shape x mesh"),
+    ("planner", "benchmarks.planner_cache",
+     "planner service: cold vs cache-hit vs warm-start latency"),
 ]
 
 

@@ -13,14 +13,14 @@ os.environ.setdefault("XLA_FLAGS",
 import jax                                    # noqa: E402
 import jax.numpy as jnp                       # noqa: E402
 import numpy as np                            # noqa: E402
-from jax.sharding import AxisType             # noqa: E402
 
+from repro.launch import mesh as mesh_mod     # noqa: E402
 from repro.parallel.sfb_dense import (        # noqa: E402
     dp_mlp_loss, sfb_wire_bytes)
 
 
 def main():
-    mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = mesh_mod.make_mesh((4,), ("data",))
     rng = np.random.default_rng(0)
     widths = [64, 256, 32]
     x = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)

@@ -40,6 +40,15 @@ _SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
                "bitcast", "after-all", "partition-id", "replica-id", "iota"}
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Version-compat wrapper: ``Compiled.cost_analysis()`` returns a dict
+    on current jax but a per-partition list of dicts on older releases."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def _type_bytes(type_str: str) -> int:
     total = 0
     for m in _SHAPE_RE.finditer(type_str):

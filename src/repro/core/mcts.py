@@ -49,12 +49,16 @@ class SearchResult:
     iters_to_beat_baseline: int      # -1 if never
     rewards: list
     visit_records: list              # (featurized state, gid, actions, pi)
+    iterations_run: int = 0          # playouts actually executed
+    warm_started: bool = False       # seeded from a prior strategy
 
 
 class MCTS:
     def __init__(self, gg: GroupedGraph, topo: Topology, *, policy=None,
                  c_puct: float = 1.5, seed: int = 0,
-                 record_threshold: int = 8):
+                 record_threshold: int = 8,
+                 prior_strategy: Strategy | None = None,
+                 prior_weight: float = 0.5):
         self.gg = gg
         self.topo = topo
         self.policy = policy          # callable(hetgraph, gid, actions)->probs
@@ -62,6 +66,13 @@ class MCTS:
         self.rng = np.random.default_rng(seed)
         self.order = gg.sorted_by_cost()
         self.record_threshold = record_threshold
+        # warm start (planner service): a previously-searched strategy whose
+        # actions bias the priors and seed the first playout
+        if prior_strategy is not None \
+                and len(prior_strategy.actions) != gg.n:
+            raise ValueError("prior_strategy has wrong group count")
+        self.prior_strategy = prior_strategy
+        self.prior_weight = prior_weight
 
         base = Strategy([data_parallel_all(topo)] * gg.n)
         res = simulate(compile_strategy(gg, base, topo), self.topo)
@@ -90,22 +101,91 @@ class MCTS:
         actions = candidate_actions(
             self.topo, has_grad=self.gg.groups[gid].has_grad)
         if self.policy is None:
-            return actions, np.full(len(actions), 1.0 / len(actions))
-        het = featurize(self.gg, self.topo, vertex.strategy,
-                        vertex.feedback, gid)
-        probs = np.asarray(self.policy(het, gid, actions), np.float64)
-        probs = probs / max(probs.sum(), 1e-9)
-        return actions, probs
+            probs = np.full(len(actions), 1.0 / len(actions))
+        else:
+            het = featurize(self.gg, self.topo, vertex.strategy,
+                            vertex.feedback, gid)
+            probs = np.asarray(self.policy(het, gid, actions), np.float64)
+            probs = probs / max(probs.sum(), 1e-9)
+        return actions, self._blend_prior(gid, actions, probs)
+
+    def _blend_prior(self, gid: int, actions, probs):
+        """Mix prior mass toward the warm-start strategy's action."""
+        if self.prior_strategy is None:
+            return probs
+        pa = self.prior_strategy.actions[gid]
+        if pa is None or pa not in actions:
+            return probs
+        onehot = np.zeros(len(actions))
+        onehot[actions.index(pa)] = 1.0
+        return (1.0 - self.prior_weight) * probs + self.prior_weight * onehot
+
+    def _expand(self, v: Vertex):
+        if v.depth < self.gg.n and v.actions is None:
+            v.actions, v.prior = self._priors(v)
+            v.N = np.zeros(len(v.actions))
+            v.Q = np.zeros(len(v.actions))
+
+    def _backprop(self, path, r):
+        for (pv, ai) in path:
+            pv.N[ai] += 1
+            pv.Q[ai] += (r - pv.Q[ai]) / pv.N[ai]
+
+    def _seed_playout(self, root: Vertex):
+        """Warm-start playout (planner service): descend along the prior
+        strategy's actions, expanding vertices and creating children on the
+        way, so the first evaluation is the full prior strategy and its path
+        carries visit statistics like any other iteration. Returns None —
+        charging no playout — when no prior action applies at the root."""
+        v = root
+        path = []
+        while v.depth < self.gg.n:
+            self._expand(v)
+            gid = self.order[v.depth]
+            pa = self.prior_strategy.actions[gid]
+            if pa is None or pa not in v.actions:
+                break
+            a_idx = v.actions.index(pa)
+            path.append((v, a_idx))
+            if a_idx not in v.children:
+                v.children[a_idx] = Vertex(
+                    v.strategy.with_action(gid, pa), v.depth + 1)
+            v = v.children[a_idx]
+        if not path:
+            return None
+        r, res = self._evaluate(v.strategy)
+        v.reward, v.feedback = r, res
+        self._expand(v)
+        self._backprop(path, r)
+        return r, v
 
     # -------------------------------------------------------------- search
-    def search(self, iterations: int = 100) -> SearchResult:
+    def search(self, iterations: int = 100, *,
+               stop_reward: float | None = None) -> SearchResult:
         root = Vertex(Strategy.empty(self.gg.n), 0)
         root.reward, root.feedback = self._evaluate(root.strategy)
         best = {"r": root.reward, "s": root.strategy, "iters": -1}
         rewards = []
         records = []
+        it_run = 0
 
-        for it in range(iterations):
+        def note(r, v):
+            nonlocal it_run
+            it_run += 1
+            rewards.append(r)
+            if r > best["r"]:
+                best["r"], best["s"] = r, v.strategy
+            if best["iters"] < 0 and r > 1.0:
+                best["iters"] = it_run
+
+        if self.prior_strategy is not None and iterations > 0:
+            seeded = self._seed_playout(root)
+            if seeded is not None:
+                note(*seeded)
+
+        while it_run < iterations:
+            if stop_reward is not None and best["r"] >= stop_reward:
+                break
             # selection
             path = []
             v = root
@@ -132,22 +212,11 @@ class MCTS:
             # expansion + evaluation
             r, res = self._evaluate(v.strategy)
             v.reward, v.feedback = r, res
-            if v.depth < self.gg.n and v.actions is None:
-                v.actions, v.prior = self._priors(v)
-                v.N = np.zeros(len(v.actions))
-                v.Q = np.zeros(len(v.actions))
+            self._expand(v)
 
             # back-propagation
-            for (pv, ai) in path:
-                pv.N[ai] += 1
-                pv.Q[ai] += (r - pv.Q[ai]) / pv.N[ai]
-
-            rewards.append(r)
-            if r > best["r"]:
-                best = {"r": r, "s": v.strategy,
-                        "iters": best["iters"]}
-            if best["iters"] < 0 and r > 1.0:
-                best["iters"] = it + 1
+            self._backprop(path, r)
+            note(r, v)
 
         # collect training records from well-visited vertices
         def visit(v):
@@ -174,4 +243,6 @@ class MCTS:
             baseline_time=self.baseline_time,
             iters_to_beat_baseline=best["iters"],
             rewards=rewards,
-            visit_records=records)
+            visit_records=records,
+            iterations_run=it_run,
+            warm_started=self.prior_strategy is not None)

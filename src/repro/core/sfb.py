@@ -221,6 +221,19 @@ class GroupSFB:
     saved_sync_bytes: float = 0.0      # gradient bytes no longer synced
     dup_op_types: list = field(default_factory=list)
 
+    def to_dict(self) -> dict:
+        return {"extra_flops": float(self.extra_flops),
+                "bcast_bytes": float(self.bcast_bytes),
+                "saved_sync_bytes": float(self.saved_sync_bytes),
+                "dup_op_types": list(self.dup_op_types)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "GroupSFB":
+        return cls(extra_flops=float(d["extra_flops"]),
+                   bcast_bytes=float(d["bcast_bytes"]),
+                   saved_sync_bytes=float(d["saved_sync_bytes"]),
+                   dup_op_types=list(d["dup_op_types"]))
+
 
 def optimize_group(graph: CompGraph, group_ops, D: int, tau: float,
                    dev_flops: float) -> GroupSFB:

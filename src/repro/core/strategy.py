@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import enum
 import itertools
+import json
 from dataclasses import dataclass, field
 
 from repro.core.device import Topology
@@ -35,6 +36,15 @@ class Action:
 
     def __repr__(self):
         return f"<{self.option.name}@{','.join(map(str, self.placement))}>"
+
+    def to_dict(self) -> dict:
+        return {"placement": [int(g) for g in self.placement],
+                "option": self.option.name}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Action":
+        return cls(placement=tuple(int(g) for g in d["placement"]),
+                   option=Option[d["option"]])
 
 
 @dataclass
@@ -62,6 +72,21 @@ class Strategy:
         expensive decided group (the default here)."""
         return Strategy([a if a is not None else default
                          for a in self.actions])
+
+    # -- serialization (plan store schema) --------------------------------
+    def to_dict(self) -> dict:
+        return {"actions": [a.to_dict() if a is not None else None
+                            for a in self.actions]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Strategy":
+        return cls([Action.from_dict(a) if a is not None else None
+                    for a in d["actions"]])
+
+    def canonical_json(self) -> str:
+        """Deterministic byte representation (cache identity checks)."""
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
 
 
 def data_parallel_all(topo: Topology, option: Option = Option.AR) -> Action:

@@ -106,11 +106,15 @@ def sfb_post_pass(gg: GroupedGraph, strat: Strategy, topo: Topology) -> dict:
 def optimize(loss_fn, params, batch, topo: Topology, *, name: str = "",
              policy=None, iterations: int = 100, n_groups: int = 60,
              enable_sfb: bool = True, seed: int = 0,
-             gg: GroupedGraph | None = None) -> TAGResult:
+             gg: GroupedGraph | None = None,
+             prior_strategy: Strategy | None = None,
+             prior_weight: float = 0.5,
+             stop_reward: float | None = None) -> TAGResult:
     if gg is None:
         gg = build_grouped(loss_fn, params, batch, name, n_groups)
-    mcts = MCTS(gg, topo, policy=policy, seed=seed)
-    search = mcts.search(iterations)
+    mcts = MCTS(gg, topo, policy=policy, seed=seed,
+                prior_strategy=prior_strategy, prior_weight=prior_weight)
+    search = mcts.search(iterations, stop_reward=stop_reward)
     strat = search.best_strategy
     plans = sfb_post_pass(gg, strat, topo) if enable_sfb else {}
     res = simulate(compile_strategy(gg, strat, topo, sfb_plans=plans), topo)

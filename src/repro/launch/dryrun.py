@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, SHAPES, config_for_shape
-from repro.core.hlo_analysis import analyze_hlo
+from repro.core.hlo_analysis import analyze_hlo, xla_cost_analysis
 from repro.launch import mesh as mesh_mod
 from repro.launch import steps as steps_mod
 from repro.optim.adam import AdamW
@@ -75,7 +75,7 @@ def lower_one(arch: str, shape_name: str, mesh, *, overrides=None,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = xla_cost_analysis(compiled)
     # cost_analysis counts while bodies once; analyze_hlo multiplies by the
     # known_trip_count along the call graph (see core/hlo_analysis.py).
     stats = analyze_hlo(compiled.as_text())

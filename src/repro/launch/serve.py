@@ -14,10 +14,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.configs.shapes import InputShape
 from repro.launch import mesh as mesh_mod
 from repro.launch import steps as steps_mod
-from repro.models import decode_step, init_cache, init_params
+from repro.models import (
+    abstract_params, decode_step, init_cache, init_params, input_specs,
+    loss_fn)
 from repro.parallel.sharding import axis_rules
+
+
+def plan_deployment(cfg, topo_name: str, *, cache_dir=None,
+                    iterations: int = 20, n_groups: int = 20,
+                    batch: int = 4, seq: int = 32, name: str = ""):
+    """Route deployment planning through the planner service: repeated
+    launches on the same (model, topology) are served from the plan cache
+    without re-running MCTS; perturbed topologies warm-start the search."""
+    from repro.service import PlannerService
+    from repro.service.cli import TOPOLOGIES
+    if topo_name not in TOPOLOGIES:
+        raise SystemExit(f"unknown --plan-topo {topo_name!r}; "
+                         f"choose from {sorted(TOPOLOGIES)}")
+    # input_specs handles frontend archs (prefix inputs, token budget)
+    specs = input_specs(cfg, InputShape(f"plan_{batch}x{seq}", seq, batch,
+                                        "train"))
+    svc = PlannerService(cache_dir=cache_dir)
+    resp = svc.plan(lambda p, b: loss_fn(cfg, p, b, remat=False)[0],
+                    abstract_params(cfg), specs, TOPOLOGIES[topo_name](),
+                    name=name, n_groups=n_groups, iterations=iterations)
+    return resp, svc
 
 
 def generate(cfg, params, prompts, gen_tokens: int, rules,
@@ -60,9 +84,24 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-topo", default=None,
+                    help="plan deployment on this topology via the planner "
+                         "service before serving (testbed/cloud/tpu/...)")
+    ap.add_argument("--plan-cache", default=".plans",
+                    help="plan-store directory for --plan-topo")
+    ap.add_argument("--plan-iters", type=int, default=20)
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.smoke else get_config(args.arch)
+    if args.plan_topo:
+        resp, svc = plan_deployment(
+            cfg, args.plan_topo, cache_dir=args.plan_cache,
+            iterations=args.plan_iters, batch=args.batch,
+            seq=args.prompt_len, name=args.arch)
+        print(f"plan[{args.plan_topo}] source={resp.source} "
+              f"iters={resp.iterations_run} "
+              f"time={resp.time:.4f}s speedup={resp.speedup:.3f} "
+              f"stats={svc.stats()}")
     mesh = mesh_mod.make_host_mesh()
     rules = steps_mod.baseline_rules(mesh)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))

@@ -1,0 +1,21 @@
+"""Planner service: persistent strategy cache + warm-started search.
+
+Wraps the TAG pipeline (trace -> group -> MCTS -> SFB -> simulate) as a
+long-lived planner that amortizes search cost across requests:
+
+  * exact (graph, topology) repeats are served from a versioned plan
+    store without re-running MCTS;
+  * near repeats (same graph on a perturbed topology, or a new graph on
+    a known topology) warm-start MCTS from the cached strategy.
+
+    from repro.service import PlannerService
+    svc = PlannerService(cache_dir=".plans")
+    resp = svc.plan(loss_fn, params, batch, topo, iterations=60)
+"""
+from repro.service.fingerprint import (  # noqa: F401
+    fingerprint_graph, fingerprint_grouped, fingerprint_topology,
+    topology_structure_fingerprint)
+from repro.service.planner import (  # noqa: F401
+    PlannerService, PlanRequest, PlanResponse)
+from repro.service.store import PlanRecord, PlanStore  # noqa: F401
+from repro.service.warmstart import adapt_strategy, find_prior  # noqa: F401

@@ -1,0 +1,106 @@
+"""Planner-service CLI.
+
+    PYTHONPATH=src python -m repro.service.cli plan --model vgg19 \
+        --topo testbed --iterations 40 --cache-dir .plans
+    PYTHONPATH=src python -m repro.service.cli inspect --cache-dir .plans
+    PYTHONPATH=src python -m repro.service.cli evict --cache-dir .plans --all
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import device as device_mod
+from repro.core.graph import group_graph
+from repro.core.jax_export import trace_training_graph
+from repro.core.partition import partition
+from repro.core.zoo import ZOO, build
+from repro.service.planner import PlannerService
+from repro.service.store import PlanStore
+
+TOPOLOGIES = {
+    "testbed": device_mod.testbed,
+    "cloud": device_mod.cloud,
+    "2x1080ti": device_mod.two_1080ti,
+    "2xv100": device_mod.homogeneous_2v100,
+    "tpu": device_mod.tpu_pods,
+}
+
+
+def _build_topology(name: str):
+    return TOPOLOGIES[name]()
+
+
+def cmd_plan(args) -> int:
+    loss_fn, params, batch = build(args.model, batch=args.batch)
+    g = trace_training_graph(loss_fn, params, batch, args.model).simplify()
+    gg = group_graph(g, partition(g, args.n_groups))
+    svc = PlannerService(cache_dir=args.cache_dir)
+    resp = svc.plan_graph(gg, _build_topology(args.topo),
+                          iterations=args.iterations, seed=args.seed,
+                          enable_sfb=not args.no_sfb)
+    print(json.dumps({
+        "model": args.model, "topo": args.topo, "source": resp.source,
+        "iterations_run": resp.iterations_run,
+        "time_s": resp.time, "baseline_s": resp.baseline_time,
+        "speedup": round(resp.speedup, 4),
+        "graph_fp": resp.graph_fp[:16], "topo_fp": resp.topo_fp[:16],
+        "stats": svc.stats(),
+    }, indent=2))
+    return 0
+
+
+def cmd_inspect(args) -> int:
+    store = PlanStore(path=args.cache_dir)
+    rows = [{
+        "graph_fp": r.graph_fp[:16], "topo_fp": r.topo_fp[:16],
+        "n_groups": r.n_groups, "topo_m": r.topo_m,
+        "time_s": r.time, "speedup": round(r.speedup, 4),
+        "meta": r.meta,
+    } for r in store.records()]
+    print(json.dumps({"records": rows, "count": len(rows)}, indent=2))
+    return 0
+
+
+def cmd_evict(args) -> int:
+    store = PlanStore(path=args.cache_dir)
+    n = store.evict(graph_fp=args.graph_fp, topo_fp=args.topo_fp,
+                    all=args.all)
+    print(json.dumps({"evicted": n, "remaining": len(store)}))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.service.cli")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("plan", help="plan a zoo model on a topology")
+    p.add_argument("--model", choices=sorted(ZOO), required=True)
+    p.add_argument("--topo", choices=sorted(TOPOLOGIES), default="testbed")
+    p.add_argument("--iterations", type=int, default=40)
+    p.add_argument("--n-groups", type=int, default=30)
+    p.add_argument("--batch", type=int, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--cache-dir", default=".plans")
+    p.add_argument("--no-sfb", action="store_true")
+    p.set_defaults(fn=cmd_plan)
+
+    p = sub.add_parser("inspect", help="list cached plan records")
+    p.add_argument("--cache-dir", default=".plans")
+    p.set_defaults(fn=cmd_inspect)
+
+    p = sub.add_parser("evict", help="remove cached plan records")
+    p.add_argument("--cache-dir", default=".plans")
+    p.add_argument("--graph-fp", default=None,
+                   help="full graph fingerprint to evict")
+    p.add_argument("--topo-fp", default=None,
+                   help="full topology fingerprint to evict")
+    p.add_argument("--all", action="store_true")
+    p.set_defaults(fn=cmd_evict)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,79 @@
+"""Canonical, process-stable fingerprints for plan-cache keys.
+
+Two requests dedupe iff their computation graph and device topology hash
+identically. Hashes are sha256 over a canonical JSON encoding (sorted
+keys, floats via ``repr``), so they are stable across processes and
+Python hash randomization. Display names are deliberately excluded: the
+same model traced under two labels is the same planning problem.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+
+import numpy as np
+
+from repro.core.device import Topology
+from repro.core.graph import CompGraph, GroupedGraph
+
+
+def _canon(obj):
+    """Convert to canonically-JSON-serializable form (numpy -> python)."""
+    if isinstance(obj, dict):
+        return {str(k): _canon(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_canon(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return [_canon(v) for v in obj.tolist()]
+    if isinstance(obj, (np.floating, float)):
+        return repr(float(obj))
+    if isinstance(obj, (np.integer, int, bool)) or obj is None:
+        return obj
+    return str(obj)
+
+
+def canonical_json(obj) -> str:
+    return json.dumps(_canon(obj), sort_keys=True, separators=(",", ":"))
+
+
+def _sha(obj) -> str:
+    return hashlib.sha256(canonical_json(obj).encode()).hexdigest()
+
+
+def fingerprint_graph(graph: CompGraph) -> str:
+    """Structure + costs of a CompGraph (node names / graph name ignored)."""
+    nodes = [[n.op_id, n.op_type, n.flops, n.bytes_out, n.param_bytes,
+              n.grad_bytes, n.split.value, n.is_grad_producer,
+              n.is_apply_grad, n.is_param, n.batch_dim, n.grad_of]
+             for n in sorted(graph.nodes.values(), key=lambda x: x.op_id)]
+    edges = sorted([e.src, e.dst, e.bytes] for e in graph.edges)
+    return _sha({"nodes": nodes, "edges": edges})
+
+
+def fingerprint_grouped(gg: GroupedGraph) -> str:
+    """Grouped view: base graph + partition assignment + group costs."""
+    groups = [[g.group_id, sorted(g.op_ids), g.flops, g.param_bytes,
+               g.grad_bytes, g.bytes_out, g.has_grad, g.split.value]
+              for g in gg.groups]
+    edges = sorted([gi, gj, b] for (gi, gj), b in gg.edges.items())
+    return _sha({"base": fingerprint_graph(gg.base), "groups": groups,
+                 "edges": edges})
+
+
+def fingerprint_topology(topo: Topology) -> str:
+    """Full topology identity: device specs + link matrix + efficiency
+    factors (everything the simulator reads)."""
+    groups = [[g.group_id, g.gpu_type, g.num_gpus, g.intra_bw, g.mem_bytes,
+               g.flops] for g in topo.groups]
+    return _sha({"groups": groups, "inter_bw": topo.inter_bw,
+                 "latency": topo.latency,
+                 "eff": [topo.coll_eff_cross, topo.coll_eff_intra,
+                         topo.p2p_eff]})
+
+
+def topology_structure_fingerprint(topo: Topology) -> str:
+    """Bandwidth-blind structure (device groups + types + counts): two
+    topologies with equal structure but perturbed links are prime
+    warm-start donors for each other."""
+    return _sha({"groups": [[g.group_id, g.gpu_type, g.num_gpus]
+                            for g in topo.groups]})

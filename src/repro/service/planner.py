@@ -1,0 +1,160 @@
+"""PlannerService: the traffic-facing front end of the TAG pipeline.
+
+    svc = PlannerService(cache_dir=".plans")
+    resp = svc.plan(loss_fn, params, batch, topo)       # traces + searches
+    resp = svc.plan_graph(gg, topo, iterations=60)      # pre-grouped graph
+
+Responses record their provenance: "hit" (served from the store, zero
+MCTS playouts, byte-identical strategy), "warm" (search seeded from a
+near-hit donor), or "cold" (full search). ``plan_many`` batches requests
+with per-request budgets and within-batch dedup.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core import tag as tag_mod
+from repro.core.device import Topology
+from repro.core.graph import GroupedGraph
+from repro.core.strategy import Strategy
+from repro.service.fingerprint import (
+    fingerprint_grouped, fingerprint_topology,
+    topology_structure_fingerprint)
+from repro.service.store import PlanRecord, PlanStore
+from repro.service.warmstart import adapt_strategy, find_prior
+
+
+@dataclass
+class PlanRequest:
+    """One planning request with its own search budget."""
+    gg: GroupedGraph
+    topo: Topology
+    iterations: int = 60
+    seed: int = 0
+    enable_sfb: bool = True
+    stop_reward: float | None = None
+
+
+@dataclass
+class PlanResponse:
+    strategy: Strategy
+    sfb_plans: dict                  # {gid: GroupSFB}
+    time: float                      # simulated per-iteration seconds
+    baseline_time: float
+    source: str                      # "hit" | "warm" | "cold"
+    iterations_run: int              # MCTS playouts spent on this request
+    graph_fp: str
+    topo_fp: str
+    best_reward: float = 0.0         # MCTS-level reward (pre-SFB speedup);
+                                     # stop_reward targets compare to this
+
+    @property
+    def speedup(self):
+        return self.baseline_time / self.time if self.time > 0 else 0.0
+
+
+class PlannerService:
+    def __init__(self, *, store: PlanStore | None = None,
+                 cache_dir: str | None = None, capacity: int = 256,
+                 policy=None, warm_start: bool = True,
+                 prior_weight: float = 0.6):
+        self.store = store if store is not None \
+            else PlanStore(capacity=capacity, path=cache_dir)
+        self.policy = policy
+        self.warm_start = warm_start
+        self.prior_weight = prior_weight
+        self._stats = {"requests": 0, "hits": 0, "warm": 0, "cold": 0,
+                       "batch_dedup": 0, "iterations": 0}
+
+    # ----------------------------------------------------------------- API
+    def plan(self, loss_fn, params, batch, topo: Topology, *,
+             name: str = "", n_groups: int = 60, **kw) -> PlanResponse:
+        """Trace a training function and plan its deployment."""
+        gg = tag_mod.build_grouped(loss_fn, params, batch, name, n_groups)
+        return self.plan_graph(gg, topo, **kw)
+
+    def plan_graph(self, gg: GroupedGraph, topo: Topology, *,
+                   iterations: int = 60, seed: int = 0,
+                   enable_sfb: bool = True,
+                   stop_reward: float | None = None,
+                   fingerprints: tuple | None = None) -> PlanResponse:
+        graph_fp, topo_fp = fingerprints or (fingerprint_grouped(gg),
+                                             fingerprint_topology(topo))
+        struct_fp = topology_structure_fingerprint(topo)
+        self._stats["requests"] += 1
+
+        if self.warm_start:
+            kind, rec = find_prior(self.store, graph_fp, topo_fp, struct_fp)
+        else:
+            rec = self.store.get(graph_fp, topo_fp)
+            kind = "hit" if rec is not None else "miss"
+        if kind == "hit" and not (
+                rec.meta.get("enable_sfb", True) == enable_sfb
+                and rec.meta.get("iterations", 0) >= iterations):
+            # cached under a smaller budget or different SFB setting: don't
+            # let it shadow the request — re-search, seeded from it
+            kind = "stale_hit"
+        if kind == "hit":
+            self._stats["hits"] += 1
+            return PlanResponse(
+                strategy=rec.strategy_obj(), sfb_plans=rec.sfb_objs(),
+                time=rec.time, baseline_time=rec.baseline_time,
+                source="hit", iterations_run=0,
+                graph_fp=graph_fp, topo_fp=topo_fp,
+                best_reward=float(rec.meta.get("best_reward", 0.0)))
+
+        prior = None
+        if kind in ("warm_topo", "warm_graph", "stale_hit"):
+            prior = adapt_strategy(rec.strategy_obj(), gg.n, topo)
+            self._stats["warm"] += 1
+        else:
+            self._stats["cold"] += 1
+
+        res = tag_mod.optimize(
+            None, None, None, topo, gg=gg, policy=self.policy,
+            iterations=iterations, seed=seed, enable_sfb=enable_sfb,
+            prior_strategy=prior, prior_weight=self.prior_weight,
+            stop_reward=stop_reward)
+        self._stats["iterations"] += res.search.iterations_run
+        self.store.put(PlanRecord(
+            graph_fp=graph_fp, topo_fp=topo_fp, topo_struct_fp=struct_fp,
+            n_groups=gg.n, topo_m=topo.m,
+            strategy=res.strategy.to_dict(),
+            sfb_plans={str(g): p.to_dict()
+                       for g, p in res.sfb_plans.items()},
+            time=res.time, baseline_time=res.baseline_time,
+            meta={"iterations": iterations, "seed": seed,
+                  "enable_sfb": enable_sfb,
+                  "iterations_run": res.search.iterations_run,
+                  "best_reward": res.search.best_reward,
+                  "source": "warm" if prior is not None else "cold"}))
+        return PlanResponse(
+            strategy=res.strategy, sfb_plans=res.sfb_plans,
+            time=res.time, baseline_time=res.baseline_time,
+            source="warm" if prior is not None else "cold",
+            iterations_run=res.search.iterations_run,
+            graph_fp=graph_fp, topo_fp=topo_fp,
+            best_reward=res.search.best_reward)
+
+    def plan_many(self, requests: list) -> list:
+        """Plan a batch of PlanRequests. Identical (graph, topology) pairs
+        inside the batch are planned once; repeats are store hits."""
+        out = []
+        seen: set = set()
+        for req in requests:
+            key = (fingerprint_grouped(req.gg),
+                   fingerprint_topology(req.topo))
+            if key in seen:
+                self._stats["batch_dedup"] += 1
+            seen.add(key)
+            out.append(self.plan_graph(
+                req.gg, req.topo, iterations=req.iterations, seed=req.seed,
+                enable_sfb=req.enable_sfb, stop_reward=req.stop_reward,
+                fingerprints=key))
+        return out
+
+    def stats(self) -> dict:
+        s = dict(self._stats)
+        s["store_size"] = len(self.store)
+        s["hit_rate"] = s["hits"] / s["requests"] if s["requests"] else 0.0
+        return s

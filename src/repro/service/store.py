@@ -1,0 +1,196 @@
+"""Versioned plan store: in-memory LRU over a JSON-on-disk tier.
+
+Records are keyed by (graph_fp, topo_fp). The memory tier is a bounded
+LRU; the disk tier (optional ``path=``) holds one JSON file per record
+and survives process restarts — a warm planner re-serves yesterday's
+strategies without a single MCTS playout.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+from repro.core.sfb import GroupSFB
+from repro.core.strategy import Strategy
+
+SCHEMA_VERSION = 1
+
+
+@dataclass
+class PlanRecord:
+    graph_fp: str
+    topo_fp: str
+    topo_struct_fp: str
+    n_groups: int
+    topo_m: int
+    strategy: dict                     # Strategy.to_dict()
+    sfb_plans: dict                    # {str(gid): GroupSFB.to_dict()}
+    time: float                        # simulated per-iteration seconds
+    baseline_time: float
+    meta: dict = field(default_factory=dict)   # iterations, seed, source...
+    version: int = SCHEMA_VERSION
+
+    @property
+    def key(self):
+        return (self.graph_fp, self.topo_fp)
+
+    @property
+    def speedup(self):
+        return self.baseline_time / self.time if self.time > 0 else 0.0
+
+    def strategy_obj(self) -> Strategy:
+        return Strategy.from_dict(self.strategy)
+
+    def sfb_objs(self) -> dict:
+        return {int(gid): GroupSFB.from_dict(d)
+                for gid, d in self.sfb_plans.items()}
+
+    def to_dict(self) -> dict:
+        return {
+            "version": self.version,
+            "graph_fp": self.graph_fp, "topo_fp": self.topo_fp,
+            "topo_struct_fp": self.topo_struct_fp,
+            "n_groups": self.n_groups, "topo_m": self.topo_m,
+            "strategy": self.strategy, "sfb_plans": self.sfb_plans,
+            "time": self.time, "baseline_time": self.baseline_time,
+            "meta": self.meta,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanRecord":
+        if d.get("version") != SCHEMA_VERSION:
+            raise ValueError(f"plan record schema {d.get('version')} != "
+                             f"{SCHEMA_VERSION}")
+        return cls(
+            graph_fp=d["graph_fp"], topo_fp=d["topo_fp"],
+            topo_struct_fp=d["topo_struct_fp"],
+            n_groups=int(d["n_groups"]), topo_m=int(d["topo_m"]),
+            strategy=d["strategy"], sfb_plans=d["sfb_plans"],
+            time=float(d["time"]), baseline_time=float(d["baseline_time"]),
+            meta=d.get("meta", {}), version=d["version"])
+
+
+def _fname(graph_fp: str, topo_fp: str) -> str:
+    return f"{graph_fp[:24]}-{topo_fp[:24]}.json"
+
+
+class PlanStore:
+    def __init__(self, capacity: int = 256, path: str | None = None):
+        self.capacity = capacity
+        self.path = path
+        self._mem: OrderedDict = OrderedDict()   # key -> PlanRecord
+        self._disk: dict = {}                    # key -> filename
+        if path:
+            os.makedirs(path, exist_ok=True)
+            self._scan_disk()
+
+    # ---------------------------------------------------------------- disk
+    def _scan_disk(self):
+        for fn in os.listdir(self.path):
+            if not fn.endswith(".json"):
+                continue
+            try:
+                rec = self._load_file(fn)
+            except (ValueError, KeyError, json.JSONDecodeError, OSError):
+                continue                         # unreadable/stale schema
+            self._disk[rec.key] = fn
+
+    def _load_file(self, fn: str) -> PlanRecord:
+        with open(os.path.join(self.path, fn)) as f:
+            return PlanRecord.from_dict(json.load(f))
+
+    def _write_file(self, rec: PlanRecord):
+        fn = _fname(*rec.key)
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(rec.to_dict(), f, sort_keys=True)
+        os.replace(tmp, os.path.join(self.path, fn))
+        self._disk[rec.key] = fn
+
+    # ------------------------------------------------------------- get/put
+    def _insert_mem(self, rec: PlanRecord):
+        self._mem[rec.key] = rec
+        self._mem.move_to_end(rec.key)
+        while len(self._mem) > self.capacity:
+            self._mem.popitem(last=False)        # LRU; disk tier keeps it
+
+    def put(self, rec: PlanRecord):
+        self._insert_mem(rec)
+        if self.path:
+            self._write_file(rec)
+
+    def get(self, graph_fp: str, topo_fp: str) -> PlanRecord | None:
+        key = (graph_fp, topo_fp)
+        rec = self._mem.get(key)
+        if rec is not None:
+            self._mem.move_to_end(key)
+            return rec
+        fn = self._disk.get(key)
+        if fn is not None:
+            try:
+                rec = self._load_file(fn)
+            except (ValueError, KeyError, json.JSONDecodeError, OSError):
+                del self._disk[key]
+                return None
+            if rec.key != key:                   # filename prefix collision
+                return None
+            self._insert_mem(rec)                # promote; no disk rewrite
+            return rec
+        return None
+
+    def find(self, *, graph_fp: str | None = None,
+             topo_fp: str | None = None) -> list:
+        """Records matching one side of the key (warm-start donors)."""
+        out, seen = [], set()
+        for key in list(self._mem) + list(self._disk):
+            if key in seen:
+                continue
+            seen.add(key)
+            if graph_fp is not None and key[0] != graph_fp:
+                continue
+            if topo_fp is not None and key[1] != topo_fp:
+                continue
+            rec = self.get(*key)
+            if rec is not None:
+                out.append(rec)
+        return out
+
+    def records(self) -> list:
+        return self.find()
+
+    # -------------------------------------------------------------- evict
+    def evict(self, *, graph_fp: str | None = None,
+              topo_fp: str | None = None, all: bool = False) -> int:
+        """Remove matching records from both tiers. Fingerprints may be
+        prefixes (the CLI prints truncated fps)."""
+        n = 0
+        for key in list(self._mem) + list(self._disk):
+            if not all:
+                if graph_fp is not None and not key[0].startswith(graph_fp):
+                    continue
+                if topo_fp is not None and not key[1].startswith(topo_fp):
+                    continue
+                if graph_fp is None and topo_fp is None:
+                    continue
+            hit = False
+            if key in self._mem:
+                del self._mem[key]
+                hit = True
+            fn = self._disk.pop(key, None)
+            if fn is not None:
+                try:
+                    os.remove(os.path.join(self.path, fn))
+                except OSError:
+                    pass
+                hit = True
+            n += hit
+        return n
+
+    def __len__(self):
+        return len(set(self._mem) | set(self._disk))
+
+    def keys(self):
+        return sorted(set(self._mem) | set(self._disk))

@@ -1,0 +1,59 @@
+"""Warm-start selection and strategy adaptation.
+
+On a cache miss with a *near* hit — the same graph on a perturbed
+topology, or a new graph on a known topology — the cached strategy seeds
+MCTS (``prior_strategy=`` in ``core.mcts``) instead of a cold root: the
+first playout replays the prior actions and the search priors are biased
+toward them, so the search re-converges in far fewer playouts (the
+Placeto-style generalization TAG claims in §5.2).
+"""
+from __future__ import annotations
+
+from repro.core.device import Topology
+from repro.core.strategy import Action, Strategy
+from repro.service.store import PlanRecord, PlanStore
+
+
+def adapt_strategy(prior: Strategy, n_groups: int,
+                   topo: Topology) -> Strategy:
+    """Remap a cached strategy onto a (possibly different) request shape:
+    placements are clipped to the new topology's device groups; actions
+    that no longer place anywhere — or groups the prior never decided —
+    become undecided (MCTS fills them)."""
+    acts = []
+    for gid in range(n_groups):
+        a = prior.actions[gid] if gid < len(prior.actions) else None
+        if a is None:
+            acts.append(None)
+            continue
+        placement = tuple(g for g in a.placement if g < topo.m)
+        acts.append(Action(placement, a.option) if placement else None)
+    return Strategy(acts)
+
+
+def _best(records: list) -> PlanRecord:
+    return max(records, key=lambda r: r.speedup)
+
+
+def find_prior(store: PlanStore, graph_fp: str, topo_fp: str,
+               topo_struct_fp: str | None = None):
+    """Resolve a request against the store.
+
+    Returns ``(kind, record)`` with kind one of:
+      "hit"        exact (graph, topology) match — reuse verbatim
+      "warm_topo"  same graph, different topology (prefer equal structure)
+      "warm_graph" same topology, different graph
+      "miss"       nothing usable — cold search
+    """
+    rec = store.get(graph_fp, topo_fp)
+    if rec is not None:
+        return "hit", rec
+    same_graph = store.find(graph_fp=graph_fp)
+    if same_graph:
+        structural = [r for r in same_graph
+                      if topo_struct_fp and r.topo_struct_fp == topo_struct_fp]
+        return "warm_topo", _best(structural or same_graph)
+    same_topo = store.find(topo_fp=topo_fp)
+    if same_topo:
+        return "warm_graph", _best(same_topo)
+    return "miss", None

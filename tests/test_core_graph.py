@@ -2,6 +2,8 @@
 on random DAGs)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import CompGraph, OpNode, Split, group_graph

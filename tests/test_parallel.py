@@ -55,9 +55,9 @@ def test_rules_ignore_missing_mesh_axes():
 def test_sfb_dense_sync_modes_equivalent_multidevice():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.launch import mesh as mesh_mod
         from repro.parallel.sfb_dense import dp_mlp_loss
-        mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+        mesh = mesh_mod.make_mesh((4,), ("data",))
         rng = np.random.default_rng(0)
         widths = [16, 32, 8]
         params = [jnp.asarray(rng.standard_normal((a, b)) * 0.1, jnp.float32)

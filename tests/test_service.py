@@ -1,0 +1,211 @@
+"""Planner service: fingerprint stability, plan-store round trips, and the
+cache hit / warm-start contracts (ISSUE acceptance criteria)."""
+import copy
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core.device import DeviceGroup, Topology, _full_inter
+from repro.core.device import testbed as make_testbed
+from repro.core.graph import group_graph
+from repro.core.jax_export import trace_training_graph
+from repro.core.partition import partition
+from repro.core.sfb import GroupSFB
+from repro.core.strategy import Action, Option, Strategy
+from repro.core.zoo import build
+from repro.service import (
+    PlannerService, PlanStore, adapt_strategy, fingerprint_grouped,
+    fingerprint_topology, topology_structure_fingerprint)
+from repro.service.planner import PlanRequest
+from repro.service.store import SCHEMA_VERSION, PlanRecord
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def gg():
+    loss_fn, params, batch = build("bert_small")
+    g = trace_training_graph(loss_fn, params, batch, "bert").simplify()
+    return group_graph(g, partition(g, 12))
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return make_testbed()
+
+
+def _perturbed(topo, scale=0.9):
+    t2 = copy.deepcopy(topo)
+    t2.inter_bw = topo.inter_bw * scale
+    return t2
+
+
+# ------------------------------------------------------------ fingerprints
+
+def test_fingerprint_deterministic_within_process(gg, topo):
+    assert fingerprint_grouped(gg) == fingerprint_grouped(gg)
+    assert fingerprint_topology(topo) == fingerprint_topology(topo)
+
+
+def test_fingerprint_stable_across_processes(topo):
+    """Same topology hashed in a fresh interpreter -> same hex digest
+    (no dependence on PYTHONHASHSEED / object identity)."""
+    code = textwrap.dedent("""
+        from repro.core.device import testbed
+        from repro.service import fingerprint_topology
+        print(fingerprint_topology(testbed()))
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH=SRC, PYTHONHASHSEED="12345"),
+        timeout=120)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout.strip() == fingerprint_topology(topo)
+
+
+def test_fingerprint_sensitive_to_perturbation(gg, topo):
+    t2 = _perturbed(topo)
+    assert fingerprint_topology(t2) != fingerprint_topology(topo)
+    # bandwidth-blind structure fp is unchanged -> warm-start donor match
+    assert topology_structure_fingerprint(t2) \
+        == topology_structure_fingerprint(topo)
+    # device-spec change flips both
+    t3 = copy.deepcopy(topo)
+    t3.groups[0].num_gpus += 1
+    assert topology_structure_fingerprint(t3) \
+        != topology_structure_fingerprint(topo)
+
+
+def test_graph_fingerprint_ignores_name(gg):
+    g2 = copy.deepcopy(gg)
+    g2.base.name = "renamed"
+    assert fingerprint_grouped(g2) == fingerprint_grouped(gg)
+
+
+# -------------------------------------------------------------- plan store
+
+def _dummy_record(graph_fp="g" * 64, topo_fp="t" * 64, time=1.0):
+    strat = Strategy([Action((0,), Option.AR), None])
+    return PlanRecord(
+        graph_fp=graph_fp, topo_fp=topo_fp, topo_struct_fp="s" * 64,
+        n_groups=2, topo_m=1, strategy=strat.to_dict(),
+        sfb_plans={"0": GroupSFB(1.0, 2.0, 3.0, ["dot"]).to_dict()},
+        time=time, baseline_time=2.0, meta={"seed": 0})
+
+
+def test_store_memory_lru_eviction():
+    store = PlanStore(capacity=2)
+    for i in range(3):
+        store.put(_dummy_record(graph_fp=f"g{i}" + "0" * 62))
+    assert len(store) == 2
+    assert store.get("g0" + "0" * 62, "t" * 64) is None
+
+
+def test_store_disk_roundtrip(tmp_path):
+    store = PlanStore(path=str(tmp_path))
+    rec = _dummy_record()
+    store.put(rec)
+    # fresh store (new process equivalent) reloads from disk
+    store2 = PlanStore(path=str(tmp_path))
+    got = store2.get(rec.graph_fp, rec.topo_fp)
+    assert got is not None
+    assert got.strategy_obj().canonical_json() \
+        == rec.strategy_obj().canonical_json()
+    sfb = got.sfb_objs()[0]
+    assert (sfb.extra_flops, sfb.bcast_bytes, sfb.saved_sync_bytes,
+            sfb.dup_op_types) == (1.0, 2.0, 3.0, ["dot"])
+    assert store2.evict(graph_fp=rec.graph_fp[:16]) == 1
+    assert PlanStore(path=str(tmp_path)).get(rec.graph_fp, rec.topo_fp) \
+        is None
+
+
+def test_store_rejects_stale_schema(tmp_path):
+    store = PlanStore(path=str(tmp_path))
+    store.put(_dummy_record())
+    fn = os.listdir(tmp_path)[0]
+    d = json.load(open(tmp_path / fn))
+    d["version"] = SCHEMA_VERSION + 1
+    json.dump(d, open(tmp_path / fn, "w"))
+    assert len(PlanStore(path=str(tmp_path))) == 0
+
+
+def test_strategy_serialization_roundtrip():
+    strat = Strategy([Action((0, 2), Option.PS), None,
+                      Action((1,), Option.PIPE)])
+    back = Strategy.from_dict(strat.to_dict())
+    assert back.canonical_json() == strat.canonical_json()
+    assert back.actions[0] == strat.actions[0]
+    assert back.actions[1] is None
+
+
+# ------------------------------------------------------- warm-start pieces
+
+def test_adapt_strategy_clips_to_new_topology():
+    prior = Strategy([Action((0, 5), Option.AR), Action((6,), Option.PS)])
+    small = Topology([DeviceGroup(0, "V100", 2, intra_bw=1e9)],
+                     _full_inter(1, 0))
+    got = adapt_strategy(prior, 3, small)
+    assert got.actions[0] == Action((0,), Option.AR)
+    assert got.actions[1] is None          # placement vanished entirely
+    assert got.actions[2] is None          # prior never decided group 2
+
+
+# ----------------------------------------------------- service end-to-end
+
+def test_hit_is_byte_identical_and_runs_no_mcts(gg, topo, tmp_path):
+    svc = PlannerService(cache_dir=str(tmp_path))
+    r1 = svc.plan_graph(gg, topo, iterations=10, seed=0)
+    r2 = svc.plan_graph(gg, topo, iterations=10, seed=0)
+    assert r1.source == "cold" and r2.source == "hit"
+    assert r2.iterations_run == 0
+    assert r2.strategy.canonical_json() == r1.strategy.canonical_json()
+    # across a "restart": a fresh service on the same disk tier still hits
+    r3 = PlannerService(cache_dir=str(tmp_path)).plan_graph(
+        gg, topo, iterations=10, seed=0)
+    assert r3.source == "hit" and r3.iterations_run == 0
+    assert r3.strategy.canonical_json() == r1.strategy.canonical_json()
+
+
+def test_warm_start_fewer_iters_no_worse_makespan(gg, topo):
+    """ISSUE acceptance: warm-started search on a perturbed topology
+    completes in strictly fewer MCTS playouts than a cold search at
+    equal-or-better simulated makespan."""
+    topo_p = _perturbed(topo)
+    budget = 25
+    cold = PlannerService().plan_graph(gg, topo_p, iterations=budget, seed=0)
+    assert cold.iterations_run == budget
+
+    svc = PlannerService()
+    svc.plan_graph(gg, topo, iterations=budget, seed=0)       # seed cache
+    warm = svc.plan_graph(gg, topo_p, iterations=budget, seed=0,
+                          stop_reward=cold.best_reward)
+    assert warm.source == "warm"
+    assert warm.iterations_run < cold.iterations_run
+    assert warm.time <= cold.time * (1 + 1e-9)
+    assert svc.stats()["warm"] == 1
+
+
+def test_bigger_budget_not_shadowed_by_small_cached_plan(gg, topo):
+    """A record cached under a tiny budget must not be served as a hit to a
+    larger-budget request — it seeds a warm re-search instead."""
+    svc = PlannerService()
+    svc.plan_graph(gg, topo, iterations=2, seed=0)
+    big = svc.plan_graph(gg, topo, iterations=6, seed=0)
+    assert big.source == "warm" and big.iterations_run > 0
+    # equal-budget repeat of the bigger request is again a plain hit
+    again = svc.plan_graph(gg, topo, iterations=6, seed=0)
+    assert again.source == "hit" and again.iterations_run == 0
+
+
+def test_plan_many_dedups_within_batch(gg, topo):
+    svc = PlannerService()
+    reqs = [PlanRequest(gg, topo, iterations=8) for _ in range(3)]
+    out = svc.plan_many(reqs)
+    assert [r.source for r in out] == ["cold", "hit", "hit"]
+    assert svc.stats()["batch_dedup"] == 2
+    assert out[1].strategy.canonical_json() \
+        == out[0].strategy.canonical_json()

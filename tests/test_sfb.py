@@ -3,6 +3,8 @@ regime behaviour, and the end-to-end post-pass on VGG (FC layers are the
 paper's canonical SFB win)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.device import testbed as make_testbed, two_1080ti

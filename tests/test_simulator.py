@@ -3,6 +3,8 @@ monotonicity, memory accounting, OOM feasibility — incl. hypothesis
 property tests on random strategies."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.compiler import compile_strategy
