@@ -12,8 +12,7 @@ from repro.core.jax_export import trace_training_graph
 from repro.core.mcts import MCTS
 from repro.core.partition import partition
 from repro.core.simulator import simulate
-from repro.core.strategy import (
-    Action, Option, Strategy, candidate_actions, data_parallel_all)
+from repro.core.strategy import candidate_actions
 from repro.core.tag import dp_baseline, sfb_post_pass
 from repro.core.zoo import ZOO, build
 
@@ -84,22 +83,10 @@ def mcmc_search(gg, topo, iters: int = 300, seed: int = 0,
 
 
 def canonical_strategies(gg, topo):
-    """Warm-start candidates inside TAG's space: DP-AR/PS over all devices,
-    each GPU type alone (AR/PS), and the fastest-half prefix."""
-    out = [Strategy([data_parallel_all(topo, o)] * gg.n)
-           for o in (Option.AR, Option.PS)]
-    by_type: dict = {}
-    for g, dg in enumerate(topo.groups):
-        by_type.setdefault(dg.gpu_type, []).append(g)
-    order = sorted(range(topo.m),
-                   key=lambda g: -(topo.groups[g].flops
-                                   * topo.groups[g].num_gpus))
-    subsets = [tuple(sorted(v)) for v in by_type.values()]
-    subsets.append(tuple(sorted(order[:max(1, topo.m // 2)])))
-    for p in subsets:
-        for o in (Option.AR, Option.PS):
-            out.append(Strategy([Action(p, o)] * gg.n))
-    return out
+    """Warm-start candidates inside TAG's space (now shared with the
+    runtime feedback loop's re-search seeding)."""
+    from repro.core.strategy import canonical_strategies as _canonical
+    return _canonical(gg.n, topo)
 
 
 def tag_search(gg, topo, *, policy=None, iters: int = 60, seed: int = 0,

@@ -16,7 +16,7 @@ for the three chosen (arch x shape) pairs:
 Each iteration records hypothesis, napkin-math prediction, and the
 measured before/after roofline terms into results/perf_iterations.json.
 
-    PYTHONPATH=src python -m benchmarks.perf_iterations [pair ...]
+    python -m benchmarks.perf_iterations [pair ...]
 """
 import json          # noqa: E402
 import sys           # noqa: E402

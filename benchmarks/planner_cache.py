@@ -6,7 +6,7 @@ playouts spent, and (c) the warm-start contract: on a perturbed topology,
 a search seeded from the cached strategy reaches the cold search's best
 reward in strictly fewer playouts at equal-or-better simulated makespan.
 
-    PYTHONPATH=src python -m benchmarks.planner_cache
+    python -m benchmarks.planner_cache
     # -> results/BENCH_planner.json + CSV rows
 """
 from __future__ import annotations

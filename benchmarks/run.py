@@ -1,8 +1,8 @@
 """Benchmark driver — one entry per paper table/figure + the roofline
 table from the dry-run artifacts. Prints CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run              # all
-    PYTHONPATH=src python -m benchmarks.run fig5 table5  # subset
+    python -m benchmarks.run              # all
+    python -m benchmarks.run fig5 table5  # subset
 """
 from __future__ import annotations
 
@@ -26,7 +26,7 @@ BENCHES = [
     ("table8", "benchmarks.table8_generalization",
      "hold-out model generalization"),
     ("fig7", "benchmarks.fig7_feedback",
-     "GNN loss with/without runtime feedback"),
+     "GNN feedback-feature ablation + runtime calibration/drift loop"),
     ("fig8", "benchmarks.fig8_overhead",
      "strategy generation overhead"),
     ("roofline", "benchmarks.roofline",

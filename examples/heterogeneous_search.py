@@ -2,7 +2,7 @@
 benchmark models over the testbed / cloud / random topologies and print
 a Table-4-style report.
 
-    PYTHONPATH=src python examples/heterogeneous_search.py [model ...]
+    python examples/heterogeneous_search.py [model ...]
 """
 import sys
 

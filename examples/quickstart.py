@@ -2,7 +2,8 @@
 heterogeneous cluster, inspect the deployment plan, then train the model
 for a few steps with the framework's training stack.
 
-    PYTHONPATH=src python examples/quickstart.py
+    pip install -e .   # once
+    python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp

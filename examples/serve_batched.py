@@ -2,7 +2,7 @@
 KV/SSM cache across three architecture families (attention / SSM /
 hybrid).
 
-    PYTHONPATH=src python examples/serve_batched.py
+    python examples/serve_batched.py
 """
 import time
 

@@ -3,7 +3,7 @@ data-parallel MLP on 4 (virtual) devices under each gradient-sync mode and
 show (a) identical losses — SFB is lossless — and (b) the wire-byte
 napkin math that decides when SFB wins.
 
-    PYTHONPATH=src python examples/sfb_gradient_sync.py
+    python examples/sfb_gradient_sync.py
 """
 import os
 

@@ -3,8 +3,8 @@ steps on the synthetic pipeline (the paper's kind is training, so this is
 the e2e deliverable). On this CPU container the default is a scaled-down
 schedule; pass --full for the real thing on accelerators.
 
-    PYTHONPATH=src python examples/train_100m.py             # CPU-sized
-    PYTHONPATH=src python examples/train_100m.py --full      # ~100M params
+    python examples/train_100m.py             # CPU-sized
+    python examples/train_100m.py --full      # ~100M params
 """
 import sys
 

@@ -11,18 +11,33 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-# effective throughput (FLOP/s) and memory for simulated device types —
-# public peak numbers scaled by a utilization factor so heterogeneity
-# RATIOS (what drives the search) match the paper's cluster.
-GPU_SPECS = {
-    "V100": {"flops": 15.7e12 * 0.45, "mem": 32e9},
-    "V100-16": {"flops": 15.7e12 * 0.45, "mem": 16e9},
-    "1080Ti": {"flops": 11.3e12 * 0.40, "mem": 11e9},
-    "P100": {"flops": 9.5e12 * 0.40, "mem": 16e9},
-    "T4": {"flops": 8.1e12 * 0.40, "mem": 16e9},
-    "TPUv5e": {"flops": 197e12 * 0.5, "mem": 16e9},
-    "TPUv4": {"flops": 275e12 * 0.5, "mem": 32e9},
+# public peak throughput (FLOP/s), memory, and the *default* utilization
+# factor per device type. The utilization priors make heterogeneity RATIOS
+# (what drives the search) match the paper's cluster; the runtime feedback
+# subsystem (repro.runtime.calibration) refits them from measured step
+# telemetry and overrides them via CalibrationProfile.apply().
+GPU_PEAKS = {
+    "V100": {"peak_flops": 15.7e12, "util": 0.45, "mem": 32e9},
+    "V100-16": {"peak_flops": 15.7e12, "util": 0.45, "mem": 16e9},
+    "1080Ti": {"peak_flops": 11.3e12, "util": 0.40, "mem": 11e9},
+    "P100": {"peak_flops": 9.5e12, "util": 0.40, "mem": 16e9},
+    "T4": {"peak_flops": 8.1e12, "util": 0.40, "mem": 16e9},
+    "TPUv5e": {"peak_flops": 197e12, "util": 0.5, "mem": 16e9},
+    "TPUv4": {"peak_flops": 275e12, "util": 0.5, "mem": 32e9},
 }
+
+# effective throughput view (peak x default utilization) — kept for
+# backward compatibility with callers that only need effective FLOP/s.
+GPU_SPECS = {t: {"flops": s["peak_flops"] * s["util"], "mem": s["mem"]}
+             for t, s in GPU_PEAKS.items()}
+
+
+def peak_flops(gpu_type: str) -> float:
+    return GPU_PEAKS[gpu_type]["peak_flops"]
+
+
+def default_util(gpu_type: str) -> float:
+    return GPU_PEAKS[gpu_type]["util"]
 
 
 @dataclass
@@ -63,24 +78,37 @@ class Topology:
     def total_devices(self):
         return sum(g.num_gpus for g in self.groups)
 
-    def bw(self, gi: int, gj: int) -> float:
-        """Effective point-to-point bandwidth between device groups."""
+    def nominal_bw(self, gi: int, gj: int) -> float:
+        """Raw (spec-sheet) link bandwidth between device groups, before
+        any efficiency factor. Telemetry records transfers against this
+        value so calibration can fit the achieved fraction."""
         if gi == gj:
-            return self.groups[gi].intra_bw * self.p2p_eff
-        return float(self.inter_bw[gi, gj]) * self.p2p_eff
+            return self.groups[gi].intra_bw
+        return float(self.inter_bw[gi, gj])
 
-    def bottleneck_bw(self, group_ids) -> float:
-        """Effective bottleneck bandwidth for a collective among device
-        groups (SFB's tau / ring AllReduce bandwidth)."""
+    def nominal_bottleneck(self, group_ids):
+        """(raw bottleneck bandwidth, link class) for a collective among
+        device groups; class is "intra" (one machine) or "cross"."""
         gids = sorted(set(group_ids))
         b = min(self.groups[g].intra_bw for g in gids)
-        eff = self.coll_eff_intra
+        cls = "intra"
         for i in gids:
             for j in gids:
                 if i < j:
                     b = min(b, float(self.inter_bw[i, j]))
-                    eff = self.coll_eff_cross
-        return b * eff
+                    cls = "cross"
+        return b, cls
+
+    def bw(self, gi: int, gj: int) -> float:
+        """Effective point-to-point bandwidth between device groups."""
+        return self.nominal_bw(gi, gj) * self.p2p_eff
+
+    def bottleneck_bw(self, group_ids) -> float:
+        """Effective bottleneck bandwidth for a collective among device
+        groups (SFB's tau / ring AllReduce bandwidth)."""
+        b, cls = self.nominal_bottleneck(group_ids)
+        return b * (self.coll_eff_cross if cls == "cross"
+                    else self.coll_eff_intra)
 
 
 def _full_inter(m: int, bw: float) -> np.ndarray:

@@ -41,10 +41,33 @@ class HetGraph:
 
 
 def featurize(gg: GroupedGraph, topo: Topology, strat: Strategy,
-              res: SimResult | None, next_gid: int | None) -> HetGraph:
+              res: SimResult | None, next_gid: int | None,
+              observed: SimResult | None = None) -> HetGraph:
+    """Build the heterogeneous GNN input.
+
+    ``res`` carries the runtime-feedback feature part (Table 1 part 3).
+    When ``observed`` is given — a SimResult-shaped aggregate of REAL step
+    telemetry (``repro.runtime.telemetry.observed_sim_result``) — its
+    measured device/link idle signals overlay the simulator's estimates
+    (paper §4.3). Features real telemetry cannot attribute stay
+    per-candidate from ``res``: group makespan / idle-before-transfer
+    (real executions observe devices, not op groups, unless a record
+    carries group data) and peak-memory fractions (reference-counted in
+    the simulator only) — a wholesale replacement would make every MCTS
+    candidate look identical on exactly the signals that rank them.
+    """
+    # overlay only what the observation actually ATTRIBUTES: a wall-time-
+    # only record (empty busy maps) would otherwise read as "everything
+    # 100% idle" — a fabricated constant wiping the per-candidate signals
+    grp_src = observed if observed is not None and observed.group_finish \
+        else res
     N, M = gg.n, topo.m
     op_x = np.zeros((N, OP_F), np.float32)
     stats = device_group_stats(res, topo) if res is not None else None
+    obs_stats = device_group_stats(observed, topo) \
+        if observed is not None and observed.device_busy else None
+    link_src = observed if observed is not None and observed.link_busy \
+        else res
     for i, grp in enumerate(gg.groups):
         a = strat.actions[i]
         t_avg = grp.flops / _AVG_FLOPS
@@ -52,12 +75,12 @@ def featurize(gg: GroupedGraph, topo: Topology, strat: Strategy,
         op_x[i, 1] = _log1p(grp.param_bytes, 1e6)          # parameter size
         if a is not None:
             op_x[i, 2 + int(a.option)] = 1.0               # replication plan
-        if res is not None:
+        if grp_src is not None:
             op_x[i, 7] = _log1p(
-                res.group_finish.get(i, 0.0) - res.group_start.get(i, 0.0),
-                1e-3)                                       # makespan
+                grp_src.group_finish.get(i, 0.0)
+                - grp_src.group_start.get(i, 0.0), 1e-3)    # makespan
             op_x[i, 8] = _log1p(
-                res.group_idle_before_xfer.get(i, 0.0), 1e-3)
+                grp_src.group_idle_before_xfer.get(i, 0.0), 1e-3)
         op_x[i, 9] = 1.0 if a is not None else 0.0          # decided
         op_x[i, 10] = 1.0 if i == next_gid else 0.0         # produced next
         op_x[i, 11] = 1.0 if grp.has_grad else 0.0
@@ -72,6 +95,8 @@ def featurize(gg: GroupedGraph, topo: Topology, strat: Strategy,
         if stats is not None:
             dev_x[j, 4] = stats[j]["mem_frac"]              # peak memory
             dev_x[j, 5] = stats[j]["idle_frac"]             # idling %
+        if obs_stats is not None:
+            dev_x[j, 5] = obs_stats[j]["idle_frac"]         # measured
     oo_mask = np.zeros((N, N), bool)
     oo_e = np.zeros((N, N, EDGE_F), np.float32)
     for (gi, gj), b in gg.edges.items():
@@ -83,8 +108,8 @@ def featurize(gg: GroupedGraph, topo: Topology, strat: Strategy,
     for i in range(M):
         for j in range(M):
             dd_e[i, j, 0] = _log1p(topo.bw(i, j), 1e9)      # inter-group bw
-            if res is not None:
-                dd_e[i, j, 1] = res.link_idle_frac(i, j)    # link idling %
+            if link_src is not None:
+                dd_e[i, j, 1] = link_src.link_idle_frac(i, j)  # idling %
 
     od_e = np.zeros((N, M, EDGE_F), np.float32)
     for i, a in enumerate(strat.actions):

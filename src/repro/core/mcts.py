@@ -58,11 +58,16 @@ class MCTS:
                  c_puct: float = 1.5, seed: int = 0,
                  record_threshold: int = 8,
                  prior_strategy: Strategy | None = None,
-                 prior_weight: float = 0.5):
+                 prior_weight: float = 0.5,
+                 observed_feedback=None):
         self.gg = gg
         self.topo = topo
         self.policy = policy          # callable(hetgraph, gid, actions)->probs
         self.c = c_puct
+        # runtime feedback (paper §4.3): when a deployed plan's measured
+        # step telemetry is available, its SimResult-shaped aggregate
+        # overrides the simulated feedback features the GNN sees
+        self.observed_feedback = observed_feedback
         self.rng = np.random.default_rng(seed)
         self.order = gg.sorted_by_cost()
         self.record_threshold = record_threshold
@@ -104,7 +109,8 @@ class MCTS:
             probs = np.full(len(actions), 1.0 / len(actions))
         else:
             het = featurize(self.gg, self.topo, vertex.strategy,
-                            vertex.feedback, gid)
+                            vertex.feedback, gid,
+                            observed=self.observed_feedback)
             probs = np.asarray(self.policy(het, gid, actions), np.float64)
             probs = probs / max(probs.sum(), 1e-9)
         return actions, self._blend_prior(gid, actions, probs)
@@ -227,7 +233,8 @@ class MCTS:
                 pi = pi / pi.sum()
                 gid = self.order[v.depth]
                 het = featurize(self.gg, self.topo, v.strategy,
-                                v.feedback, gid)
+                                v.feedback, gid,
+                                observed=self.observed_feedback)
                 records.append((het, gid, v.actions, pi))
             for ch in v.children.values():
                 visit(ch)

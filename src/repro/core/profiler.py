@@ -84,6 +84,87 @@ def ps_round_time(nbytes: float, n_dev: int, bw: float,
     return 2 * (n_dev - 1) / n_dev * nbytes / bw + 2 * latency
 
 
+# ----------------------------------------------- calibration primitives
+# Least-squares fits of the cost model's free parameters from runtime
+# telemetry (repro.runtime.calibration orchestrates these per device type
+# / link class and packages the result as a CalibrationProfile).
+
+def fit_utilization(flops, times, peak_flops: float,
+                    overhead: float = OP_OVERHEAD) -> float | None:
+    """Recover a device type's compute utilization from measured op times.
+
+    Model: t = overhead + flops / (peak_flops * u). Least squares through
+    the origin on (flops, t - overhead) gives 1/(peak*u); inverted and
+    clamped to (0, 1]. Returns ``None`` when the samples carry no signal
+    (all times at/under the launch overhead) — the caller keeps its
+    nominal prior; a fabricated util=1.0 would move the cost model the
+    WRONG way for a cluster that was observed to be slow.
+    """
+    x = np.asarray(flops, float)
+    y = np.asarray(times, float) - overhead
+    denom = float(np.sum(x * x))
+    if denom <= 0:
+        return None
+    slope = float(np.sum(x * y)) / denom
+    if slope <= 0:
+        return None
+    return float(min(1.0 / (slope * peak_flops), 1.0))
+
+
+@dataclass
+class CommFit:
+    """Fitted link-class parameters: t = size_term / eff + lat_mult * alpha,
+    where size_term is the transfer's byte volume normalized by the NOMINAL
+    link bandwidth (so ``eff`` is the achieved fraction of nominal) and
+    lat_mult counts per-transfer latency hits (1 for p2p, 2n for ring
+    AllReduce, 2 for sharded PS)."""
+    eff: float                 # achieved fraction of nominal bandwidth
+    alpha: float               # per-hit latency (s)
+    n_samples: int = 0
+
+    def to_dict(self) -> dict:
+        return {"eff": self.eff, "alpha": self.alpha,
+                "n_samples": self.n_samples}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CommFit":
+        return cls(eff=float(d["eff"]), alpha=float(d["alpha"]),
+                   n_samples=int(d.get("n_samples", 0)))
+
+
+def fit_comm(size_terms, lat_mults, times,
+             prior_alpha: float = 50e-6) -> CommFit | None:
+    """Fit one link class's (eff, alpha) by least squares.
+
+    Design matrix columns are [size_term, lat_mult]; the solution's first
+    coefficient is 1/eff. Falls back to the prior latency (fitting eff
+    alone through the origin) when the system is rank-deficient — e.g. a
+    single sample, or all samples sharing one transfer size. Returns
+    ``None`` when even that carries no signal (non-positive slope): the
+    caller keeps its nominal efficiency rather than adopting a fabricated
+    one.
+    """
+    s = np.asarray(size_terms, float)
+    m = np.asarray(lat_mults, float)
+    y = np.asarray(times, float)
+    eff, alpha = 0.0, prior_alpha
+    if len(s) >= 2:
+        A = np.stack([s, m], axis=1)
+        coef, _, rank, _ = np.linalg.lstsq(A, y, rcond=None)
+        if rank == 2 and coef[0] > 0 and coef[1] >= 0:
+            eff, alpha = 1.0 / float(coef[0]), float(coef[1])
+    if eff <= 0:                       # fall back: alpha pinned to prior
+        resid = y - prior_alpha * m
+        denom = float(np.sum(s * s))
+        slope = float(np.sum(s * resid)) / denom if denom > 0 else 0.0
+        if slope <= 0:
+            return None
+        eff = 1.0 / slope
+        alpha = prior_alpha
+    return CommFit(eff=float(np.clip(eff, 1e-3, 1.0)), alpha=alpha,
+                   n_samples=len(s))
+
+
 # --------------------------------------------------------- measurement
 
 def measure_op(fn, *args, repeats: int = 5) -> float:

@@ -48,7 +48,17 @@ def _dev_speed(topo: Topology, dev: int) -> float:
     return topo.groups[device_group_of(topo, dev)].flops
 
 
-def simulate(tg: TaskGraph, topo: Topology) -> SimResult:
+def simulate(tg: TaskGraph, topo: Topology, profile=None) -> SimResult:
+    """Simulate a TaskGraph on a topology.
+
+    ``profile`` is an optional ``repro.runtime.calibration
+    .CalibrationProfile``: when given, the hard-coded device utilization
+    and link-efficiency constants baked into ``topo`` are replaced by the
+    measurement-fitted values before timing anything (paper §4.3 runtime
+    feedback refining the simulator).
+    """
+    if profile is not None:
+        topo = profile.apply(topo)
     n = len(tg.tasks)
     indeg = [0] * n
     succs: list = [[] for _ in range(n)]

@@ -143,6 +143,28 @@ def candidate_actions(topo: Topology, *, has_grad: bool,
     return actions[:max_actions]
 
 
+def canonical_strategies(n_groups: int, topo: Topology) -> list:
+    """Well-known strategy families inside TAG's space: DP-AR/PS over all
+    devices, each GPU type alone (AR/PS), and the fastest-half prefix.
+    Used as warm-start candidates (benchmarks) and as re-search seeds when
+    the runtime feedback loop recalibrates the cost model — a drifted
+    cluster can move the optimum far from the cached plan."""
+    out = [Strategy([data_parallel_all(topo, o)] * n_groups)
+           for o in (Option.AR, Option.PS)]
+    by_type: dict = {}
+    for g, dg in enumerate(topo.groups):
+        by_type.setdefault(dg.gpu_type, []).append(g)
+    order = sorted(range(topo.m),
+                   key=lambda g: -(topo.groups[g].flops
+                                   * topo.groups[g].num_gpus))
+    subsets = [tuple(sorted(v)) for v in by_type.values()]
+    subsets.append(tuple(sorted(order[:max(1, topo.m // 2)])))
+    for p in subsets:
+        for o in (Option.AR, Option.PS):
+            out.append(Strategy([Action(p, o)] * n_groups))
+    return out
+
+
 def devices_of(topo: Topology, placement) -> list:
     """Flat device ids for a placement (group-major)."""
     out = []

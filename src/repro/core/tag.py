@@ -109,11 +109,13 @@ def optimize(loss_fn, params, batch, topo: Topology, *, name: str = "",
              gg: GroupedGraph | None = None,
              prior_strategy: Strategy | None = None,
              prior_weight: float = 0.5,
-             stop_reward: float | None = None) -> TAGResult:
+             stop_reward: float | None = None,
+             observed_feedback=None) -> TAGResult:
     if gg is None:
         gg = build_grouped(loss_fn, params, batch, name, n_groups)
     mcts = MCTS(gg, topo, policy=policy, seed=seed,
-                prior_strategy=prior_strategy, prior_weight=prior_weight)
+                prior_strategy=prior_strategy, prior_weight=prior_weight,
+                observed_feedback=observed_feedback)
     search = mcts.search(iterations, stop_reward=stop_reward)
     strat = search.best_strategy
     plans = sfb_post_pass(gg, strat, topo) if enable_sfb else {}

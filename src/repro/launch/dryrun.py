@@ -5,8 +5,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 on the production meshes, without allocating real arrays (ShapeDtypeStruct
 stand-ins only), and extract the roofline terms from the compiled artifact.
 
-Run:  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
-      PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+Run:  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+      python -m repro.launch.dryrun --all --out results/dryrun.json
 """
 import argparse
 import json
@@ -131,6 +131,9 @@ def main():
     ap.add_argument("--capacity-factor", type=float, default=0.0)
     ap.add_argument("--profile", action="store_true",
                     help="print per-op byte/flop attribution")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="append each combo's roofline-estimated step "
+                         "record to this measurement log")
     ap.add_argument("--override", action="append", default=[],
                     help="logical=mesh_axis rule override, e.g. embed=data")
     args = ap.parse_args()
@@ -162,6 +165,11 @@ def main():
         cfg_overrides["attn_chunk"] = args.attn_chunk
     if args.capacity_factor:
         cfg_overrides["capacity_factor"] = args.capacity_factor
+    telemetry = None
+    if args.telemetry_dir:
+        from repro.runtime.telemetry import MeasurementStore, StepRecord
+        telemetry = MeasurementStore(args.telemetry_dir)
+
     results = []
     for mesh in meshes:
         for arch, shape in combos:
@@ -171,6 +179,20 @@ def main():
                               options=opts, cfg_overrides=cfg_overrides or None,
                               profile=args.profile)
                 r["ok"] = True
+                if telemetry is not None:
+                    # wall-time-only log of roofline step estimates +
+                    # compile costs per (arch, shape, mesh) — inspectable
+                    # history via MeasurementStore; carries no per-op
+                    # samples, so it does not feed fit_profile. The step
+                    # estimate is the dominant term, matching the
+                    # overlap model behind `dominant`.
+                    telemetry.append(StepRecord(
+                        wall_time=max(r["roofline"].values()),
+                        meta={"arch": arch, "shape": shape,
+                              "mesh": r["mesh"], "launcher": "dryrun",
+                              "dominant": r["dominant"],
+                              "compile_s": r["compile_s"],
+                              "lower_s": r["lower_s"]}))
                 terms = r["roofline"]
                 print(f"OK  {tag}: compile={r['compile_s']}s "
                       f"flops={r['hlo_flops']:.3e} bytes={r['hlo_bytes']:.3e} "

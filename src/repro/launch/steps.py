@@ -78,6 +78,12 @@ def cache_shardings(cfg: ModelConfig, shape: InputShape, rules: AxisRules):
     return jax.tree.map(mk, axes, specs, is_leaf=lambda x: isinstance(x, tuple))
 
 
+def instrument_step(step_fn, timer):
+    """Telemetry seam for the step builders: drop-in wrap of a jitted
+    step with a ``repro.runtime.telemetry.StepTimer`` (see its docs)."""
+    return timer.wrap(step_fn)
+
+
 @dataclass(frozen=True)
 class StepOptions:
     remat: bool = True

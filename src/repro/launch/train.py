@@ -1,6 +1,6 @@
 """End-to-end training driver.
 
-    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+    python -m repro.launch.train --arch yi-6b --smoke \
         --steps 20 --batch 8 --seq 128
 
 Runs the full loop on whatever devices exist (CPU smoke by default):
@@ -45,6 +45,9 @@ def main(argv=None):
     ap.add_argument("--tag-search", action="store_true",
                     help="run TAG strategy search and apply its plan")
     ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--telemetry-dir", default="",
+                    help="record per-step telemetry (runtime feedback "
+                         "subsystem) to this measurement log")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.smoke else get_config(args.arch)
@@ -89,6 +92,14 @@ def main(argv=None):
     options = steps_mod.StepOptions(loss_chunk=args.loss_chunk)
     step_fn = jax.jit(steps_mod.make_train_step(cfg, opt, rules, options))
 
+    timer = None
+    if args.telemetry_dir:
+        from repro.runtime.telemetry import MeasurementStore, StepTimer
+        timer = StepTimer(MeasurementStore(args.telemetry_dir),
+                          meta={"arch": args.arch, "batch": args.batch,
+                                "seq": args.seq, "launcher": "train"})
+        step_fn = steps_mod.instrument_step(step_fn, timer)
+
     losses = []
     t_start = time.time()
     for step in range(start_step, args.steps):
@@ -109,6 +120,9 @@ def main(argv=None):
     n = max(args.steps - start_step, 1)
     print(f"done: {n} steps in {dt:.1f}s ({dt/n*1e3:.0f} ms/step); "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}", flush=True)
+    if timer is not None:
+        print(f"telemetry[{args.telemetry_dir}]: "
+              f"{json.dumps(timer.summary())}", flush=True)
     return losses
 
 

@@ -1,0 +1,193 @@
+"""Cost-model calibration from step telemetry (paper §4.3).
+
+``fit_profile`` turns a set of observed ``StepRecord``s into a
+``CalibrationProfile``:
+
+  * per-device-type compute utilization — least squares of observed op
+    time against ``flops / peak_flops`` (``core.profiler.fit_utilization``)
+  * per-link-class comm regressions — alpha (per-transfer latency) and
+    beta (achieved fraction of nominal bandwidth) fitted jointly per
+    class ``p2p`` / ``intra`` / ``cross`` (``core.profiler.fit_comm``)
+
+``CalibrationProfile.apply(topo)`` produces a topology whose device
+speeds and efficiency factors are the MEASURED ones; ``core.simulator
+.simulate(tg, topo, profile=...)`` and the planner consume it in place of
+the hard-coded ``GPU_PEAKS`` utilization priors and ``Topology``
+effective-bandwidth constants.
+"""
+from __future__ import annotations
+
+import copy
+import json
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.device import GPU_PEAKS, Topology, peak_flops
+from repro.core.profiler import CommFit, fit_comm, fit_utilization
+
+PROFILE_VERSION = 1
+
+# lat_mult per collective kind: how many per-transfer latency hits the
+# cost model charges (see core.profiler allreduce/ps/transfer formulas)
+def _lat_mult(kind: str, n_dev: int) -> float:
+    if kind == "allreduce":
+        return 2.0 * n_dev
+    if kind == "ps":
+        return 2.0
+    return 1.0                       # xfer
+
+
+@dataclass
+class CalibrationProfile:
+    """Measurement-fitted replacements for the simulator's cost constants."""
+    util: dict = field(default_factory=dict)    # gpu_type -> utilization
+    links: dict = field(default_factory=dict)   # p2p|intra|cross -> CommFit
+    latency: float | None = None                # fitted per-transfer alpha
+    n_records: int = 0
+    meta: dict = field(default_factory=dict)
+
+    def device_flops(self, gpu_type: str, default: float) -> float:
+        u = self.util.get(gpu_type)
+        if u is None:
+            return default
+        return peak_flops(gpu_type) * u
+
+    def apply(self, topo: Topology) -> Topology:
+        """Calibrated copy of ``topo``: fitted utilization replaces the
+        ``GPU_PEAKS`` priors, fitted per-class efficiencies replace the
+        ``coll_eff_*`` / ``p2p_eff`` constants, fitted alpha replaces the
+        nominal latency. Unobserved types/classes keep nominal values."""
+        t2 = copy.deepcopy(topo)
+        for g in t2.groups:
+            g.flops = self.device_flops(g.gpu_type, g.flops)
+        if "p2p" in self.links:
+            t2.p2p_eff = self.links["p2p"].eff
+        if "intra" in self.links:
+            t2.coll_eff_intra = self.links["intra"].eff
+        if "cross" in self.links:
+            t2.coll_eff_cross = self.links["cross"].eff
+        if self.latency is not None:
+            t2.latency = self.latency
+        if topo.name:
+            t2.name = f"{topo.name}+calib"
+        return t2
+
+    # ------------------------------------------------------ serialization
+    def to_dict(self) -> dict:
+        return {"version": PROFILE_VERSION, "util": self.util,
+                "links": {k: v.to_dict() for k, v in self.links.items()},
+                "latency": self.latency, "n_records": self.n_records,
+                "meta": self.meta}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CalibrationProfile":
+        if d.get("version") != PROFILE_VERSION:
+            raise ValueError(f"calibration profile schema "
+                             f"{d.get('version')} != {PROFILE_VERSION}")
+        return cls(util={k: float(v) for k, v in d.get("util", {}).items()},
+                   links={k: CommFit.from_dict(v)
+                          for k, v in d.get("links", {}).items()},
+                   latency=d.get("latency"),
+                   n_records=int(d.get("n_records", 0)),
+                   meta=d.get("meta", {}))
+
+    def save(self, path: str):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "CalibrationProfile":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+
+def load_profile(path: str) -> CalibrationProfile:
+    return CalibrationProfile.load(path)
+
+
+def uniform_profile(topo: Topology, scale: float,
+                    n_records: int = 0) -> CalibrationProfile:
+    """Time-only calibration fallback: when telemetry carries wall times
+    but no per-op/per-collective samples, assume a uniform cluster
+    slowdown (``scale`` < 1) or speedup — every compute rate, link
+    efficiency, and (inversely) the latency scales by it, so simulated
+    makespans scale by ~1/scale (modulo the fixed per-op launch
+    overhead)."""
+    scale = float(np.clip(scale, 1e-3, 10.0))
+    util = {}
+    for g in topo.groups:
+        if g.gpu_type in GPU_PEAKS:
+            util[g.gpu_type] = float(np.clip(
+                g.flops * scale / peak_flops(g.gpu_type), 1e-3, 1.0))
+    links = {
+        "p2p": CommFit(eff=float(np.clip(topo.p2p_eff * scale, 1e-3, 1.0)),
+                       alpha=topo.latency / scale),
+        "intra": CommFit(eff=float(np.clip(topo.coll_eff_intra * scale,
+                                           1e-3, 1.0)),
+                         alpha=topo.latency / scale),
+        "cross": CommFit(eff=float(np.clip(topo.coll_eff_cross * scale,
+                                           1e-3, 1.0)),
+                         alpha=topo.latency / scale),
+    }
+    return CalibrationProfile(
+        util=util, links=links, latency=topo.latency / scale,
+        n_records=n_records,
+        meta={"topo": topo.name, "uniform_scale": scale,
+              "compute_samples": 0, "comm_samples": 0})
+
+
+def fit_profile(records: list, topo: Topology) -> CalibrationProfile:
+    """Fit a CalibrationProfile from observed StepRecords.
+
+    ``topo`` is the NOMINAL topology the samples were recorded against —
+    it supplies peak specs, the latency prior for rank-deficient comm
+    fits, and names which device types exist.
+    """
+    by_type: dict = {}
+    for r in records:
+        for s in r.compute:
+            if s.get("flops", 0.0) > 0 and s.get("time", 0.0) > 0:
+                by_type.setdefault(s["gpu_type"], []).append(
+                    (float(s["flops"]), float(s["time"])))
+    util = {}
+    for t, samples in by_type.items():
+        if t not in GPU_PEAKS:
+            continue
+        fl, ti = zip(*samples)
+        u = fit_utilization(fl, ti, peak_flops(t))
+        if u is not None:              # degenerate fit: keep nominal
+            util[t] = u
+
+    by_class: dict = {}
+    for r in records:
+        for s in r.collectives:
+            nb, nd = float(s.get("nbytes", 0.0)), int(s.get("n_dev", 2))
+            bw, dt = float(s.get("nominal_bw", 0.0)), float(
+                s.get("time", 0.0))
+            if nb <= 0 or bw <= 0 or dt <= 0 or nd <= 1:
+                continue
+            kind = s.get("kind", "xfer")
+            ring = 2.0 * (nd - 1) / nd if kind in ("allreduce", "ps") \
+                else 1.0
+            by_class.setdefault(s.get("link", "p2p"), []).append(
+                (ring * nb / bw, _lat_mult(kind, nd), dt))
+    links = {}
+    alphas = []
+    for cls_name, samples in by_class.items():
+        s, m, y = (list(x) for x in zip(*samples))
+        fit = fit_comm(s, m, y, prior_alpha=topo.latency)
+        if fit is None:                # degenerate fit: keep nominal
+            continue
+        links[cls_name] = fit
+        alphas.extend([fit.alpha] * fit.n_samples)
+
+    return CalibrationProfile(
+        util=util, links=links,
+        latency=float(np.mean(alphas)) if alphas else None,
+        n_records=len(records),
+        meta={"topo": topo.name,
+              "compute_samples": int(sum(len(v) for v in by_type.values())),
+              "comm_samples": int(sum(len(v) for v in by_class.values()))})

@@ -1,0 +1,148 @@
+"""FeedbackLoop: the paper's §4.3 closed loop over the planner service.
+
+    loop = FeedbackLoop(service)
+    result = loop.observe(gg, topo, step_record)
+
+Each observation is appended to the measurement log and compared — via an
+EWMA drift detector — against the cached plan's simulated makespan. Past
+the drift threshold the loop:
+
+  1. fits a ``CalibrationProfile`` from this topology's accumulated
+     telemetry (falling back to the triggering record alone),
+  2. invalidates the stale ``PlanStore`` entry,
+  3. re-searches warm-started from the stale strategy, on the CALIBRATED
+     topology, with the observed runtime features routed into the GNN,
+  4. stores and returns the refreshed plan.
+
+The replacement plan's simulated time *under the calibrated cost model*
+is compared against the stale plan re-simulated under the same model, so
+``result.improved`` states whether replanning actually helped.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import tag as tag_mod
+from repro.core.device import Topology
+from repro.core.graph import GroupedGraph
+from repro.core.strategy import canonical_strategies
+from repro.runtime.calibration import (
+    CalibrationProfile, fit_profile, uniform_profile)
+from repro.runtime.drift import DriftDetector, DriftReport
+from repro.runtime.telemetry import (
+    MeasurementStore, StepRecord, observed_sim_result)
+
+
+@dataclass
+class FeedbackResult:
+    kind: str                              # no_plan | ok | replanned
+    report: DriftReport | None = None
+    profile: CalibrationProfile | None = None
+    response: object = None                # PlanResponse of the new plan
+    stale_time: float | None = None        # stale plan under calib model
+    observed: float | None = None
+
+    @property
+    def improved(self) -> bool:
+        return (self.kind == "replanned" and self.response is not None
+                and self.stale_time is not None
+                and self.response.time <= self.stale_time * (1 + 1e-9))
+
+
+class FeedbackLoop:
+    def __init__(self, service, *,
+                 measurements: MeasurementStore | None = None,
+                 drift_threshold: float = 0.25, ewma_alpha: float = 0.5,
+                 min_samples: int = 1, max_history: int = 256):
+        self.service = service
+        self.measurements = measurements if measurements is not None \
+            else MeasurementStore()
+        self.detector = DriftDetector(threshold=drift_threshold,
+                                      alpha=ewma_alpha,
+                                      min_samples=min_samples)
+        # calibration window: newest records consulted on a drift event —
+        # bounds the refit cost on long-lived logs and keeps the profile
+        # tracking the CURRENT cluster, not its whole history
+        self.max_history = max_history
+
+    def observe(self, gg: GroupedGraph, topo: Topology, observation,
+                *, iterations: int = 20, seed: int = 0,
+                enable_sfb: bool = True) -> FeedbackResult:
+        """Feed one observed step back into the planner.
+
+        ``observation`` is a ``StepRecord`` (preferred — its samples feed
+        calibration) or a bare observed step time in seconds.
+        """
+        from repro.service.fingerprint import (
+            fingerprint_grouped, fingerprint_topology)
+        from repro.service.warmstart import adapt_strategy
+
+        graph_fp = fingerprint_grouped(gg)
+        topo_fp = fingerprint_topology(topo)
+        if isinstance(observation, StepRecord):
+            rec = observation
+            rec.graph_fp, rec.topo_fp = graph_fp, topo_fp
+        else:
+            rec = StepRecord(graph_fp=graph_fp, topo_fp=topo_fp,
+                             wall_time=float(observation))
+        self.measurements.append(rec)
+
+        cached = self.service.store.get(graph_fp, topo_fp)
+        if cached is None:
+            return FeedbackResult(kind="no_plan", observed=rec.wall_time)
+
+        report = self.detector.update(graph_fp, topo_fp, cached.time,
+                                      rec.wall_time)
+        if not report.drifted:
+            return FeedbackResult(kind="ok", report=report,
+                                  observed=rec.wall_time)
+
+        # ---- drift: recalibrate, invalidate, warm re-search
+        history = self.measurements.records(
+            graph_fp=graph_fp, topo_fp=topo_fp,
+            limit=self.max_history) or [rec]
+        profile = fit_profile(history, topo)
+        if not profile.util and not profile.links:
+            # wall-time-only telemetry (e.g. the CLI's --observed-time):
+            # fall back to a uniform slowdown matching the smoothed
+            # observation
+            profile = uniform_profile(topo, cached.time / report.ewma
+                                      if report.ewma > 0 else 1.0,
+                                      n_records=len(history))
+        calib_topo = profile.apply(topo)
+
+        stale_strat = cached.strategy_obj()
+        stale_res, _ = tag_mod.evaluate_strategy(
+            gg, stale_strat, calib_topo, sfb=enable_sfb)
+
+        self.service.store.evict(graph_fp=graph_fp, topo_fp=topo_fp)
+        self.detector.reset(graph_fp, topo_fp)
+
+        # Seed the re-search from the best of {stale plan, canonical
+        # families} re-scored under the CALIBRATED model: a drifted
+        # cluster (e.g. congested cross-machine fabric) can move the
+        # optimum far from the cached plan, and MCTS warm-started from a
+        # now-bad prior would stay in its basin.
+        seed_strat, seed_time = adapt_strategy(stale_strat, gg.n,
+                                               calib_topo), \
+            stale_res.makespan
+        for cand in canonical_strategies(gg.n, calib_topo):
+            t = tag_mod.evaluate_strategy(
+                gg, cand, calib_topo, sfb=enable_sfb)[0].makespan
+            if t < seed_time:
+                seed_strat, seed_time = cand, t
+
+        # The refreshed plan is searched under the CALIBRATED topology but
+        # stored under the NOMINAL (deployment) key: that is the key the
+        # next launch plans with and the next observation joins against —
+        # keying by the calibrated fingerprint would orphan the entry and
+        # make every later observe() report "no_plan".
+        resp = self.service.plan_graph(
+            gg, calib_topo, iterations=iterations, seed=seed,
+            enable_sfb=enable_sfb, prior_strategy=seed_strat,
+            fingerprints=(graph_fp, topo_fp),
+            observed_feedback=observed_sim_result(history, topo))
+        return FeedbackResult(
+            kind="replanned", report=report, profile=profile,
+            response=resp, stale_time=stale_res.makespan,
+            observed=rec.wall_time)

@@ -1,0 +1,228 @@
+"""Step telemetry: instrumented timers + an append-only measurement log.
+
+A ``StepRecord`` is one observed training/serving step: wall time plus —
+when the executor can attribute them — per-device busy seconds, per-link
+busy seconds, per-op compute samples, and per-collective transfer
+samples. Records are keyed by the service layer's graph/topology
+fingerprints so the feedback loop can join observations back to cached
+plans.
+
+``MeasurementStore`` persists records as append-only JSONL (one line per
+step, ``fcntl``-locked appends so concurrent launchers can share a log);
+``StepTimer`` wraps a jitted step callable (``launch.steps`` /
+``launch.train`` / ``launch.serve``) and records each invocation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+try:
+    import fcntl
+except ImportError:                       # non-posix: locking degrades
+    fcntl = None
+
+TELEMETRY_FILE = "measurements.jsonl"
+
+
+@dataclass
+class StepRecord:
+    """One observed execution step."""
+    graph_fp: str = ""
+    topo_fp: str = ""
+    step: int = 0
+    wall_time: float = 0.0                # end-to-end step seconds
+    device_busy: dict = field(default_factory=dict)   # str(dev) -> busy s
+    link_busy: dict = field(default_factory=dict)     # "gi-gj" -> busy s
+    compute: list = field(default_factory=list)
+    # compute sample: {"gpu_type", "flops", "time"}
+    collectives: list = field(default_factory=list)
+    # collective sample: {"kind": allreduce|ps|xfer, "nbytes", "n_dev",
+    #                     "nominal_bw" (spec-sheet B/s), "link":
+    #                     intra|cross|p2p, "time"}
+    meta: dict = field(default_factory=dict)
+    ts: float = 0.0                        # record timestamp (epoch s)
+
+    def to_dict(self) -> dict:
+        return {
+            "graph_fp": self.graph_fp, "topo_fp": self.topo_fp,
+            "step": self.step, "wall_time": self.wall_time,
+            "device_busy": self.device_busy, "link_busy": self.link_busy,
+            "compute": self.compute, "collectives": self.collectives,
+            "meta": self.meta, "ts": self.ts,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StepRecord":
+        return cls(
+            graph_fp=d.get("graph_fp", ""), topo_fp=d.get("topo_fp", ""),
+            step=int(d.get("step", 0)),
+            wall_time=float(d.get("wall_time", 0.0)),
+            device_busy=d.get("device_busy", {}),
+            link_busy=d.get("link_busy", {}),
+            compute=d.get("compute", []),
+            collectives=d.get("collectives", []),
+            meta=d.get("meta", {}), ts=float(d.get("ts", 0.0)))
+
+
+class MeasurementStore:
+    """Append-only JSONL measurement log.
+
+    ``path=None`` keeps records in memory only (tests, single-process
+    benchmarks). With a path — a directory (a ``measurements.jsonl`` is
+    created inside) or a ``.jsonl`` file — appends are atomic
+    single-line writes under an ``fcntl`` exclusive lock, so multiple
+    launcher processes can share one log.
+    """
+
+    def __init__(self, path: str | None = None):
+        if path and not path.endswith(".jsonl"):
+            os.makedirs(path, exist_ok=True)
+            path = os.path.join(path, TELEMETRY_FILE)
+        elif path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self.path = path
+        self._mem: list = []
+
+    def append(self, rec: StepRecord) -> StepRecord:
+        if not rec.ts:
+            rec.ts = time.time()
+        if self.path is None:
+            self._mem.append(rec)
+            return rec
+        line = json.dumps(rec.to_dict(), sort_keys=True)
+        with open(self.path, "a") as f:
+            if fcntl is not None:
+                fcntl.flock(f, fcntl.LOCK_EX)
+            try:
+                f.write(line + "\n")
+                f.flush()
+            finally:
+                if fcntl is not None:
+                    fcntl.flock(f, fcntl.LOCK_UN)
+        return rec
+
+    def records(self, *, graph_fp: str | None = None,
+                topo_fp: str | None = None,
+                limit: int | None = None) -> list:
+        """Matching records, oldest first; ``limit`` keeps the newest N.
+
+        Lines are pre-filtered by raw substring before JSON parsing, so
+        fingerprint-keyed queries over a large log only pay full parse
+        cost for matching steps.
+        """
+        if self.path is None:
+            out = list(self._mem)
+        else:
+            out = []
+            if os.path.exists(self.path):
+                with open(self.path) as f:
+                    for line in f:
+                        line = line.strip()
+                        if not line:
+                            continue
+                        if graph_fp is not None and graph_fp not in line:
+                            continue
+                        if topo_fp is not None and topo_fp not in line:
+                            continue
+                        try:
+                            out.append(StepRecord.from_dict(json.loads(line)))
+                        except (ValueError, KeyError):
+                            continue      # torn/garbled line: skip
+        if graph_fp is not None:
+            out = [r for r in out if r.graph_fp == graph_fp]
+        if topo_fp is not None:
+            out = [r for r in out if r.topo_fp == topo_fp]
+        if limit is not None:
+            out = out[-limit:]
+        return out
+
+    def __len__(self):
+        """Total record count — a line count, no JSON parse."""
+        if self.path is None:
+            return len(self._mem)
+        if not os.path.exists(self.path):
+            return 0
+        with open(self.path) as f:
+            return sum(1 for line in f if line.strip())
+
+
+class StepTimer:
+    """Wrap a step callable so every invocation is timed end-to-end and
+    appended to a MeasurementStore.
+
+        timer = StepTimer(store, graph_fp=fp_g, topo_fp=fp_t)
+        step_fn = timer.wrap(step_fn)      # drop-in replacement
+
+    Outputs are blocked until ready (``jax.block_until_ready``) so the
+    recorded wall time covers the actual device execution, not just
+    dispatch.
+    """
+
+    def __init__(self, store: MeasurementStore | None = None,
+                 graph_fp: str = "", topo_fp: str = "",
+                 meta: dict | None = None):
+        self.store = store if store is not None else MeasurementStore()
+        self.graph_fp = graph_fp
+        self.topo_fp = topo_fp
+        self.meta = dict(meta or {})
+        self.wall_times: list = []
+
+    def record(self, wall_time: float, **kw) -> StepRecord:
+        self.wall_times.append(wall_time)
+        rec = StepRecord(graph_fp=self.graph_fp, topo_fp=self.topo_fp,
+                         step=len(self.wall_times) - 1,
+                         wall_time=wall_time, meta=dict(self.meta), **kw)
+        return self.store.append(rec)
+
+    def wrap(self, fn):
+        def timed(*args, **kwargs):
+            import jax
+            t0 = time.perf_counter()
+            out = fn(*args, **kwargs)
+            jax.block_until_ready(out)
+            self.record(time.perf_counter() - t0)
+            return out
+        return timed
+
+    def summary(self) -> dict:
+        w = np.asarray(self.wall_times, float)
+        if w.size == 0:
+            return {"steps": 0}
+        return {"steps": int(w.size), "mean_s": float(w.mean()),
+                "median_s": float(np.median(w)), "p90_s":
+                float(np.percentile(w, 90)), "total_s": float(w.sum())}
+
+
+def observed_sim_result(records: list, topo):
+    """Aggregate observed StepRecords into a ``SimResult``-shaped object.
+
+    The GNN's runtime-feedback features (makespan, per-device idle %,
+    per-link idle %) are normally read off the simulator; this builds the
+    same container from MEASURED telemetry so ``core.features.featurize
+    (..., observed=...)`` feeds real signals to trained policies.
+    Group-level features (per-group makespan, idle-before-transfer) stay
+    empty unless a record carries them — real executions observe devices
+    and links, not op groups.
+    """
+    from repro.core.simulator import SimResult
+    if not records:
+        raise ValueError("observed_sim_result needs at least one record")
+    makespan = float(np.median([r.wall_time for r in records]))
+    dev_busy: dict = {}
+    link_busy: dict = {}
+    n = len(records)
+    for r in records:
+        for d, b in r.device_busy.items():
+            dev_busy[int(d)] = dev_busy.get(int(d), 0.0) + float(b) / n
+        for k, b in r.link_busy.items():
+            gi, gj = (int(x) for x in str(k).split("-"))
+            link_busy[(gi, gj)] = link_busy.get((gi, gj), 0.0) \
+                + float(b) / n
+    return SimResult(
+        makespan=makespan, feasible=True, task_start=[], task_finish=[],
+        device_busy=dev_busy, peak_mem={}, link_busy=link_busy)

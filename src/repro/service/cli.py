@@ -1,9 +1,15 @@
-"""Planner-service CLI.
+"""Planner-service CLI (installed as ``repro-plan``).
 
-    PYTHONPATH=src python -m repro.service.cli plan --model vgg19 \
+    python -m repro.service.cli plan --model vgg19 \
         --topo testbed --iterations 40 --cache-dir .plans
-    PYTHONPATH=src python -m repro.service.cli inspect --cache-dir .plans
-    PYTHONPATH=src python -m repro.service.cli evict --cache-dir .plans --all
+    python -m repro.service.cli inspect --cache-dir .plans
+    python -m repro.service.cli evict --cache-dir .plans --max-age 86400
+    python -m repro.service.cli observe --model vgg19 --topo testbed \
+        --observed-time 0.31 --cache-dir .plans --telemetry-dir .telemetry
+    python -m repro.service.cli calibrate --topo testbed \
+        --telemetry-dir .telemetry --save profile.json
+    python -m repro.service.cli drift --model vgg19 --topo testbed \
+        --observed-time 0.31 --cache-dir .plans
 """
 from __future__ import annotations
 
@@ -31,10 +37,14 @@ def _build_topology(name: str):
     return TOPOLOGIES[name]()
 
 
-def cmd_plan(args) -> int:
+def _build_grouped(args):
     loss_fn, params, batch = build(args.model, batch=args.batch)
     g = trace_training_graph(loss_fn, params, batch, args.model).simplify()
-    gg = group_graph(g, partition(g, args.n_groups))
+    return group_graph(g, partition(g, args.n_groups))
+
+
+def cmd_plan(args) -> int:
+    gg = _build_grouped(args)
     svc = PlannerService(cache_dir=args.cache_dir)
     resp = svc.plan_graph(gg, _build_topology(args.topo),
                           iterations=args.iterations, seed=args.seed,
@@ -64,10 +74,93 @@ def cmd_inspect(args) -> int:
 
 def cmd_evict(args) -> int:
     store = PlanStore(path=args.cache_dir)
-    n = store.evict(graph_fp=args.graph_fp, topo_fp=args.topo_fp,
-                    all=args.all)
+    n = 0
+    if args.graph_fp or args.topo_fp or args.all:
+        n += store.evict(graph_fp=args.graph_fp, topo_fp=args.topo_fp,
+                         all=args.all)
+    if args.max_age is not None or args.max_bytes is not None \
+            or args.per_topo_quota is not None:
+        n += store.evict_expired(max_age_s=args.max_age,
+                                 max_bytes=args.max_bytes,
+                                 per_topo_quota=args.per_topo_quota)
     print(json.dumps({"evicted": n, "remaining": len(store)}))
     return 0
+
+
+def cmd_observe(args) -> int:
+    """Feed an observed step time back: logs telemetry, and past the drift
+    threshold invalidates + replans under a recalibrated cost model."""
+    gg = _build_grouped(args)
+    svc = PlannerService(cache_dir=args.cache_dir,
+                         telemetry_dir=args.telemetry_dir,
+                         drift_threshold=args.threshold)
+    res = svc.observe(gg, _build_topology(args.topo), args.observed_time,
+                      iterations=args.iterations, seed=args.seed)
+    out = {"model": args.model, "topo": args.topo, "kind": res.kind,
+           "observed_s": res.observed}
+    if res.report is not None:
+        out["drift"] = res.report.to_dict()
+    if res.kind == "replanned":
+        out["stale_time_s"] = res.stale_time
+        out["new_time_s"] = res.response.time
+        out["improved"] = res.improved
+        if res.profile is not None:
+            out["profile"] = res.profile.to_dict()
+    print(json.dumps(out, indent=2))
+    return 0
+
+
+def cmd_calibrate(args) -> int:
+    """Fit a CalibrationProfile from accumulated step telemetry."""
+    from repro.runtime.calibration import fit_profile
+    from repro.runtime.telemetry import MeasurementStore
+    from repro.service.fingerprint import fingerprint_topology
+    topo = _build_topology(args.topo)
+    store = MeasurementStore(args.telemetry_dir)
+    recs = store.records(
+        topo_fp=fingerprint_topology(topo) if args.match_topo else None)
+    if not recs:
+        print(json.dumps({"error": "no matching measurements",
+                          "telemetry_dir": args.telemetry_dir}))
+        return 1
+    profile = fit_profile(recs, topo)
+    if args.save:
+        profile.save(args.save)
+    print(json.dumps({"topo": args.topo, "records": len(recs),
+                      "profile": profile.to_dict(),
+                      "saved": args.save or None}, indent=2))
+    return 0
+
+
+def cmd_drift(args) -> int:
+    """Report-only drift check of an observed time vs the cached plan."""
+    from repro.service.fingerprint import (
+        fingerprint_grouped, fingerprint_topology)
+    gg = _build_grouped(args)
+    topo = _build_topology(args.topo)
+    store = PlanStore(path=args.cache_dir)
+    rec = store.get(fingerprint_grouped(gg), fingerprint_topology(topo))
+    if rec is None:
+        print(json.dumps({"error": "no cached plan for (model, topo)"}))
+        return 1
+    drift = abs(args.observed_time - rec.time) / rec.time \
+        if rec.time > 0 else float("inf")
+    print(json.dumps({
+        "model": args.model, "topo": args.topo,
+        "simulated_s": rec.time, "observed_s": args.observed_time,
+        "drift": round(drift, 4), "threshold": args.threshold,
+        "drifted": drift > args.threshold,
+    }, indent=2))
+    return 0
+
+
+def _add_model_args(p):
+    p.add_argument("--model", choices=sorted(ZOO), required=True)
+    p.add_argument("--topo", choices=sorted(TOPOLOGIES), default="testbed")
+    p.add_argument("--n-groups", type=int, default=30)
+    p.add_argument("--batch", type=int, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--cache-dir", default=".plans")
 
 
 def main(argv=None) -> int:
@@ -75,13 +168,8 @@ def main(argv=None) -> int:
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     p = sub.add_parser("plan", help="plan a zoo model on a topology")
-    p.add_argument("--model", choices=sorted(ZOO), required=True)
-    p.add_argument("--topo", choices=sorted(TOPOLOGIES), default="testbed")
+    _add_model_args(p)
     p.add_argument("--iterations", type=int, default=40)
-    p.add_argument("--n-groups", type=int, default=30)
-    p.add_argument("--batch", type=int, default=None)
-    p.add_argument("--seed", type=int, default=0)
-    p.add_argument("--cache-dir", default=".plans")
     p.add_argument("--no-sfb", action="store_true")
     p.set_defaults(fn=cmd_plan)
 
@@ -92,11 +180,47 @@ def main(argv=None) -> int:
     p = sub.add_parser("evict", help="remove cached plan records")
     p.add_argument("--cache-dir", default=".plans")
     p.add_argument("--graph-fp", default=None,
-                   help="full graph fingerprint to evict")
+                   help="graph fingerprint (prefix) to evict")
     p.add_argument("--topo-fp", default=None,
-                   help="full topology fingerprint to evict")
+                   help="topology fingerprint (prefix) to evict")
     p.add_argument("--all", action="store_true")
+    p.add_argument("--max-age", type=float, default=None,
+                   help="evict disk records older than SECONDS")
+    p.add_argument("--max-bytes", type=int, default=None,
+                   help="shrink the disk tier to this many bytes")
+    p.add_argument("--per-topo-quota", type=int, default=None,
+                   help="keep at most N records per topology")
     p.set_defaults(fn=cmd_evict)
+
+    p = sub.add_parser("observe",
+                       help="feed an observed step time into the "
+                            "runtime feedback loop")
+    _add_model_args(p)
+    p.add_argument("--observed-time", type=float, required=True,
+                   help="measured per-step wall time (s)")
+    p.add_argument("--telemetry-dir", default=".telemetry")
+    p.add_argument("--threshold", type=float, default=0.25)
+    p.add_argument("--iterations", type=int, default=20,
+                   help="re-search budget on drift")
+    p.set_defaults(fn=cmd_observe)
+
+    p = sub.add_parser("calibrate",
+                       help="fit a calibration profile from telemetry")
+    p.add_argument("--topo", choices=sorted(TOPOLOGIES), default="testbed")
+    p.add_argument("--telemetry-dir", default=".telemetry")
+    p.add_argument("--match-topo", action="store_true",
+                   help="only use records whose topo fingerprint matches")
+    p.add_argument("--save", default=None,
+                   help="write the fitted profile JSON here")
+    p.set_defaults(fn=cmd_calibrate)
+
+    p = sub.add_parser("drift",
+                       help="report observed-vs-simulated drift "
+                            "(no invalidation)")
+    _add_model_args(p)
+    p.add_argument("--observed-time", type=float, required=True)
+    p.add_argument("--threshold", type=float, default=0.25)
+    p.set_defaults(fn=cmd_drift)
 
     args = ap.parse_args(argv)
     return args.fn(args)

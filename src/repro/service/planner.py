@@ -57,14 +57,27 @@ class PlannerService:
     def __init__(self, *, store: PlanStore | None = None,
                  cache_dir: str | None = None, capacity: int = 256,
                  policy=None, warm_start: bool = True,
-                 prior_weight: float = 0.6):
+                 prior_weight: float = 0.6,
+                 measurements=None, drift_threshold: float = 0.25,
+                 drift_min_samples: int = 1,
+                 drift_ewma_alpha: float = 0.5,
+                 telemetry_dir: str | None = None):
         self.store = store if store is not None \
             else PlanStore(capacity=capacity, path=cache_dir)
         self.policy = policy
         self.warm_start = warm_start
         self.prior_weight = prior_weight
         self._stats = {"requests": 0, "hits": 0, "warm": 0, "cold": 0,
-                       "batch_dedup": 0, "iterations": 0}
+                       "batch_dedup": 0, "iterations": 0,
+                       "observations": 0, "replans": 0}
+        # runtime feedback loop (repro.runtime): created lazily so the
+        # service stays import-light when feedback is unused
+        self._drift_threshold = drift_threshold
+        self._drift_min_samples = drift_min_samples
+        self._drift_ewma_alpha = drift_ewma_alpha
+        self._measurements = measurements
+        self._telemetry_dir = telemetry_dir
+        self._feedback = None
 
     # ----------------------------------------------------------------- API
     def plan(self, loss_fn, params, batch, topo: Topology, *,
@@ -77,13 +90,25 @@ class PlannerService:
                    iterations: int = 60, seed: int = 0,
                    enable_sfb: bool = True,
                    stop_reward: float | None = None,
-                   fingerprints: tuple | None = None) -> PlanResponse:
+                   fingerprints: tuple | None = None,
+                   prior_strategy=None,
+                   observed_feedback=None) -> PlanResponse:
+        """Plan a grouped graph's deployment on a topology.
+
+        ``prior_strategy`` forces a warm start from the given strategy
+        (the feedback loop seeds re-searches from the invalidated plan
+        this way); ``observed_feedback`` is a SimResult-shaped aggregate
+        of measured telemetry routed into the GNN features in place of
+        the simulated runtime feedback.
+        """
         graph_fp, topo_fp = fingerprints or (fingerprint_grouped(gg),
                                              fingerprint_topology(topo))
         struct_fp = topology_structure_fingerprint(topo)
         self._stats["requests"] += 1
 
-        if self.warm_start:
+        if prior_strategy is not None:
+            kind, rec = "forced", None
+        elif self.warm_start:
             kind, rec = find_prior(self.store, graph_fp, topo_fp, struct_fp)
         else:
             rec = self.store.get(graph_fp, topo_fp)
@@ -104,7 +129,10 @@ class PlannerService:
                 best_reward=float(rec.meta.get("best_reward", 0.0)))
 
         prior = None
-        if kind in ("warm_topo", "warm_graph", "stale_hit"):
+        if kind == "forced":
+            prior = prior_strategy
+            self._stats["warm"] += 1
+        elif kind in ("warm_topo", "warm_graph", "stale_hit"):
             prior = adapt_strategy(rec.strategy_obj(), gg.n, topo)
             self._stats["warm"] += 1
         else:
@@ -114,7 +142,7 @@ class PlannerService:
             None, None, None, topo, gg=gg, policy=self.policy,
             iterations=iterations, seed=seed, enable_sfb=enable_sfb,
             prior_strategy=prior, prior_weight=self.prior_weight,
-            stop_reward=stop_reward)
+            stop_reward=stop_reward, observed_feedback=observed_feedback)
         self._stats["iterations"] += res.search.iterations_run
         self.store.put(PlanRecord(
             graph_fp=graph_fp, topo_fp=topo_fp, topo_struct_fp=struct_fp,
@@ -152,6 +180,43 @@ class PlannerService:
                 enable_sfb=req.enable_sfb, stop_reward=req.stop_reward,
                 fingerprints=key))
         return out
+
+    # ------------------------------------------------- runtime feedback
+    def feedback_loop(self):
+        """The lazily-created runtime FeedbackLoop bound to this service
+        (drift detection, cost-model calibration, replanning)."""
+        if self._feedback is None:
+            from repro.runtime.feedback import FeedbackLoop
+            from repro.runtime.telemetry import MeasurementStore
+            meas = self._measurements
+            if meas is None:
+                meas = MeasurementStore(self._telemetry_dir)
+            self._feedback = FeedbackLoop(
+                self, measurements=meas,
+                drift_threshold=self._drift_threshold,
+                ewma_alpha=self._drift_ewma_alpha,
+                min_samples=self._drift_min_samples)
+        return self._feedback
+
+    @property
+    def measurements(self):
+        return self.feedback_loop().measurements
+
+    def observe(self, gg: GroupedGraph, topo: Topology, observation, *,
+                iterations: int = 20, seed: int = 0,
+                enable_sfb: bool = True):
+        """Feed an observed step (a ``repro.runtime.telemetry.StepRecord``
+        or a bare step time in seconds) back into the planner: below the
+        drift threshold this only logs telemetry; past it, the cached plan
+        is invalidated and re-searched warm under a recalibrated cost
+        model. Returns a ``repro.runtime.feedback.FeedbackResult``."""
+        res = self.feedback_loop().observe(
+            gg, topo, observation, iterations=iterations, seed=seed,
+            enable_sfb=enable_sfb)
+        self._stats["observations"] += 1
+        if res.kind == "replanned":
+            self._stats["replans"] += 1
+        return res
 
     def stats(self) -> dict:
         s = dict(self._stats)

@@ -4,19 +4,33 @@ Records are keyed by (graph_fp, topo_fp). The memory tier is a bounded
 LRU; the disk tier (optional ``path=``) holds one JSON file per record
 and survives process restarts — a warm planner re-serves yesterday's
 strategies without a single MCTS playout.
+
+The disk tier is bounded too: age/size budgets and per-topology quotas
+(constructor arguments, enforced on every put, or on demand via
+``evict_expired`` / the CLI's ``evict --max-age/--max-bytes``), and all
+disk mutations take an ``fcntl`` lock on ``.lock`` in the cache
+directory so multiple launcher processes can share one cache.
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
+import time
 from collections import OrderedDict
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 
 from repro.core.sfb import GroupSFB
 from repro.core.strategy import Strategy
 
+try:
+    import fcntl
+except ImportError:                        # non-posix: locking degrades
+    fcntl = None
+
 SCHEMA_VERSION = 1
+LOCK_FILE = ".lock"
 
 
 @dataclass
@@ -78,14 +92,36 @@ def _fname(graph_fp: str, topo_fp: str) -> str:
 
 
 class PlanStore:
-    def __init__(self, capacity: int = 256, path: str | None = None):
+    def __init__(self, capacity: int = 256, path: str | None = None,
+                 max_age_s: float | None = None,
+                 max_bytes: int | None = None,
+                 per_topo_quota: int | None = None):
         self.capacity = capacity
         self.path = path
+        self.max_age_s = max_age_s
+        self.max_bytes = max_bytes
+        self.per_topo_quota = per_topo_quota
         self._mem: OrderedDict = OrderedDict()   # key -> PlanRecord
         self._disk: dict = {}                    # key -> filename
         if path:
             os.makedirs(path, exist_ok=True)
-            self._scan_disk()
+            with self._lock():
+                self._scan_disk()
+
+    # ------------------------------------------------------------- locking
+    @contextmanager
+    def _lock(self, shared: bool = False):
+        """fcntl file lock over the cache directory; no-op for the pure
+        memory tier or where fcntl is unavailable."""
+        if not self.path or fcntl is None:
+            yield
+            return
+        with open(os.path.join(self.path, LOCK_FILE), "a+") as lf:
+            fcntl.flock(lf, fcntl.LOCK_SH if shared else fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(lf, fcntl.LOCK_UN)
 
     # ---------------------------------------------------------------- disk
     def _scan_disk(self):
@@ -120,7 +156,9 @@ class PlanStore:
     def put(self, rec: PlanRecord):
         self._insert_mem(rec)
         if self.path:
-            self._write_file(rec)
+            with self._lock():
+                self._write_file(rec)
+                self._enforce_budgets()
 
     def get(self, graph_fp: str, topo_fp: str) -> PlanRecord | None:
         key = (graph_fp, topo_fp)
@@ -129,14 +167,21 @@ class PlanStore:
             self._mem.move_to_end(key)
             return rec
         fn = self._disk.get(key)
+        if fn is None and self.path:
+            # another process may have written it since our last scan
+            cand = _fname(*key)
+            if os.path.exists(os.path.join(self.path, cand)):
+                fn = cand
         if fn is not None:
             try:
-                rec = self._load_file(fn)
+                with self._lock(shared=True):
+                    rec = self._load_file(fn)
             except (ValueError, KeyError, json.JSONDecodeError, OSError):
-                del self._disk[key]
+                self._disk.pop(key, None)
                 return None
             if rec.key != key:                   # filename prefix collision
                 return None
+            self._disk[key] = fn
             self._insert_mem(rec)                # promote; no disk rewrite
             return rec
         return None
@@ -162,32 +207,116 @@ class PlanStore:
         return self.find()
 
     # -------------------------------------------------------------- evict
+    def _remove_key(self, key) -> bool:
+        """Drop one key from both tiers (caller holds the lock)."""
+        hit = False
+        if key in self._mem:
+            del self._mem[key]
+            hit = True
+        fn = self._disk.pop(key, None)
+        if fn is not None:
+            try:
+                os.remove(os.path.join(self.path, fn))
+            except OSError:
+                pass
+            hit = True
+        return hit
+
     def evict(self, *, graph_fp: str | None = None,
               topo_fp: str | None = None, all: bool = False) -> int:
         """Remove matching records from both tiers. Fingerprints may be
         prefixes (the CLI prints truncated fps)."""
         n = 0
-        for key in list(self._mem) + list(self._disk):
-            if not all:
-                if graph_fp is not None and not key[0].startswith(graph_fp):
-                    continue
-                if topo_fp is not None and not key[1].startswith(topo_fp):
-                    continue
-                if graph_fp is None and topo_fp is None:
-                    continue
-            hit = False
-            if key in self._mem:
-                del self._mem[key]
-                hit = True
-            fn = self._disk.pop(key, None)
-            if fn is not None:
-                try:
-                    os.remove(os.path.join(self.path, fn))
-                except OSError:
-                    pass
-                hit = True
-            n += hit
+        with self._lock():
+            self._scan_disk()      # see records other processes wrote
+            for key in list(self._mem) + list(self._disk):
+                if not all:
+                    if graph_fp is not None \
+                            and not key[0].startswith(graph_fp):
+                        continue
+                    if topo_fp is not None \
+                            and not key[1].startswith(topo_fp):
+                        continue
+                    if graph_fp is None and topo_fp is None:
+                        continue
+                n += self._remove_key(key)
         return n
+
+    # ------------------------------------------------- disk-tier budgets
+    def _disk_entries(self):
+        """[(key, fn, mtime, size)] for the disk tier, newest first."""
+        out = []
+        for key, fn in list(self._disk.items()):
+            p = os.path.join(self.path, fn)
+            try:
+                st = os.stat(p)
+            except OSError:
+                self._disk.pop(key, None)
+                continue
+            out.append((key, fn, st.st_mtime, st.st_size))
+        out.sort(key=lambda e: -e[2])
+        return out
+
+    def _enforce_budgets(self, now: float | None = None) -> int:
+        """Apply age/size/per-topology budgets to the disk tier (caller
+        holds the lock). Victims leave both tiers; newest records win.
+        The directory is rescanned first so budgets cover records other
+        processes sharing the cache wrote since our last scan."""
+        if not self.path:
+            return 0
+        if self.max_age_s is None and self.max_bytes is None \
+                and self.per_topo_quota is None:
+            return 0
+        self._scan_disk()
+        now = time.time() if now is None else now
+        entries = self._disk_entries()
+        victims = set()
+        if self.max_age_s is not None:
+            victims |= {key for key, _, mtime, _ in entries
+                        if now - mtime > self.max_age_s}
+        if self.per_topo_quota is not None:
+            seen: dict = {}
+            for key, _, _, _ in entries:        # newest first
+                if key in victims:
+                    continue
+                seen[key[1]] = seen.get(key[1], 0) + 1
+                if seen[key[1]] > self.per_topo_quota:
+                    victims.add(key)
+        if self.max_bytes is not None:
+            total = sum(size for key, _, _, size in entries
+                        if key not in victims)
+            for key, _, _, size in reversed(entries):   # oldest first
+                if total <= self.max_bytes:
+                    break
+                if key in victims:
+                    continue
+                victims.add(key)
+                total -= size
+        n = 0
+        for key in victims:
+            n += self._remove_key(key)
+        return n
+
+    def evict_expired(self, *, max_age_s: float | None = None,
+                      max_bytes: int | None = None,
+                      per_topo_quota: int | None = None,
+                      now: float | None = None) -> int:
+        """One-shot disk-tier cleanup under explicit budgets (the CLI's
+        ``evict --max-age/--max-bytes/--per-topo-quota``). Arguments
+        default to the store's standing budgets."""
+        saved = (self.max_age_s, self.max_bytes, self.per_topo_quota)
+        if max_age_s is not None:
+            self.max_age_s = max_age_s
+        if max_bytes is not None:
+            self.max_bytes = max_bytes
+        if per_topo_quota is not None:
+            self.per_topo_quota = per_topo_quota
+        try:
+            with self._lock():
+                return self._enforce_budgets(now=now)
+        finally:
+            (self.max_age_s, self.max_bytes,
+             self.per_topo_quota) = saved
 
     def __len__(self):
         return len(set(self._mem) | set(self._disk))

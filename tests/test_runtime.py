@@ -1,0 +1,338 @@
+"""Runtime feedback subsystem: telemetry round trips, calibration fitting
+recovering known ground-truth parameters, drift detection, and the
+drift-triggered invalidate -> recalibrate -> replan loop (ISSUE
+acceptance criteria)."""
+import copy
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.compiler import TaskGraph, compile_strategy
+from repro.core.device import testbed as make_testbed
+from repro.core.features import featurize
+from repro.core.graph import group_graph
+from repro.core.jax_export import trace_training_graph
+from repro.core.partition import partition
+from repro.core.profiler import (
+    OP_OVERHEAD, allreduce_time, fit_comm, fit_utilization, transfer_time)
+from repro.core.simulator import simulate
+from repro.core.zoo import build
+from repro.runtime import (
+    DriftDetector, MeasurementStore, StepRecord, StepTimer, execute_plan,
+    fit_profile, observed_sim_result)
+from repro.runtime.calibration import CalibrationProfile
+from repro.service import PlannerService
+
+
+@pytest.fixture(scope="module")
+def gg():
+    loss_fn, params, batch = build("bert_small")
+    g = trace_training_graph(loss_fn, params, batch, "bert").simplify()
+    return group_graph(g, partition(g, 10))
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return make_testbed()
+
+
+def _true_cluster(topo, util_scale=0.5, cross_scale=0.25, lat_scale=3.0):
+    t2 = copy.deepcopy(topo)
+    for g in t2.groups:
+        g.flops *= util_scale
+    t2.coll_eff_cross *= cross_scale
+    t2.p2p_eff *= 0.8
+    t2.latency *= lat_scale
+    return t2
+
+
+def _toy_taskgraph(topo):
+    """Hand-built TaskGraph exercising every task kind (no tracing).
+    Each link class gets >= 2 samples of distinct size so the joint
+    (eff, alpha) regressions are full-rank."""
+    tg = TaskGraph()
+    for d in range(6):
+        tg.add(kind="compute", group=0, device=d, flops=1e9 * (d + 1))
+    tg.add(kind="xfer", group=0, src=0, dst=5, nbytes=3e6, deps=[0])
+    tg.add(kind="xfer", group=0, src=1, dst=4, nbytes=9e6, deps=[1])
+    tg.add(kind="allreduce", group=0, nbytes=8e6,
+           devices=tuple(range(4)), deps=[6])         # intra (V100 group)
+    tg.add(kind="allreduce", group=0, nbytes=24e6,
+           devices=(0, 1, 2), deps=[7])               # intra, other size
+    tg.add(kind="allreduce", group=0, nbytes=2e6,
+           devices=(0, 4, 5), deps=[8])               # cross machines
+    tg.add(kind="ps", group=0, nbytes=6e6,
+           devices=(0, 1, 4, 5), deps=[9])            # cross, other size
+    return tg
+
+
+# ---------------------------------------------------- fitting primitives
+
+def test_fit_utilization_recovers_ground_truth():
+    peak, true_u = 10e12, 0.37
+    flops = np.array([1e9, 5e9, 2e10, 8e10])
+    times = OP_OVERHEAD + flops / (peak * true_u)
+    assert fit_utilization(flops, times, peak) == pytest.approx(true_u)
+
+
+def test_fit_comm_recovers_ground_truth():
+    b_nom, true_eff, true_alpha = 12.5e9, 0.15, 2e-4
+    sizes = np.array([1e6, 4e6, 1.6e7, 6.4e7])
+    n_dev = np.array([4, 8, 4, 16])
+    s = 2 * (n_dev - 1) / n_dev * sizes / b_nom
+    m = 2.0 * n_dev
+    t = s / true_eff + m * true_alpha
+    fit = fit_comm(s, m, t)
+    assert fit.eff == pytest.approx(true_eff)
+    assert fit.alpha == pytest.approx(true_alpha)
+
+
+def test_fit_comm_single_sample_falls_back_to_prior_latency():
+    fit = fit_comm([1e-3], [2.0], [1e-2], prior_alpha=50e-6)
+    assert fit.alpha == 50e-6
+    # eff absorbs the residual: model reproduces the observed time
+    assert 1e-3 / fit.eff + 2.0 * fit.alpha == pytest.approx(1e-2)
+
+
+def test_degenerate_fits_return_none_not_peak_speed():
+    """Samples with no signal must NOT calibrate the model toward peak
+    speed — the caller keeps its nominal prior instead."""
+    # all op times at/below the launch overhead: no compute signal
+    assert fit_utilization([1e9, 2e9], [OP_OVERHEAD, OP_OVERHEAD],
+                           10e12) is None
+    # observed comm times below even the latency term: no bandwidth signal
+    assert fit_comm([1e-3, 2e-3], [2.0, 2.0], [1e-5, 1e-5],
+                    prior_alpha=50e-6) is None
+    # fit_profile skips the degenerate samples and keeps nominal values
+    from repro.runtime.calibration import fit_profile as _fp
+    t = make_testbed()
+    rec = StepRecord(compute=[{"gpu_type": "V100", "flops": 1e9,
+                               "time": OP_OVERHEAD}],
+                     collectives=[{"kind": "allreduce", "nbytes": 1e6,
+                                   "n_dev": 4, "nominal_bw": 12.5e9,
+                                   "link": "cross", "time": 1e-9}])
+    prof = _fp([rec], t)
+    assert prof.util == {} and prof.links == {}
+
+
+# ------------------------------------------------ executor + calibration
+
+def test_calibration_recovers_perturbed_cluster(topo):
+    """Synthetic measurements from a known-slower cluster recover the
+    ground-truth utilization and link parameters (ISSUE satellite)."""
+    true = _true_cluster(topo)
+    tg = _toy_taskgraph(topo)
+    recs = [execute_plan(tg, true, nominal_topo=topo, step=i)
+            for i in range(2)]
+    profile = fit_profile(recs, topo)
+
+    # per-type utilization: prior util x slowdown, exactly
+    from repro.core.device import GPU_PEAKS
+    for t, u in profile.util.items():
+        assert u == pytest.approx(GPU_PEAKS[t]["util"] * 0.5, rel=1e-6)
+    # cross-collective efficiency and latency recovered jointly
+    assert profile.links["cross"].eff == pytest.approx(
+        true.coll_eff_cross, rel=1e-6)
+    assert profile.links["cross"].alpha == pytest.approx(
+        true.latency, rel=1e-6)
+
+    # calibrated simulation matches the observed cluster exactly
+    obs = simulate(tg, true).makespan
+    calib = simulate(tg, topo, profile=profile).makespan
+    assert calib == pytest.approx(obs, rel=1e-9)
+    # explicit-apply path is identical to the profile= kwarg
+    assert simulate(tg, profile.apply(topo)).makespan \
+        == pytest.approx(calib, rel=1e-12)
+
+
+def test_calibration_closes_error_2x(topo):
+    true = _true_cluster(topo)
+    tg = _toy_taskgraph(topo)
+    recs = [execute_plan(tg, true, nominal_topo=topo, step=i,
+                         noise=0.01, seed=i) for i in range(6)]
+    obs = float(np.median([r.wall_time for r in recs]))
+    err_before = abs(simulate(tg, topo).makespan - obs) / obs
+    profile = fit_profile(recs, topo)
+    err_after = abs(simulate(tg, topo, profile=profile).makespan
+                    - obs) / obs
+    assert err_before >= 2.0 * err_after
+
+
+def test_profile_serialization_roundtrip(tmp_path, topo):
+    true = _true_cluster(topo)
+    tg = _toy_taskgraph(topo)
+    profile = fit_profile([execute_plan(tg, true, nominal_topo=topo)],
+                          topo)
+    p = tmp_path / "profile.json"
+    profile.save(str(p))
+    back = CalibrationProfile.load(str(p))
+    assert back.util == profile.util
+    assert back.latency == profile.latency
+    assert {k: v.to_dict() for k, v in back.links.items()} \
+        == {k: v.to_dict() for k, v in profile.links.items()}
+    # bad schema rejected
+    with pytest.raises(ValueError):
+        CalibrationProfile.from_dict({"version": 99})
+
+
+def test_uniform_profile_scales_makespan_exactly(topo):
+    from repro.runtime import uniform_profile
+    tg = _toy_taskgraph(topo)
+    base = simulate(tg, topo).makespan
+    half = simulate(tg, topo, profile=uniform_profile(topo, 0.5)).makespan
+    # near-exact: only the fixed per-op launch overhead doesn't scale
+    assert half == pytest.approx(2.0 * base, rel=1e-2)
+
+
+def test_observe_time_only_falls_back_to_uniform_calibration(gg, topo):
+    """A bare observed step time (no samples) still calibrates: the
+    uniform-slowdown profile makes the simulator match the observation."""
+    svc = PlannerService(drift_threshold=0.25)
+    resp = svc.plan_graph(gg, topo, iterations=6, seed=0)
+    res = svc.observe(gg, topo, resp.time * 2.0, iterations=6)
+    assert res.kind == "replanned"
+    assert res.profile.meta.get("uniform_scale") == pytest.approx(0.5)
+    # near-exact: per-op launch overhead doesn't scale
+    assert res.stale_time == pytest.approx(resp.time * 2.0, rel=1e-3)
+
+
+# ------------------------------------------------------------- telemetry
+
+def test_measurement_store_jsonl_roundtrip(tmp_path):
+    store = MeasurementStore(str(tmp_path))
+    for i in range(3):
+        store.append(StepRecord(graph_fp="g1", topo_fp=f"t{i % 2}",
+                                step=i, wall_time=0.1 * (i + 1)))
+    # fresh handle (new process equivalent) reads everything back
+    store2 = MeasurementStore(str(tmp_path))
+    assert len(store2) == 3
+    assert [r.step for r in store2.records(topo_fp="t0")] == [0, 2]
+    assert [r.step for r in store2.records(limit=1)] == [2]
+    assert store2.records()[0].wall_time == pytest.approx(0.1)
+
+
+def test_step_timer_records_wall_times():
+    store = MeasurementStore()
+    timer = StepTimer(store, graph_fp="g", topo_fp="t",
+                      meta={"launcher": "test"})
+    fn = timer.wrap(lambda x: x + 1)
+    assert fn(1) == 2 and fn(2) == 3
+    assert len(store) == 2
+    recs = store.records()
+    assert all(r.wall_time > 0 for r in recs)
+    assert recs[1].step == 1 and recs[0].meta["launcher"] == "test"
+    assert timer.summary()["steps"] == 2
+
+
+def test_observed_sim_result_aggregates(topo):
+    recs = [StepRecord(wall_time=w, device_busy={"0": 0.5 * w},
+                       link_busy={"0-1": 0.25 * w})
+            for w in (1.0, 2.0, 3.0)]
+    res = observed_sim_result(recs, topo)
+    assert res.makespan == 2.0                      # median
+    assert res.device_busy[0] == pytest.approx(1.0)  # mean busy
+    assert res.link_idle_frac(0, 1) == pytest.approx(1 - 0.5 / 2.0)
+    with pytest.raises(ValueError):
+        observed_sim_result([], topo)
+
+
+def test_featurize_uses_observed_feedback(gg, topo):
+    from repro.core.strategy import data_parallel_all, Strategy
+    strat = Strategy([data_parallel_all(topo)] * gg.n)
+    res = simulate(compile_strategy(gg, strat, topo), topo)
+    W = res.makespan * 3.0
+    observed = observed_sim_result(
+        [StepRecord(wall_time=W, device_busy={"0": 0.1 * W})], topo)
+    het_sim = featurize(gg, topo, strat, res, 0)
+    het_obs = featurize(gg, topo, strat, res, 0, observed=observed)
+    # device idle % comes from the measured busy attribution
+    assert het_obs.dev_x[0, 5] != pytest.approx(float(het_sim.dev_x[0, 5]))
+    # wall-time-only observation (no attribution) must NOT overlay a
+    # fabricated 100%-idle constant — simulated signals are kept
+    bare = observed_sim_result([StepRecord(wall_time=W)], topo)
+    het_bare = featurize(gg, topo, strat, res, 0, observed=bare)
+    np.testing.assert_allclose(het_bare.dev_x[:, 5], het_sim.dev_x[:, 5])
+    np.testing.assert_allclose(het_bare.dd_e[:, :, 1],
+                               het_sim.dd_e[:, :, 1])
+    # signals telemetry cannot attribute stay per-candidate from the
+    # simulator: group makespan/idle features and peak-memory fractions
+    np.testing.assert_allclose(het_obs.op_x[:, 7], het_sim.op_x[:, 7])
+    np.testing.assert_allclose(het_obs.op_x[:, 8], het_sim.op_x[:, 8])
+    np.testing.assert_allclose(het_obs.dev_x[:, 4], het_sim.dev_x[:, 4])
+    assert het_obs.op_x[:, 7].max() > 0
+
+
+# ------------------------------------------------------------------ drift
+
+def test_drift_detector_thresholds():
+    det = DriftDetector(threshold=0.25, alpha=0.5, min_samples=1)
+    ok = det.update("g", "t", 1.0, 1.1)
+    assert not ok.drifted and ok.drift == pytest.approx(0.1)
+    bad = det.update("g", "t", 1.0, 2.1)       # ewma = 1.6
+    assert bad.drifted and bad.ewma == pytest.approx(1.6)
+    det.reset("g", "t")
+    assert det.update("g", "t", 1.0, 1.1).n_obs == 1
+
+
+def test_drift_detector_min_samples_damps_single_spike():
+    det = DriftDetector(threshold=0.25, min_samples=2)
+    assert not det.update("g", "t", 1.0, 5.0).drifted   # one spike
+    assert det.update("g", "t", 1.0, 5.0).drifted       # sustained
+
+
+# ------------------------------------- observe -> invalidate -> replan
+
+def test_observe_below_threshold_keeps_plan(gg, topo):
+    svc = PlannerService(drift_threshold=0.25)
+    resp = svc.plan_graph(gg, topo, iterations=6, seed=0)
+    res = svc.observe(gg, topo, resp.time * 1.1)
+    assert res.kind == "ok" and not res.report.drifted
+    assert svc.store.get(resp.graph_fp, resp.topo_fp) is not None
+    assert svc.stats()["replans"] == 0
+
+
+def test_observe_without_plan_is_noop(gg, topo):
+    svc = PlannerService()
+    res = svc.observe(gg, topo, 1.0)
+    assert res.kind == "no_plan"
+    assert len(svc.measurements) == 1          # telemetry still logged
+
+
+def test_observe_drift_evicts_and_replans(gg, topo):
+    """ISSUE acceptance: a drifted observation round-trips through
+    observe() -> invalidate -> warm re-search under the recalibrated
+    model, to a plan no worse than the stale one re-scored there."""
+    svc = PlannerService(drift_threshold=0.25)
+    resp = svc.plan_graph(gg, topo, iterations=6, seed=0)
+
+    true = _true_cluster(topo)
+    tg = compile_strategy(gg, resp.strategy, topo,
+                          sfb_plans=resp.sfb_plans)
+    rec = execute_plan(tg, true, nominal_topo=topo)
+    assert rec.wall_time > resp.time * 1.25    # scenario sanity
+
+    res = svc.observe(gg, topo, rec, iterations=6)
+    assert res.kind == "replanned" and res.report.drifted
+    # stale record replaced IN PLACE: the refreshed plan (searched under
+    # the calibrated model) is stored under the nominal deployment key,
+    # so the next launch hits it and the next observation joins it
+    assert res.response.graph_fp == resp.graph_fp
+    assert res.response.topo_fp == resp.topo_fp
+    refreshed = svc.store.get(resp.graph_fp, resp.topo_fp)
+    assert refreshed is not None
+    assert refreshed.time == pytest.approx(res.response.time)
+    assert refreshed.time != pytest.approx(resp.time)
+    assert res.response.source == "warm"
+    # a follow-up observation consistent with the refreshed plan's
+    # calibrated expectation is below threshold -> plan kept
+    follow = svc.observe(gg, topo, res.response.time * 1.02, iterations=6)
+    assert follow.kind == "ok"
+    # replanned plan no worse than the stale plan under the calibrated
+    # cost model, and the calibrated model tracks the observation
+    assert res.response.time <= res.stale_time * (1 + 1e-9)
+    assert res.improved
+    calib = res.profile.apply(topo)
+    assert simulate(tg, calib).makespan \
+        == pytest.approx(rec.wall_time, rel=1e-6)
+    assert svc.stats()["replans"] == 1 and svc.stats()["observations"] == 2
