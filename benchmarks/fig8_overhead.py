@@ -43,11 +43,75 @@ def run(n_topos=3, iters=30):
     return {"tag": tag_t, "heterog_like": heterog_t, "hdp_like": hdp_t}
 
 
+def run_expansion_cache(n_topos=2, iters=30, warmup=True):
+    """Per-expansion GNN cost: embedding-memoized policy (gnn_forward once
+    per episode, thin decoder per expansion) vs the pre-memoization policy
+    (full per-vertex featurize + forward on every expansion). Reports both
+    end-to-end search time (simulation-dominated, so the gain there is
+    modest) and the isolated per-expansion policy query cost (the thing
+    memoization actually collapses)."""
+    rng = np.random.default_rng(1)
+    gg = grouped("bert_small")
+    state = init_trainer(seed=0)
+    train_policy(state, [gg], steps=2, mcts_iters=8, seed=0)
+    topos = [random_topology(rng) for _ in range(n_topos)]
+    out = {}
+    for label, cache in (("cached", True), ("uncached", False)):
+        policy = make_policy(state.cfg, state.params,
+                             cache_embeddings=cache)
+        if warmup:       # compile outside the timed region
+            MCTS(gg, topos[0], policy=policy, seed=99).search(2)
+        t0 = time.time()
+        for k, topo in enumerate(topos):
+            MCTS(gg, topo, policy=policy, seed=k).search(iters)
+        out[label] = (time.time() - t0) / n_topos
+    out["speedup"] = out["uncached"] / max(out["cached"], 1e-9)
+
+    # isolated per-expansion policy cost (what MCTS._priors pays per
+    # vertex): cached = decoder on memoized embeddings; uncached = full
+    # per-vertex featurize + gnn_forward
+    from repro.core.features import featurize
+    from repro.core.strategy import Strategy, candidate_actions
+    topo = topos[0]
+    actions = candidate_actions(topo, has_grad=True)
+    het = featurize(gg, topo, Strategy.empty(gg.n), None, 0)
+    n_calls = 50
+    cached_pol = make_policy(state.cfg, state.params)
+    uncached_pol = make_policy(state.cfg, state.params,
+                               cache_embeddings=False)
+    cached_pol(het, 0, actions)          # warm the embedding cache + jits
+    uncached_pol(het, 0, actions)
+    t0 = time.time()
+    for k in range(n_calls):
+        cached_pol(het, k % gg.n, actions)
+    out["policy_ms_cached"] = (time.time() - t0) / n_calls * 1e3
+    t0 = time.time()
+    for k in range(n_calls):
+        v = featurize(gg, topo, Strategy.empty(gg.n), None, k % gg.n)
+        uncached_pol(v, k % gg.n, actions)
+    out["policy_ms_uncached"] = (time.time() - t0) / n_calls * 1e3
+    out["policy_speedup"] = out["policy_ms_uncached"] \
+        / max(out["policy_ms_cached"], 1e-9)
+    return out
+
+
 def main():
     r = run()
     print("fig8,system,strategy_generation_seconds")
     for k, v in r.items():
         print(fmt_row("fig8", k, f"{v:.1f}"))
+    c = run_expansion_cache()
+    print("fig8,expansion_policy,search_seconds")
+    for k in ("cached", "uncached"):
+        print(fmt_row("fig8", f"expansion_{k}", f"{c[k]:.2f}"))
+    print(fmt_row("fig8", "expansion_cache_speedup", f"{c['speedup']:.2f}"))
+    print(fmt_row("fig8", "policy_query_ms_cached",
+                  f"{c['policy_ms_cached']:.2f}"))
+    print(fmt_row("fig8", "policy_query_ms_uncached",
+                  f"{c['policy_ms_uncached']:.2f}"))
+    print(fmt_row("fig8", "policy_query_speedup",
+                  f"{c['policy_speedup']:.1f}"))
+    r["expansion_cache"] = c
     return r
 
 

@@ -1,0 +1,200 @@
+"""Policy-transfer benchmark: Table 8's generalization as a SERVICE
+feature (paper §5.2).
+
+Trains a GNN policy on a corpus of zoo models, registers it in a
+``PolicyRegistry``, and measures on models OUTSIDE the corpus:
+
+  (a) guided vs unguided cold search — a fresh ``PlannerService`` that
+      loads the registered checkpoint must reach the unguided cold
+      search's best reward in <= half the playouts (acceptance), and at
+      the full budget should EXCEED it (the unguided search's 40 uniform
+      playouts typically never leave the DP baseline; trained priors
+      find 1.4-2.2x strategies on held-out conv nets);
+  (b) structural-similarity warm-start — an unseen model on an unseen
+      topology seeds from the structurally nearest cached plan
+      (``find_prior`` kind "warm_struct") and beats an equal-budget
+      unguided cold search outright (lower simulated makespan).
+
+All requests run with ``enable_sfb=False``: the SFB post-pass is
+orthogonal to search quality (it rescues even the never-searched DP
+baseline, Table 5) and would blur what the trained priors contribute;
+without it, MCTS reward and final simulated makespan measure the same
+thing.
+
+    python -m benchmarks.policy_transfer
+    # -> results/BENCH_policy.json + CSV rows
+"""
+from __future__ import annotations
+
+import copy
+import json
+import os
+import tempfile
+import time
+
+from benchmarks.common import fmt_row, grouped, testbed
+from repro.core.trainer import init_trainer, train_policy
+from repro.service import PlannerService, PolicyRegistry
+from repro.service.fingerprint import (
+    fingerprint_grouped_cached, structural_features)
+
+TRAIN_MODELS = ["bert_small", "resnet101"]
+HELD_OUT = ["vgg19", "inception_v3", "transformer"]
+STRUCT_MODEL = "vgg19"      # nearest corpus donor: resnet101 (conv family)
+
+
+def perturbed(topo, scale: float):
+    t2 = copy.deepcopy(topo)
+    t2.inter_bw = topo.inter_bw * scale
+    t2.name = f"{topo.name}-x{scale}"
+    return t2
+
+
+def train_registry(reg_dir: str, graphs: dict, *, steps: int,
+                   mcts_iters: int, topo, seed: int = 0,
+                   name: str = "corpus") -> PolicyRegistry:
+    """Train on the corpus graphs and register the checkpoint."""
+    state = init_trainer(seed=seed)
+    corpus = [graphs[m] for m in TRAIN_MODELS]
+    t0 = time.time()
+    state = train_policy(state, corpus, steps=steps, mcts_iters=mcts_iters,
+                         seed=seed, topologies=[topo])
+    train_s = time.time() - t0
+    reg = PolicyRegistry(reg_dir)
+    reg.save(name, state.cfg, state.params,
+             corpus=[fingerprint_grouped_cached(g) for g in corpus],
+             corpus_features=[structural_features(g) for g in corpus],
+             meta={"models": TRAIN_MODELS, "steps": steps,
+                   "mcts_iters": mcts_iters, "seed": seed,
+                   "train_seconds": train_s})
+    return reg
+
+
+def run(iterations: int = 40, n_groups: int = 20, train_steps: int = 16,
+        train_mcts_iters: int = 40, seed: int = 0) -> dict:
+    topo = testbed()
+    graphs = {m: grouped(m, n_groups=n_groups)
+              for m in TRAIN_MODELS + HELD_OUT}
+    reg_dir = os.path.join(tempfile.mkdtemp(prefix="policy-bench-"),
+                           "policies")
+    reg = train_registry(reg_dir, graphs, steps=train_steps,
+                         mcts_iters=train_mcts_iters, topo=topo, seed=seed)
+
+    # ---- (a) guided vs unguided cold search on held-out models.
+    # Every service below starts with an EMPTY plan store, so each search
+    # is genuinely cold (no warm-start donors) — only the priors differ.
+    transfer = []
+    print(fmt_row("policy,model", "unguided_best", "guided_best",
+                  "match_iters", "halved", "exceeded"))
+    for model in HELD_OUT:
+        gg = graphs[model]
+        unguided = PlannerService(use_registry=False).plan_graph(
+            gg, topo, iterations=iterations, seed=seed, enable_sfb=False)
+        # playouts for the guided search to MATCH the unguided best
+        matched = PlannerService(registry=reg).plan_graph(
+            gg, topo, iterations=iterations, seed=seed, enable_sfb=False,
+            stop_reward=unguided.best_reward)
+        # full-budget guided search: how far past it do trained priors go
+        guided = PlannerService(registry=reg).plan_graph(
+            gg, topo, iterations=iterations, seed=seed, enable_sfb=False)
+        row = {
+            "model": model,
+            "unguided_best_reward": unguided.best_reward,
+            "unguided_iters": unguided.iterations_run,
+            "guided_iters_to_match": matched.iterations_run,
+            "guided_best_reward": guided.best_reward,
+            "guided_sim_time_s": guided.time,
+            "unguided_sim_time_s": unguided.time,
+            "policy": guided.policy,
+            # "halved" alone is vacuous when the unguided search never
+            # leaves the DP baseline (stop_reward=1.0 is met by the root
+            # evaluation at 0 playouts), so a row only counts when the
+            # full-budget guided search is also no worse than unguided —
+            # and the CI gate pairs halved_count with exceeded_count,
+            # which demands a strict win somewhere.
+            "halved": matched.iterations_run * 2 <= unguided.iterations_run
+            and guided.best_reward >= unguided.best_reward - 1e-9,
+            "exceeded": guided.best_reward
+            > unguided.best_reward + 1e-9,
+        }
+        transfer.append(row)
+        print(fmt_row("policy", model,
+                      f"{row['unguided_best_reward']:.3f}",
+                      f"{row['guided_best_reward']:.3f}",
+                      row["guided_iters_to_match"], row["halved"],
+                      row["exceeded"]))
+
+    # ---- (b) structural warm-start on an unseen (model, topology) pair:
+    # corpus plans cached on the training topology, request on a
+    # bandwidth-perturbed one -> no exact/same-graph/same-topo donor, the
+    # structural tier must carry. Three equal-budget runs separate the
+    # contributions: unguided cold (no priors, no donor), guided cold
+    # (priors only — empty store), and warm (priors + struct donor), so
+    # "beats cold" is not a policy effect in disguise.
+    topo_p = perturbed(topo, 0.85)
+    gg = graphs[STRUCT_MODEL]
+    cold_unguided = PlannerService(use_registry=False).plan_graph(
+        gg, topo_p, iterations=iterations, seed=seed, enable_sfb=False)
+    cold_guided = PlannerService(registry=reg).plan_graph(
+        gg, topo_p, iterations=iterations, seed=seed, enable_sfb=False)
+    svc = PlannerService(registry=reg)
+    for m in TRAIN_MODELS:              # corpus plans = warm-start donors
+        svc.plan_graph(graphs[m], topo, iterations=iterations, seed=seed,
+                       enable_sfb=False)
+    warm = svc.plan_graph(gg, topo_p, iterations=iterations, seed=seed,
+                          enable_sfb=False)
+    struct = {
+        "model": STRUCT_MODEL, "topology": topo_p.name,
+        "source": warm.source,
+        "budget": iterations,
+        "cold_unguided_best_reward": cold_unguided.best_reward,
+        "cold_guided_best_reward": cold_guided.best_reward,
+        "warm_best_reward": warm.best_reward,
+        "cold_unguided_sim_time_s": cold_unguided.time,
+        "cold_guided_sim_time_s": cold_guided.time,
+        "warm_sim_time_s": warm.time,
+        "beats_cold": warm.time < cold_unguided.time * (1 - 1e-9),
+        # recorded, not asserted: the donor seed usually matches
+        # priors-alone quality but is not guaranteed to — prior_weight
+        # shifts search mass toward the donor's actions, and at small
+        # budgets that can land in a slightly different basin than the
+        # priors would alone. beats_cold is the gated claim.
+        "donor_no_worse_than_priors_alone":
+            warm.time <= cold_guided.time * (1 + 1e-9),
+    }
+    print(fmt_row("policy", "warm_struct", STRUCT_MODEL, warm.source,
+                  f"unguided {struct['cold_unguided_sim_time_s']:.5f}s",
+                  f"guided {struct['cold_guided_sim_time_s']:.5f}s",
+                  f"warm {struct['warm_sim_time_s']:.5f}s",
+                  struct["beats_cold"]))
+
+    summary = {
+        "train_models": TRAIN_MODELS, "held_out": HELD_OUT,
+        "iterations_budget": iterations, "n_groups": n_groups,
+        "train_steps": train_steps, "train_mcts_iters": train_mcts_iters,
+        "transfer": transfer,
+        "halved_count": sum(r["halved"] for r in transfer),
+        "exceeded_count": sum(r["exceeded"] for r in transfer),
+        "struct_warmstart": struct,
+    }
+    os.makedirs("results", exist_ok=True)
+    out = os.path.join("results", "BENCH_policy.json")
+    with open(out, "w") as f:
+        json.dump(summary, f, indent=2)
+    print("wrote", out)
+    return summary
+
+
+def main():
+    return run()
+
+
+if __name__ == "__main__":
+    s = run()
+    assert s["halved_count"] >= 2, \
+        f"policy priors halved playouts on only {s['halved_count']} models"
+    assert s["exceeded_count"] >= 1, \
+        "trained priors never beat the unguided search outright"
+    assert s["struct_warmstart"]["source"] == "warm", "struct tier missed"
+    assert s["struct_warmstart"]["beats_cold"], \
+        "struct warm-start did not beat the unguided cold search"

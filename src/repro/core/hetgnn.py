@@ -147,6 +147,39 @@ def _policy_core(cfg, p, arrays, gid, P, O, mask):
 _policy_jit = jax.jit(_policy_core, static_argnums=(0,))
 
 
+# Split forward pass: the heavy 4-layer GAT encoder and the thin decoder
+# as separate jitted functions, so callers that hold an episode's
+# embeddings fixed (core.trainer.CachedPolicy) only pay the decoder per
+# MCTS expansion.
+
+def _embed_core(cfg, p, arrays):
+    return gnn_forward(cfg, p, HetGraph(*arrays))
+
+
+_embed_jit = jax.jit(_embed_core, static_argnums=(0,))
+
+
+def _score_core(cfg, p, e_op, e_dev, gid, P, O, mask):
+    logits = score_actions(cfg, p, e_op, e_dev, gid, P, O)
+    return jnp.where(mask > 0, logits, -1e30)
+
+
+_score_jit = jax.jit(_score_core, static_argnums=(0,))
+
+
+def embed_hetgraph(cfg: GNNConfig, p: dict, g: HetGraph):
+    """Encoder half of the policy: (E_op (N,H), E_dev (M,H))."""
+    return _embed_jit(cfg, p, _het_arrays(g))
+
+
+def score_embedded(cfg: GNNConfig, p: dict, e_op, e_dev, gid: int, actions,
+                   m: int):
+    """Decoder half: logits for ``actions`` given precomputed embeddings."""
+    P, O, mask = actions_to_arrays(actions, m)
+    out = _score_jit(cfg, p, e_op, e_dev, jnp.asarray(gid), P, O, mask)
+    return out[:len(actions)]
+
+
 def _het_arrays(g: HetGraph):
     return (g.op_x, g.dev_x, g.oo_mask, g.oo_e, g.dd_mask, g.dd_e, g.od_e)
 

@@ -83,6 +83,11 @@ class MCTS:
         res = simulate(compile_strategy(gg, base, topo), self.topo)
         self.baseline_time = res.makespan
         self.default_action = data_parallel_all(topo)
+        # episode-static featurization for embedding-caching policies: the
+        # DP-baseline SimResult stands in as the episode's runtime-feedback
+        # signal (deterministic, available before any playout)
+        self._baseline_res = res
+        self._static_het = None
 
     # ---------------------------------------------------------------- eval
     def _evaluate(self, strat: Strategy):
@@ -101,6 +106,18 @@ class MCTS:
                 return strat.actions[gid]
         return self.default_action
 
+    def _episode_het(self):
+        """Featurization shared by every expansion of this search: empty
+        strategy, baseline runtime feedback, no next-group marker. Policies
+        advertising ``cache_embeddings`` receive this same HetGraph at every
+        vertex, so their encoder memoization collapses ``gnn_forward`` to
+        one run per episode (the decoder still sees per-vertex actions)."""
+        if self._static_het is None:
+            self._static_het = featurize(
+                self.gg, self.topo, Strategy.empty(self.gg.n),
+                self._baseline_res, None, observed=self.observed_feedback)
+        return self._static_het
+
     def _priors(self, vertex: Vertex):
         gid = self.order[vertex.depth]
         actions = candidate_actions(
@@ -108,9 +125,12 @@ class MCTS:
         if self.policy is None:
             probs = np.full(len(actions), 1.0 / len(actions))
         else:
-            het = featurize(self.gg, self.topo, vertex.strategy,
-                            vertex.feedback, gid,
-                            observed=self.observed_feedback)
+            if getattr(self.policy, "cache_embeddings", False):
+                het = self._episode_het()
+            else:
+                het = featurize(self.gg, self.topo, vertex.strategy,
+                                vertex.feedback, gid,
+                                observed=self.observed_feedback)
             probs = np.asarray(self.policy(het, gid, actions), np.float64)
             probs = probs / max(probs.sum(), 1e-9)
         return actions, self._blend_prior(gid, actions, probs)

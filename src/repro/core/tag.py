@@ -10,6 +10,7 @@ simulated per-iteration time.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -17,6 +18,7 @@ import numpy as np
 from repro.core import sfb as sfb_mod
 from repro.core.compiler import compile_strategy
 from repro.core.device import Topology
+from repro.core.fingerprint import fingerprint_grouped_cached
 from repro.core.graph import CompGraph, GroupedGraph, group_graph
 from repro.core.jax_export import trace_training_graph
 from repro.core.mcts import MCTS, SearchResult
@@ -74,14 +76,26 @@ def build_grouped(loss_fn, params, batch, name: str = "",
     return group_graph(g, partition(g, n_groups))
 
 
-_SFB_CACHE: dict = {}
+# SFB plan cache. Keyed by a CONTENT fingerprint of the graph (plus the
+# per-group replica/bandwidth signature), never by id(gg): a graph's id can
+# be recycled after garbage collection, and an id-keyed cache would then
+# silently serve the dead graph's plans to an unrelated one. LRU-bounded so
+# a long-lived PlannerService cannot grow it without limit.
+_SFB_CACHE: "OrderedDict" = OrderedDict()
+SFB_CACHE_MAX_ENTRIES = 4096
+
+
+def _sfb_cache_key(gg: GroupedGraph, gid: int, n_devs: int, tau: float,
+                   dev_flops: float):
+    return (fingerprint_grouped_cached(gg), gid, n_devs,
+            round(tau / 1e6), round(dev_flops / 1e9))
 
 
 def sfb_post_pass(gg: GroupedGraph, strat: Strategy, topo: Topology) -> dict:
     """Paper §4.2.3: for every replicated group MCTS decided (AR/PS), solve
     the SFB ILP per gradient and collect beneficial duplications. Results
-    are cached per (graph, group, placement) — the ILP depends only on the
-    replica count and bottleneck bandwidth."""
+    are cached per (graph content, group, placement) — the ILP depends only
+    on the replica count and bottleneck bandwidth."""
     plans = {}
     for gid, a in enumerate(strat.actions):
         grp = gg.groups[gid]
@@ -92,12 +106,16 @@ def sfb_post_pass(gg: GroupedGraph, strat: Strategy, topo: Topology) -> dict:
             continue
         tau = topo.bottleneck_bw(a.placement)
         dev_flops = min(topo.groups[g].flops for g in a.placement)
-        key = (id(gg), gid, len(devs), round(tau / 1e6),
-               round(dev_flops / 1e9))
-        if key not in _SFB_CACHE:
-            _SFB_CACHE[key] = sfb_mod.optimize_group(
+        key = _sfb_cache_key(gg, gid, len(devs), tau, dev_flops)
+        plan = _SFB_CACHE.get(key)
+        if plan is None:
+            plan = sfb_mod.optimize_group(
                 gg.base, grp.op_ids, len(devs), tau, dev_flops)
-        plan = _SFB_CACHE[key]
+            _SFB_CACHE[key] = plan
+            while len(_SFB_CACHE) > SFB_CACHE_MAX_ENTRIES:
+                _SFB_CACHE.popitem(last=False)
+        else:
+            _SFB_CACHE.move_to_end(key)
         if plan.saved_sync_bytes > 0 or plan.extra_flops > 0:
             plans[gid] = plan
     return plans

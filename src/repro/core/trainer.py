@@ -7,6 +7,8 @@ G_theta(s, a) and the MCTS selection probability pi(s, a) = N / sum N.
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import jax
@@ -17,7 +19,8 @@ from repro.core.device import Topology, random_topology
 from repro.core.features import HetGraph
 from repro.core.graph import GroupedGraph
 from repro.core.hetgnn import (
-    GNNConfig, init_gnn, policy_logits, policy_probs)
+    GNNConfig, embed_hetgraph, init_gnn, policy_logits, policy_probs,
+    score_embedded)
 from repro.core.mcts import MCTS
 from repro.optim.adam import AdamW
 
@@ -32,7 +35,71 @@ class TrainState:
     losses: list = field(default_factory=list)
 
 
-def make_policy(cfg: GNNConfig, params: dict):
+class CachedPolicy:
+    """GNN policy with per-(HetGraph, params) embedding memoization.
+
+    ``gnn_forward`` (4 GAT layers over the full heterogeneous graph) is by
+    far the dominant cost of a policy query, yet its inputs are fixed for
+    every expansion that scores the same HetGraph — MCTS feeds the
+    episode-static featurization (see ``MCTS._static_het``) precisely so
+    this cache collapses the encoder to one run per search; only the thin
+    ``score_actions`` decoder runs per op group. Keys are content hashes
+    of the feature arrays (never ``id()`` — a GC'd graph's id can be
+    reused), and the cache is LRU-bounded.
+    """
+
+    cache_embeddings = True     # advertised to MCTS (static featurization)
+
+    def __init__(self, cfg: GNNConfig, params: dict, max_entries: int = 8):
+        self.cfg = cfg
+        self.params = params
+        self.max_entries = max_entries
+        self._cache: "OrderedDict" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def _key(self, het: HetGraph):
+        h = hashlib.sha1()
+        for a in (het.op_x, het.dev_x, het.oo_mask, het.oo_e,
+                  het.dd_mask, het.dd_e, het.od_e):
+            h.update(np.ascontiguousarray(a).tobytes())
+        return h.digest()
+
+    def embeddings(self, het: HetGraph):
+        key = self._key(het)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.hits += 1
+            self._cache.move_to_end(key)
+            return hit
+        self.misses += 1
+        e = embed_hetgraph(self.cfg, self.params, het)
+        self._cache[key] = e
+        while len(self._cache) > self.max_entries:
+            self._cache.popitem(last=False)
+        return e
+
+    def __call__(self, het: HetGraph, gid: int, actions):
+        e_op, e_dev = self.embeddings(het)
+        logits = score_embedded(self.cfg, self.params, e_op, e_dev, gid,
+                                actions, het.dev_x.shape[0])
+        return np.asarray(jax.nn.softmax(logits))
+
+
+def make_policy(cfg: GNNConfig, params: dict, *,
+                cache_embeddings: bool = True):
+    """Build an MCTS-facing policy callable from trained GNN params.
+
+    With ``cache_embeddings`` (default) the returned policy memoizes the
+    encoder per featurized graph and MCTS feeds it the episode-static
+    featurization — one ``gnn_forward`` per search instead of one per
+    expansion. Pass False for the exact per-vertex featurization
+    (strategy-so-far context in the encoder input, pre-memoization
+    behaviour).
+    """
+    if cache_embeddings:
+        return CachedPolicy(cfg, params)
+
     def policy(het: HetGraph, gid: int, actions):
         return np.asarray(policy_probs(cfg, params, het, gid, actions))
     return policy

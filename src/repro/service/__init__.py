@@ -13,9 +13,12 @@ long-lived planner that amortizes search cost across requests:
     resp = svc.plan(loss_fn, params, batch, topo, iterations=60)
 """
 from repro.service.fingerprint import (  # noqa: F401
-    fingerprint_graph, fingerprint_grouped, fingerprint_topology,
+    fingerprint_graph, fingerprint_grouped, fingerprint_grouped_cached,
+    fingerprint_topology, structural_distance, structural_features,
     topology_structure_fingerprint)
 from repro.service.planner import (  # noqa: F401
     PlannerService, PlanRequest, PlanResponse)
+from repro.service.registry import (  # noqa: F401
+    PolicyRecord, PolicyRegistry)
 from repro.service.store import PlanRecord, PlanStore  # noqa: F401
 from repro.service.warmstart import adapt_strategy, find_prior  # noqa: F401

@@ -10,18 +10,24 @@
         --telemetry-dir .telemetry --save profile.json
     python -m repro.service.cli drift --model vgg19 --topo testbed \
         --observed-time 0.31 --cache-dir .plans
+    python -m repro.service.cli policy train --models bert_small vgg19 \
+        --name corpus-a --steps 16 --cache-dir .plans
+    python -m repro.service.cli policy list --cache-dir .plans
+    python -m repro.service.cli policy use --name corpus-a --cache-dir .plans
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 
 from repro.core import device as device_mod
 from repro.core.graph import group_graph
 from repro.core.jax_export import trace_training_graph
 from repro.core.partition import partition
 from repro.core.zoo import ZOO, build
-from repro.service.planner import PlannerService
+from repro.service.planner import POLICY_SUBDIR, PlannerService
+from repro.service.registry import PolicyRegistry
 from repro.service.store import PlanStore
 
 TOPOLOGIES = {
@@ -54,9 +60,79 @@ def cmd_plan(args) -> int:
         "iterations_run": resp.iterations_run,
         "time_s": resp.time, "baseline_s": resp.baseline_time,
         "speedup": round(resp.speedup, 4),
+        "policy": resp.policy,
         "graph_fp": resp.graph_fp[:16], "topo_fp": resp.topo_fp[:16],
         "stats": svc.stats(),
     }, indent=2))
+    return 0
+
+
+# -------------------------------------------------------- policy registry
+
+def _registry(args) -> PolicyRegistry:
+    return PolicyRegistry(os.path.join(args.cache_dir, POLICY_SUBDIR))
+
+
+def cmd_policy_train(args) -> int:
+    """Train a GNN policy on a corpus of zoo graphs and register it."""
+    from repro.core.trainer import init_trainer, train_policy
+    from repro.service.fingerprint import (
+        fingerprint_grouped_cached, structural_features)
+
+    graphs = []
+    for model in args.models:
+        loss_fn, params, batch = build(model)
+        g = trace_training_graph(loss_fn, params, batch, model).simplify()
+        graphs.append(group_graph(g, partition(g, args.n_groups)))
+    topologies = [_build_topology(t) for t in args.topos] or None
+
+    state = init_trainer(seed=args.seed, lr=args.lr)
+    state = train_policy(state, graphs, steps=args.steps,
+                         mcts_iters=args.mcts_iters, seed=args.seed,
+                         topologies=topologies, verbose=args.verbose)
+
+    reg = _registry(args)
+    rec = reg.save(
+        args.name, state.cfg, state.params,
+        corpus=[fingerprint_grouped_cached(g) for g in graphs],
+        corpus_features=[structural_features(g) for g in graphs],
+        meta={"models": list(args.models), "topos": list(args.topos),
+              "steps": args.steps, "mcts_iters": args.mcts_iters,
+              "seed": args.seed, "n_groups": args.n_groups,
+              "final_loss": state.losses[-1] if state.losses else None})
+    print(json.dumps({
+        "registered": rec.name, "models": args.models,
+        "steps": args.steps, "mcts_iters": args.mcts_iters,
+        "final_loss": rec.meta["final_loss"],
+        "registry": reg.path, "policies": len(reg),
+    }, indent=2))
+    return 0
+
+
+def cmd_policy_list(args) -> int:
+    reg = _registry(args)
+    default = reg.default_name()
+    rows = [{
+        "name": r.name, "default": r.name == default,
+        "corpus": [fp[:16] for fp in r.corpus],
+        "models": r.meta.get("models"), "steps": r.meta.get("steps"),
+        "final_loss": r.meta.get("final_loss"), "created": r.created,
+    } for r in reg.records()]
+    print(json.dumps({"policies": rows, "count": len(rows),
+                      "default": default}, indent=2))
+    return 0
+
+
+def cmd_policy_use(args) -> int:
+    """Pin a registered policy: the planner serves every request with it
+    (overrides corpus / structural matching) until re-pinned."""
+    reg = _registry(args)
+    try:
+        reg.set_default(args.name)
+    except (OSError, ValueError, KeyError) as e:
+        print(json.dumps({"error": f"cannot pin {args.name!r}: {e}"}))
+        return 1
+    print(json.dumps({"default": args.name, "registry": reg.path}))
     return 0
 
 
@@ -221,6 +297,37 @@ def main(argv=None) -> int:
     p.add_argument("--observed-time", type=float, required=True)
     p.add_argument("--threshold", type=float, default=0.25)
     p.set_defaults(fn=cmd_drift)
+
+    p = sub.add_parser("policy",
+                       help="train / list / pin registered GNN policies")
+    psub = p.add_subparsers(dest="policy_cmd", required=True)
+
+    pp = psub.add_parser("train",
+                         help="train a policy on zoo graphs + register it")
+    pp.add_argument("--models", nargs="+", choices=sorted(ZOO),
+                    required=True)
+    pp.add_argument("--name", required=True,
+                    help="registry name for the checkpoint")
+    pp.add_argument("--topos", nargs="*", choices=sorted(TOPOLOGIES),
+                    default=[],
+                    help="training topologies (default: random per step)")
+    pp.add_argument("--steps", type=int, default=16)
+    pp.add_argument("--mcts-iters", type=int, default=16)
+    pp.add_argument("--n-groups", type=int, default=30)
+    pp.add_argument("--lr", type=float, default=3e-4)
+    pp.add_argument("--seed", type=int, default=0)
+    pp.add_argument("--cache-dir", default=".plans")
+    pp.add_argument("--verbose", action="store_true")
+    pp.set_defaults(fn=cmd_policy_train)
+
+    pp = psub.add_parser("list", help="list registered policies")
+    pp.add_argument("--cache-dir", default=".plans")
+    pp.set_defaults(fn=cmd_policy_list)
+
+    pp = psub.add_parser("use", help="pin the policy served by default")
+    pp.add_argument("--name", required=True)
+    pp.add_argument("--cache-dir", default=".plans")
+    pp.set_defaults(fn=cmd_policy_use)
 
     args = ap.parse_args(argv)
     return args.fn(args)

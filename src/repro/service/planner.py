@@ -11,6 +11,7 @@ with per-request budgets and within-batch dedup.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 
 from repro.core import tag as tag_mod
@@ -18,10 +19,13 @@ from repro.core.device import Topology
 from repro.core.graph import GroupedGraph
 from repro.core.strategy import Strategy
 from repro.service.fingerprint import (
-    fingerprint_grouped, fingerprint_topology,
-    topology_structure_fingerprint)
+    fingerprint_grouped_cached, fingerprint_topology,
+    structural_features_cached, topology_structure_fingerprint)
+from repro.service.registry import PolicyRegistry
 from repro.service.store import PlanRecord, PlanStore
 from repro.service.warmstart import adapt_strategy, find_prior
+
+POLICY_SUBDIR = "policies"
 
 
 @dataclass
@@ -47,6 +51,8 @@ class PlanResponse:
     topo_fp: str
     best_reward: float = 0.0         # MCTS-level reward (pre-SFB speedup);
                                      # stop_reward targets compare to this
+    policy: str | None = None        # registry checkpoint that guided the
+                                     # search (None: unguided / cache hit)
 
     @property
     def speedup(self):
@@ -58,6 +64,9 @@ class PlannerService:
                  cache_dir: str | None = None, capacity: int = 256,
                  policy=None, warm_start: bool = True,
                  prior_weight: float = 0.6,
+                 registry: PolicyRegistry | None = None,
+                 policy_dir: str | None = None,
+                 use_registry: bool = True,
                  measurements=None, drift_threshold: float = 0.25,
                  drift_min_samples: int = 1,
                  drift_ewma_alpha: float = 0.5,
@@ -65,10 +74,21 @@ class PlannerService:
         self.store = store if store is not None \
             else PlanStore(capacity=capacity, path=cache_dir)
         self.policy = policy
+        # trained-prior source (paper §5.2): an explicit ``policy``
+        # callable wins; otherwise the registry living next to the plan
+        # store (``<cache_dir>/policies``, or ``policy_dir``) supplies the
+        # best-matching trained checkpoint per request. An empty/missing
+        # registry degrades to unguided search.
+        if registry is None and use_registry:
+            rdir = policy_dir or (os.path.join(cache_dir, POLICY_SUBDIR)
+                                  if cache_dir else None)
+            registry = PolicyRegistry(rdir) if rdir else None
+        self.registry = registry if use_registry else None
         self.warm_start = warm_start
         self.prior_weight = prior_weight
         self._stats = {"requests": 0, "hits": 0, "warm": 0, "cold": 0,
                        "batch_dedup": 0, "iterations": 0,
+                       "policy_guided": 0,
                        "observations": 0, "replans": 0}
         # runtime feedback loop (repro.runtime): created lazily so the
         # service stays import-light when feedback is unused
@@ -101,15 +121,17 @@ class PlannerService:
         of measured telemetry routed into the GNN features in place of
         the simulated runtime feedback.
         """
-        graph_fp, topo_fp = fingerprints or (fingerprint_grouped(gg),
+        graph_fp, topo_fp = fingerprints or (fingerprint_grouped_cached(gg),
                                              fingerprint_topology(topo))
         struct_fp = topology_structure_fingerprint(topo)
+        graph_feat = structural_features_cached(gg)
         self._stats["requests"] += 1
 
         if prior_strategy is not None:
             kind, rec = "forced", None
         elif self.warm_start:
-            kind, rec = find_prior(self.store, graph_fp, topo_fp, struct_fp)
+            kind, rec = find_prior(self.store, graph_fp, topo_fp, struct_fp,
+                                   graph_features=graph_feat)
         else:
             rec = self.store.get(graph_fp, topo_fp)
             kind = "hit" if rec is not None else "miss"
@@ -132,14 +154,16 @@ class PlannerService:
         if kind == "forced":
             prior = prior_strategy
             self._stats["warm"] += 1
-        elif kind in ("warm_topo", "warm_graph", "stale_hit"):
+        elif kind in ("warm_topo", "warm_graph", "warm_struct",
+                      "stale_hit"):
             prior = adapt_strategy(rec.strategy_obj(), gg.n, topo)
             self._stats["warm"] += 1
         else:
             self._stats["cold"] += 1
 
+        policy_name, policy = self._resolve_policy(graph_fp, graph_feat)
         res = tag_mod.optimize(
-            None, None, None, topo, gg=gg, policy=self.policy,
+            None, None, None, topo, gg=gg, policy=policy,
             iterations=iterations, seed=seed, enable_sfb=enable_sfb,
             prior_strategy=prior, prior_weight=self.prior_weight,
             stop_reward=stop_reward, observed_feedback=observed_feedback)
@@ -151,10 +175,12 @@ class PlannerService:
             sfb_plans={str(g): p.to_dict()
                        for g, p in res.sfb_plans.items()},
             time=res.time, baseline_time=res.baseline_time,
+            graph_features=graph_feat,
             meta={"iterations": iterations, "seed": seed,
                   "enable_sfb": enable_sfb,
                   "iterations_run": res.search.iterations_run,
                   "best_reward": res.search.best_reward,
+                  "policy": policy_name,
                   "source": "warm" if prior is not None else "cold"}))
         return PlanResponse(
             strategy=res.strategy, sfb_plans=res.sfb_plans,
@@ -162,7 +188,22 @@ class PlannerService:
             source="warm" if prior is not None else "cold",
             iterations_run=res.search.iterations_run,
             graph_fp=graph_fp, topo_fp=topo_fp,
-            best_reward=res.search.best_reward)
+            best_reward=res.search.best_reward,
+            policy=policy_name)
+
+    def _resolve_policy(self, graph_fp: str, graph_feat):
+        """Trained priors for a search: an explicit ``policy=`` callable
+        wins (name None); otherwise the registry's best-matching
+        checkpoint; otherwise unguided."""
+        if self.policy is not None:
+            return None, self.policy
+        if self.registry is None:
+            return None, None
+        name, policy = self.registry.resolve(graph_fp=graph_fp,
+                                             graph_features=graph_feat)
+        if policy is not None:
+            self._stats["policy_guided"] += 1
+        return name, policy
 
     def plan_many(self, requests: list) -> list:
         """Plan a batch of PlanRequests. Identical (graph, topology) pairs
@@ -170,7 +211,7 @@ class PlannerService:
         out = []
         seen: set = set()
         for req in requests:
-            key = (fingerprint_grouped(req.gg),
+            key = (fingerprint_grouped_cached(req.gg),
                    fingerprint_topology(req.topo))
             if key in seen:
                 self._stats["batch_dedup"] += 1

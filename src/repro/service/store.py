@@ -33,6 +33,24 @@ SCHEMA_VERSION = 1
 LOCK_FILE = ".lock"
 
 
+@contextmanager
+def flock_dir(path: str | None, *, shared: bool = False,
+              require_dir: bool = False):
+    """fcntl file lock over a cache directory (shared with the policy
+    registry); no-op when there is no directory to lock or fcntl is
+    unavailable. ``require_dir`` skips locking until the directory exists
+    (registries are created lazily on first save)."""
+    if not path or fcntl is None or (require_dir and not os.path.isdir(path)):
+        yield
+        return
+    with open(os.path.join(path, LOCK_FILE), "a+") as lf:
+        fcntl.flock(lf, fcntl.LOCK_SH if shared else fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lf, fcntl.LOCK_UN)
+
+
 @dataclass
 class PlanRecord:
     graph_fp: str
@@ -44,6 +62,12 @@ class PlanRecord:
     sfb_plans: dict                    # {str(gid): GroupSFB.to_dict()}
     time: float                        # simulated per-iteration seconds
     baseline_time: float
+    # structural feature vector of the planned graph
+    # (service.fingerprint.structural_features) — the cross-model
+    # warm-start tier ranks donor records by distance to it. Optional:
+    # records written before the field existed load as [] and are simply
+    # never structural donors.
+    graph_features: list = field(default_factory=list)
     meta: dict = field(default_factory=dict)   # iterations, seed, source...
     version: int = SCHEMA_VERSION
 
@@ -70,6 +94,7 @@ class PlanRecord:
             "n_groups": self.n_groups, "topo_m": self.topo_m,
             "strategy": self.strategy, "sfb_plans": self.sfb_plans,
             "time": self.time, "baseline_time": self.baseline_time,
+            "graph_features": [float(v) for v in self.graph_features],
             "meta": self.meta,
         }
 
@@ -84,6 +109,7 @@ class PlanRecord:
             n_groups=int(d["n_groups"]), topo_m=int(d["topo_m"]),
             strategy=d["strategy"], sfb_plans=d["sfb_plans"],
             time=float(d["time"]), baseline_time=float(d["baseline_time"]),
+            graph_features=list(d.get("graph_features", [])),
             meta=d.get("meta", {}), version=d["version"])
 
 
@@ -103,25 +129,17 @@ class PlanStore:
         self.per_topo_quota = per_topo_quota
         self._mem: OrderedDict = OrderedDict()   # key -> PlanRecord
         self._disk: dict = {}                    # key -> filename
+        self._feat_cache: dict = {}              # key -> (mtime, feats, sp)
         if path:
             os.makedirs(path, exist_ok=True)
             with self._lock():
                 self._scan_disk()
 
     # ------------------------------------------------------------- locking
-    @contextmanager
     def _lock(self, shared: bool = False):
         """fcntl file lock over the cache directory; no-op for the pure
         memory tier or where fcntl is unavailable."""
-        if not self.path or fcntl is None:
-            yield
-            return
-        with open(os.path.join(self.path, LOCK_FILE), "a+") as lf:
-            fcntl.flock(lf, fcntl.LOCK_SH if shared else fcntl.LOCK_EX)
-            try:
-                yield
-            finally:
-                fcntl.flock(lf, fcntl.LOCK_UN)
+        return flock_dir(self.path, shared=shared)
 
     # ---------------------------------------------------------------- disk
     def _scan_disk(self):
@@ -205,6 +223,40 @@ class PlanStore:
 
     def records(self) -> list:
         return self.find()
+
+    def feature_entries(self) -> list:
+        """[(key, graph_features, speedup)] across both tiers WITHOUT
+        promoting disk records into the memory LRU. The structural
+        warm-start tier scans every stored plan on a cache miss; routing
+        that scan through ``get()`` would evict hot memory-tier entries
+        in favor of arbitrary donors and rewrite LRU order on every novel
+        request. Disk-tier reads are memoized per (file, mtime), so
+        repeated misses cost one stat per record instead of a full JSON
+        parse — while still observing records other processes rewrite."""
+        out = []
+        for key, rec in self._mem.items():
+            out.append((key, rec.graph_features, rec.speedup))
+        seen = set(self._mem)
+        for key, fn in list(self._disk.items()):
+            if key in seen:
+                continue
+            path = os.path.join(self.path, fn)
+            try:
+                mtime = os.stat(path).st_mtime
+            except OSError:
+                continue
+            cached = self._feat_cache.get(key)
+            if cached is not None and cached[0] == mtime:
+                out.append((key, cached[1], cached[2]))
+                continue
+            try:
+                with self._lock(shared=True):
+                    rec = self._load_file(fn)
+            except (ValueError, KeyError, json.JSONDecodeError, OSError):
+                continue
+            self._feat_cache[key] = (mtime, rec.graph_features, rec.speedup)
+            out.append((key, rec.graph_features, rec.speedup))
+        return out
 
     # -------------------------------------------------------------- evict
     def _remove_key(self, key) -> bool:

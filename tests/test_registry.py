@@ -1,0 +1,374 @@
+"""Policy registry + cross-model transfer tier + this PR's regression
+tests (SFB cache content-keying, embedding memoization, adapt_strategy
+degeneracy)."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import tag as tag_mod
+from repro.core.device import DeviceGroup, Topology, _full_inter
+from repro.core.device import testbed as make_testbed
+from repro.core.graph import group_graph
+from repro.core.hetgnn import GNNConfig, policy_logits, policy_probs
+from repro.core.jax_export import trace_training_graph
+from repro.core.mcts import MCTS
+from repro.core.partition import partition
+from repro.core.strategy import (
+    Action, Option, Strategy, candidate_actions)
+from repro.core.trainer import init_trainer, make_policy, train_step
+from repro.core.zoo import build
+from repro.service import (
+    PlannerService, PlanStore, PolicyRegistry, adapt_strategy, find_prior,
+    fingerprint_grouped_cached, structural_distance, structural_features)
+from repro.service.fingerprint import STRUCT_F, STRUCT_SCALARS
+from repro.service.store import PlanRecord
+
+
+@pytest.fixture(scope="module")
+def traced():
+    loss_fn, params, batch = build("bert_small")
+    return trace_training_graph(loss_fn, params, batch, "bert").simplify()
+
+
+@pytest.fixture(scope="module")
+def gg(traced):
+    return group_graph(traced, partition(traced, 12))
+
+
+@pytest.fixture(scope="module")
+def gg_alt(traced):
+    """Same model, different grouping: a distinct graph fingerprint with
+    near-zero structural distance (cross-model transfer stand-in)."""
+    return group_graph(traced, partition(traced, 10))
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return make_testbed()
+
+
+def _perturbed(topo, scale=0.9):
+    t2 = copy.deepcopy(topo)
+    t2.inter_bw = topo.inter_bw * scale
+    return t2
+
+
+def _vec(scalars=1.0, bucket=None, weight=0.9):
+    v = [scalars] * STRUCT_SCALARS + [0.0] * (STRUCT_F - STRUCT_SCALARS)
+    if bucket is not None:
+        v[STRUCT_SCALARS + bucket] = weight
+    return v
+
+
+# ---------------------------------------------------- structural features
+
+def test_structural_features_shape_and_determinism(gg):
+    f1, f2 = structural_features(gg), structural_features(gg)
+    assert len(f1) == STRUCT_F
+    assert f1 == f2
+    assert structural_distance(f1, f2) < 1e-9
+
+
+def test_structural_distance_separates_families(gg, gg_alt):
+    """Regrouping the same model is structurally near; disjoint op-type
+    histograms are far; malformed vectors are infinitely far."""
+    fa, fb = structural_features(gg), structural_features(gg_alt)
+    assert structural_distance(fa, fb) < 0.05
+    assert structural_distance(_vec(bucket=0), _vec(bucket=5)) > 0.25
+    assert structural_distance(fa, []) == float("inf")
+    assert structural_distance(fa, fb[:-1]) == float("inf")
+
+
+# ------------------------------------------------------- policy registry
+
+def test_registry_roundtrip_identical_logits(gg, topo, tmp_path):
+    """ISSUE acceptance: train -> save -> load -> identical policy_logits."""
+    from repro.core.features import featurize
+    state = init_trainer(seed=0)
+    sr = MCTS(gg, topo, seed=0, record_threshold=4).search(8)
+    assert sr.visit_records
+    train_step(state, sr.visit_records)
+
+    reg = PolicyRegistry(str(tmp_path))
+    reg.save("rt", state.cfg, state.params,
+             corpus=[fingerprint_grouped_cached(gg)],
+             corpus_features=[structural_features(gg)],
+             meta={"models": ["bert_small"]})
+    rec, params = reg.load("rt")
+    assert rec.gnn_config() == state.cfg
+    assert rec.meta["models"] == ["bert_small"]
+
+    het = featurize(gg, topo, Strategy.empty(gg.n), None, 0)
+    actions = candidate_actions(topo, has_grad=True)
+    l1 = np.asarray(policy_logits(state.cfg, state.params, het, 0, actions))
+    l2 = np.asarray(policy_logits(rec.gnn_config(), params, het, 0, actions))
+    assert np.array_equal(l1, l2)
+
+
+def test_registry_selection_tiers(tmp_path):
+    """Pin > exact corpus fingerprint > structural NN > newest."""
+    reg = PolicyRegistry(str(tmp_path))
+    cfg = GNNConfig()
+    dummy = {"w": np.zeros(2, np.float32)}
+    reg.save("pa", cfg, dummy, corpus=["fpA"],
+             corpus_features=[_vec(bucket=0)], created=1.0)
+    reg.save("pb", cfg, dummy, corpus=["fpB"],
+             corpus_features=[_vec(bucket=5)], created=2.0)
+    assert {r.name for r in reg.records()} == {"pa", "pb"}
+
+    assert reg.select().name == "pb"                      # newest
+    assert reg.select(graph_fp="fpA").name == "pa"        # exact corpus
+    near_a = _vec(bucket=0, weight=0.8)
+    assert reg.select(graph_fp="zz",
+                      graph_features=near_a).name == "pa"  # structural NN
+    reg.set_default("pb")
+    assert reg.select(graph_fp="fpA").name == "pb"        # pin wins
+    assert reg.default_name() == "pb"
+
+    assert reg.remove("pb")
+    assert reg.select(graph_fp="zz").name == "pa"
+    with pytest.raises(ValueError):
+        reg.save("../evil", cfg, dummy)
+    with pytest.raises(ValueError):
+        reg.save("default", cfg, dummy)   # reserved: the pin file's name
+
+
+def test_registry_resolve_reloads_after_reregistration(tmp_path):
+    """A long-lived service must not serve stale params after the same
+    checkpoint name is re-registered (e.g. by another process)."""
+    reg = PolicyRegistry(str(tmp_path))
+    cfg = GNNConfig()
+    reg.save("p", cfg, {"w": np.ones(2, np.float32)}, created=1.0)
+    _, pol1 = reg.resolve()
+    _, pol1_again = reg.resolve()
+    assert pol1_again is pol1                      # cached while unchanged
+    # another process re-registers the name: reg's in-process cache is
+    # NOT popped by reg.save(), only the created stamp reveals the change
+    PolicyRegistry(str(tmp_path)).save(
+        "p", cfg, {"w": np.zeros(2, np.float32)}, created=2.0)
+    _, pol2 = reg.resolve()
+    assert pol2 is not pol1                        # rebuilt from new npz
+    assert float(np.asarray(pol2.params["w"]).sum()) == 0.0
+
+
+def test_store_feature_entries_no_lru_promotion(tmp_path):
+    """The structural donor scan must not churn the memory LRU."""
+    store = PlanStore(path=str(tmp_path), capacity=2)
+    strat = Strategy([Action((0,), Option.AR)])
+    for i in range(3):
+        store.put(PlanRecord(
+            graph_fp=f"g{i}" + "0" * 62, topo_fp=f"t{i}" + "0" * 62,
+            topo_struct_fp="s" * 64, n_groups=1, topo_m=1,
+            strategy=strat.to_dict(), sfb_plans={}, time=1.0,
+            baseline_time=2.0, graph_features=_vec(bucket=i)))
+    assert len(store._mem) == 2 and len(store) == 3
+    mem_before = list(store._mem)
+    entries = store.feature_entries()
+    assert len(entries) == 3                       # disk tier included
+    assert list(store._mem) == mem_before          # untouched LRU
+    # repeat scans serve disk entries from the (file, mtime) memo
+    assert store._feat_cache
+    assert len(store.feature_entries()) == 3
+    # a rewrite bumps mtime and refreshes the memoized features
+    import os as _os
+    victim = next(k for k in store._disk if k not in store._mem)
+    rec = store.get(*victim)
+    rec.graph_features = _vec(bucket=7)
+    store._mem.clear()                             # force disk path
+    store.put(rec)
+    store._mem.clear()
+    fn = store._disk[victim]
+    bumped = _os.stat(str(tmp_path / fn)).st_mtime + 10
+    _os.utime(str(tmp_path / fn), (bumped, bumped))   # defeat coarse mtime
+    feats = dict((k, f) for k, f, _ in store.feature_entries())
+    assert feats[victim] == _vec(bucket=7)
+
+
+def test_planner_service_uses_registered_policy(gg, topo, tmp_path):
+    state = init_trainer(seed=0)
+    PolicyRegistry(str(tmp_path / "policies")).save(
+        "p0", state.cfg, state.params,
+        corpus=[fingerprint_grouped_cached(gg)],
+        corpus_features=[structural_features(gg)])
+
+    svc = PlannerService(cache_dir=str(tmp_path))   # registry auto-attached
+    resp = svc.plan_graph(gg, topo, iterations=4, seed=0)
+    assert resp.source == "cold" and resp.policy == "p0"
+    assert svc.stats()["policy_guided"] == 1
+    # a cache hit serves the stored plan without re-running the policy
+    again = svc.plan_graph(gg, topo, iterations=4, seed=0)
+    assert again.source == "hit" and again.policy is None
+    # the record remembers which checkpoint guided its search
+    rec = svc.store.get(resp.graph_fp, resp.topo_fp)
+    assert rec.meta["policy"] == "p0"
+
+
+def test_planner_service_without_registry_unguided(gg, topo):
+    svc = PlannerService()                          # no cache_dir: no registry
+    resp = svc.plan_graph(gg, topo, iterations=3, seed=0)
+    assert resp.policy is None
+    assert svc.stats()["policy_guided"] == 0
+
+
+# --------------------------------------------- structural warm-start tier
+
+def test_find_prior_structural_tier():
+    store = PlanStore()
+    strat = Strategy([Action((0,), Option.AR)])
+    rec = PlanRecord(
+        graph_fp="g" * 64, topo_fp="t" * 64, topo_struct_fp="s" * 64,
+        n_groups=1, topo_m=1, strategy=strat.to_dict(), sfb_plans={},
+        time=1.0, baseline_time=2.0, graph_features=_vec(bucket=0))
+    store.put(rec)
+    # unseen graph AND topology, near features -> structural donor
+    kind, got = find_prior(store, "x" * 64, "y" * 64, None,
+                           graph_features=_vec(bucket=0, weight=0.8))
+    assert kind == "warm_struct" and got.graph_fp == rec.graph_fp
+    # far features -> miss
+    kind, got = find_prior(store, "x" * 64, "y" * 64, None,
+                           graph_features=_vec(bucket=5))
+    assert kind == "miss" and got is None
+    # records without features are never structural donors
+    rec2 = copy.deepcopy(rec)
+    rec2.graph_features = []
+    store2 = PlanStore()
+    store2.put(rec2)
+    kind, _ = find_prior(store2, "x" * 64, "y" * 64, None,
+                         graph_features=_vec(bucket=0))
+    assert kind == "miss"
+
+
+def test_find_prior_warm_graph_guarded_by_structure():
+    """A same-topology donor is still a different graph: cross-family
+    donors (distance > bound) must not seed the search; featureless
+    legacy records keep the accept-any behaviour."""
+    strat = Strategy([Action((0,), Option.AR)])
+    rec = PlanRecord(
+        graph_fp="g" * 64, topo_fp="t" * 64, topo_struct_fp="s" * 64,
+        n_groups=1, topo_m=1, strategy=strat.to_dict(), sfb_plans={},
+        time=1.0, baseline_time=2.0, graph_features=_vec(bucket=0))
+    store = PlanStore()
+    store.put(rec)
+    near, far = _vec(bucket=0, weight=0.8), _vec(bucket=5)
+    kind, _ = find_prior(store, "x" * 64, "t" * 64, None,
+                         graph_features=near)
+    assert kind == "warm_graph"
+    kind, got = find_prior(store, "x" * 64, "t" * 64, None,
+                           graph_features=far)
+    assert kind == "miss" and got is None
+    legacy = copy.deepcopy(rec)
+    legacy.graph_features = []
+    store2 = PlanStore()
+    store2.put(legacy)
+    kind, _ = find_prior(store2, "x" * 64, "t" * 64, None,
+                         graph_features=far)
+    assert kind == "warm_graph"
+
+
+def test_planner_struct_warmstart_end_to_end(gg, gg_alt, topo):
+    """An unseen (graph, topology) pair seeds from the structurally
+    nearest cached plan instead of searching cold."""
+    svc = PlannerService()
+    svc.plan_graph(gg, topo, iterations=5, seed=0)
+    resp = svc.plan_graph(gg_alt, _perturbed(topo), iterations=5, seed=0)
+    assert resp.source == "warm"
+    assert svc.stats()["warm"] == 1 and svc.stats()["cold"] == 1
+
+
+# ------------------------------------------------ adapt_strategy degeneracy
+
+def test_adapt_strategy_degenerates_sync_on_single_device():
+    one = Topology([DeviceGroup(0, "V100", 1, intra_bw=1e9)],
+                   _full_inter(1, 0))
+    prior = Strategy([Action((0, 2), Option.PS),    # clipped -> 1 device
+                      Action((0,), Option.AR),      # unclipped AR@1: legal
+                      Action((0, 1), Option.AR),    # clipped -> 1 device
+                      Action((0,), Option.MP),      # nothing to split
+                      Action((0,), Option.PS)])     # PS needs >1 device
+    got = adapt_strategy(prior, 5, one)
+    assert got.actions[0] is None
+    assert got.actions[1] == Action((0,), Option.AR)
+    assert got.actions[2] is None
+    assert got.actions[3] is None
+    assert got.actions[4] is None
+
+
+def test_adapt_strategy_keeps_multi_gpu_single_group():
+    two = Topology([DeviceGroup(0, "V100", 2, intra_bw=1e9)],
+                   _full_inter(1, 0))
+    got = adapt_strategy(Strategy([Action((0, 3), Option.PS)]), 1, two)
+    assert got.actions[0] == Action((0,), Option.PS)   # 2 devices: legal
+
+
+# ------------------------------------------------------- SFB cache keying
+
+def test_sfb_cache_content_keyed_and_id_poison_ignored(gg, topo):
+    """Regression (ISSUE satellite): the cache must never serve another
+    graph's plans through a recycled ``id()``. Keys are content
+    fingerprints; a poisoned id-style entry (what the old cache used) is
+    unreachable."""
+    tag_mod._SFB_CACHE.clear()
+    strat = tag_mod.dp_baseline(gg, topo)
+    plans = tag_mod.sfb_post_pass(gg, strat, topo)
+    assert plans and tag_mod._SFB_CACHE
+    fp = fingerprint_grouped_cached(gg)
+    assert all(k[0] == fp for k in tag_mod._SFB_CACHE)
+
+    bogus = object()
+    for key in list(tag_mod._SFB_CACHE):
+        tag_mod._SFB_CACHE[(id(gg),) + key[1:]] = bogus
+    plans2 = tag_mod.sfb_post_pass(gg, strat, topo)
+    assert all(p is not bogus for p in plans2.values())
+    assert plans2.keys() == plans.keys()
+    tag_mod._SFB_CACHE.clear()
+
+
+def test_sfb_cache_distinct_graphs_distinct_keys(gg, gg_alt, topo):
+    tag_mod._SFB_CACHE.clear()
+    strat = tag_mod.dp_baseline(gg, topo)
+    tag_mod.sfb_post_pass(gg, strat, topo)
+    keys_gg = set(tag_mod._SFB_CACHE)
+    tag_mod.sfb_post_pass(gg_alt, tag_mod.dp_baseline(gg_alt, topo), topo)
+    keys_alt = set(tag_mod._SFB_CACHE) - keys_gg
+    assert keys_gg and keys_alt
+    assert not ({k[0] for k in keys_gg} & {k[0] for k in keys_alt})
+    tag_mod._SFB_CACHE.clear()
+
+
+def test_sfb_cache_bounded(gg, topo, monkeypatch):
+    tag_mod._SFB_CACHE.clear()
+    monkeypatch.setattr(tag_mod, "SFB_CACHE_MAX_ENTRIES", 2)
+    tag_mod.sfb_post_pass(gg, tag_mod.dp_baseline(gg, topo), topo)
+    assert len(tag_mod._SFB_CACHE) <= 2
+    tag_mod._SFB_CACHE.clear()
+
+
+# ------------------------------------------------- embedding memoization
+
+def test_cached_policy_matches_exact_policy(gg, topo):
+    from repro.core.features import featurize
+    state = init_trainer(seed=0)
+    het = featurize(gg, topo, Strategy.empty(gg.n), None, 0)
+    actions = candidate_actions(topo, has_grad=True)
+    cached = make_policy(state.cfg, state.params)
+    exact = np.asarray(policy_probs(state.cfg, state.params, het, 0,
+                                    actions))
+    assert np.allclose(np.asarray(cached(het, 0, actions)), exact,
+                       atol=1e-6)
+    assert (cached.hits, cached.misses) == (0, 1)
+    cached(het, 3, actions)                       # same het, new group
+    assert (cached.hits, cached.misses) == (1, 1)
+
+
+def test_mcts_runs_one_forward_per_episode_with_cached_policy(gg, topo):
+    state = init_trainer(seed=0)
+    pol = make_policy(state.cfg, state.params)
+    assert pol.cache_embeddings
+    sr = MCTS(gg, topo, policy=pol, seed=0).search(10)
+    assert pol.misses == 1                        # one gnn_forward total
+    assert pol.hits >= 5                          # decoder-only expansions
+    assert sr.best_reward >= 1.0 - 1e-9
+    # exact (uncached) policies keep the per-vertex featurization path
+    legacy = make_policy(state.cfg, state.params, cache_embeddings=False)
+    assert not getattr(legacy, "cache_embeddings", False)
