@@ -33,6 +33,8 @@ BENCHES = [
      "dry-run roofline terms per arch x shape x mesh"),
     ("planner", "benchmarks.planner_cache",
      "planner service: cold vs cache-hit vs warm-start latency"),
+    ("pipeline", "benchmarks.pipeline_exec",
+     "pipelined schedules vs pure-DP on a perturbed replay cluster"),
 ]
 
 

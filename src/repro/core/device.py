@@ -69,6 +69,11 @@ class Topology:
     coll_eff_cross: float = 0.15       # collectives spanning machines
     coll_eff_intra: float = 0.7        # collectives inside one machine
     p2p_eff: float = 0.6               # point-to-point transfers
+    # Per-(gi, gj) point-to-point efficiency overrides, fitted by the
+    # runtime calibration's per-link-pair tier once a pair accumulates
+    # enough telemetry (repro.runtime.calibration). Falls back to the
+    # per-class ``p2p_eff`` for unobserved pairs.
+    pair_eff: dict = field(default_factory=dict)
 
     @property
     def m(self):
@@ -100,8 +105,10 @@ class Topology:
         return b, cls
 
     def bw(self, gi: int, gj: int) -> float:
-        """Effective point-to-point bandwidth between device groups."""
-        return self.nominal_bw(gi, gj) * self.p2p_eff
+        """Effective point-to-point bandwidth between device groups
+        (per-pair calibrated efficiency when available)."""
+        eff = self.pair_eff.get((gi, gj), self.p2p_eff)
+        return self.nominal_bw(gi, gj) * eff
 
     def bottleneck_bw(self, group_ids) -> float:
         """Effective bottleneck bandwidth for a collective among device

@@ -36,9 +36,19 @@ class ExecutionPlan:
     grad_sync: dict              # block/param prefix -> sync mode
     zero1: bool                  # shard optimizer moments over data axis
     summary: dict
+    # Pipeline stage map when the strategy carries PIPE actions spanning
+    # >= 2 device groups (repro.exec.stages.StagePlan) — the launcher
+    # routes these through the pipeline execution engine instead of the
+    # single-mesh axis rules above. None for pure single-mesh plans.
+    stage_plan: object | None = None
+
+    @property
+    def is_pipelined(self) -> bool:
+        return self.stage_plan is not None
 
 
-def lower_strategy(strat: Strategy, gg, topo, mesh) -> ExecutionPlan:
+def lower_strategy(strat: Strategy, gg, topo, mesh, *,
+                   n_micro: int = 4) -> ExecutionPlan:
     opts = Counter(a.option for a in strat.actions if a is not None)
     n = max(sum(opts.values()), 1)
     placements = [a.placement for a in strat.actions if a is not None]
@@ -77,13 +87,20 @@ def lower_strategy(strat: Strategy, gg, topo, mesh) -> ExecutionPlan:
         else:
             grad_sync[f"group{gid}"] = "allreduce"
 
+    stage_plan = None
+    if gg is not None and strat.has_pipeline():
+        # lazy import: repro.exec sits above core in the layering
+        from repro.exec.stages import build_stage_plan
+        stage_plan = build_stage_plan(gg, strat, topo, n_micro=n_micro)
+
     ar = AxisRules(mesh=mesh, rules=rules, grad_sync=grad_sync)
     return ExecutionPlan(
-        rules=ar, grad_sync=grad_sync, zero1=zero1,
+        rules=ar, grad_sync=grad_sync, zero1=zero1, stage_plan=stage_plan,
         summary={
             "options": {o.name: c for o, c in opts.items()},
             "partial_placement_frac": partial,
             "mp_frac": mp_frac,
             "pipe_frac": opts.get(Option.PIPE, 0) / n,
             "batch_axes": batch_axes,
+            "n_stages": stage_plan.n_stages if stage_plan else 0,
         })

@@ -88,6 +88,18 @@ class Strategy:
         return json.dumps(self.to_dict(), sort_keys=True,
                           separators=(",", ":"))
 
+    def pipe_actions(self) -> list:
+        """[(gid, action)] for groups the strategy pipelines across >= 2
+        device groups — the ones ``repro.exec.stages`` cuts stages at."""
+        return [(gid, a) for gid, a in enumerate(self.actions)
+                if a is not None and a.option == Option.PIPE
+                and len(a.placement) >= 2]
+
+    def has_pipeline(self) -> bool:
+        """True when a real multi-stage execution path exists (any PIPE
+        action spanning more than one device group)."""
+        return bool(self.pipe_actions())
+
 
 def data_parallel_all(topo: Topology, option: Option = Option.AR) -> Action:
     """The DP baseline action: replicate on every device group."""

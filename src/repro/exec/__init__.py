@@ -1,0 +1,38 @@
+"""Heterogeneous pipeline execution engine (``repro.exec``).
+
+Lowers a searched TAG ``Strategy`` with PIPE actions into a *running*
+multi-stage train step:
+
+  * ``stages``      — stage partitioner: cut the grouped graph at PIPE
+                      boundaries, map stages to topology device groups;
+  * ``schedule``    — GPipe / 1F1B microbatch schedules as explicit
+                      event lists + a dependency-driven timeline
+                      simulator (bubble fractions, stash bounds);
+  * ``model_split`` — cut a ``ModelConfig`` LM into stage functions;
+  * ``engine``      — eager executor: per-stage jitted fwd/bwd,
+                      device_put boundary transfers, shard_map per-stage
+                      data parallelism with AR/PS/SFB gradient sync;
+  * ``replay``      — replay executor emitting step telemetry (the
+                      simulator cross-check + per-link-pair calibration
+                      samples).
+"""
+from repro.exec.engine import PipelineRunner, split_microbatches
+from repro.exec.model_split import split_model
+from repro.exec.replay import execute_pipeline
+from repro.exec.schedule import (
+    SCHEDULES, Timeline, flatten_schedule, gpipe_schedule, make_schedule,
+    max_feasible_micro, one_f_one_b_schedule, peak_stash,
+    simulate_schedule, validate_schedule)
+from repro.exec.stages import (
+    PipelineInfeasible, StagePlan, StageSpec, build_stage_plan,
+    pipeline_spine)
+
+__all__ = [
+    "PipelineRunner", "split_microbatches", "split_model",
+    "execute_pipeline",
+    "SCHEDULES", "Timeline", "flatten_schedule", "gpipe_schedule",
+    "make_schedule", "max_feasible_micro", "one_f_one_b_schedule",
+    "peak_stash", "simulate_schedule", "validate_schedule",
+    "PipelineInfeasible", "StagePlan", "StageSpec", "build_stage_plan",
+    "pipeline_spine",
+]

@@ -1,0 +1,91 @@
+"""Replay executor for pipelines: run a (StagePlan, schedule) pair on a
+cluster ``Topology`` and emit step telemetry.
+
+The real engine (``exec.engine``) plays this role on actual hardware;
+here the "cluster" is a ``Topology`` whose true parameters may differ
+from the nominal ones the plan was searched under (the perturbed-cluster
+scenario of the runtime-feedback benchmarks). One execution walks the
+schedule timeline on the TRUE topology and records:
+
+  * per-event compute samples (stage gpu_type, flops, time),
+  * per-boundary transfer samples carrying the ``pair`` key
+    (``"gi-gj"``) — the per-link-pair calibration tier's input
+    (``runtime.calibration.fit_profile(min_pair_samples=...)``),
+
+all normalized against the NOMINAL topology's spec-sheet numbers, exactly
+what a live profiler would log. The predicted timeline and the executed
+one come from the same schedule semantics, so
+``simulate_schedule(plan, topo, order)`` at noise 0 must agree
+event-for-event with the replay — the plan->execution cross-check the
+tests assert.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.device import Topology
+from repro.exec.schedule import (
+    FWD_FRAC, Timeline, make_schedule, simulate_schedule)
+from repro.exec.stages import StagePlan
+from repro.runtime.telemetry import MeasurementStore, StepRecord
+
+
+def execute_pipeline(plan: StagePlan, true_topo: Topology, *,
+                     schedule: str = "1f1b",
+                     nominal_topo: Topology | None = None,
+                     graph_fp: str = "", topo_fp: str = "",
+                     step: int = 0, noise: float = 0.0, seed: int = 0,
+                     store: MeasurementStore | None = None,
+                     meta: dict | None = None) -> tuple:
+    """Execute one pipelined step on ``true_topo``; returns
+    ``(StepRecord, Timeline)``. ``noise`` adds multiplicative jitter
+    (relative std-dev) per recorded sample."""
+    nominal = nominal_topo or true_topo
+    rng = np.random.default_rng(seed)
+
+    def jitter():
+        return 1.0 + noise * float(rng.standard_normal()) if noise else 1.0
+
+    order = make_schedule(schedule, plan.n_stages, plan.n_micro)
+    tl: Timeline = simulate_schedule(plan, true_topo, order)
+    M = max(plan.n_micro, 1)
+
+    compute, collectives = [], []
+    stage_events = []
+    for e in tl.events:
+        dur = e.dur * jitter()
+        spec = plan.stages[e.stage]
+        if e.kind in ("F", "B"):
+            frac = FWD_FRAC if e.kind == "F" else 1.0 - FWD_FRAC
+            compute.append({
+                "gpu_type": spec.gpu_type, "flops": spec.flops / M * frac,
+                "time": dur, "stage": e.stage, "mb": e.mb,
+                "kind": e.kind})
+        else:                              # "X": boundary transfer
+            from repro.exec.schedule import BOUNDARY_DIR_FRAC
+            src = plan.stages[e.src]
+            gi, gj = src.device_group, spec.device_group
+            nb = plan.stages[min(e.src, e.stage)].out_bytes \
+                * BOUNDARY_DIR_FRAC / M
+            collectives.append({
+                "kind": "xfer", "nbytes": nb, "n_dev": 2,
+                "nominal_bw": nominal.nominal_bw(gi, gj),
+                "link": "p2p", "pair": f"{gi}-{gj}", "time": dur})
+        stage_events.append({"kind": e.kind, "stage": e.stage,
+                             "mb": e.mb, "start": e.start,
+                             "finish": e.start + dur})
+
+    busy = {str(s.device_group): tl.stage_busy[i]
+            for i, s in enumerate(plan.stages)}
+    rec = StepRecord(
+        graph_fp=graph_fp, topo_fp=topo_fp, step=step,
+        wall_time=tl.makespan * jitter(),
+        device_busy=busy, compute=compute, collectives=collectives,
+        meta=dict(meta or {}, executor="pipeline-replay",
+                  schedule=schedule, n_stages=plan.n_stages,
+                  n_micro=plan.n_micro,
+                  bubble_frac=tl.bubble_fraction(),
+                  true_topo=true_topo.name, events=stage_events))
+    if store is not None:
+        store.append(rec)
+    return rec, tl

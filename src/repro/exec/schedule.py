@@ -1,0 +1,299 @@
+"""Microbatch pipeline schedules as explicit event lists.
+
+A schedule is, per stage, an ordered list of ``Event``s — ``F(s, m)``
+(forward of microbatch ``m`` on stage ``s``) and ``B(s, m)`` (backward).
+Two classic schedules are provided:
+
+  * **GPipe**: all forwards, then all backwards (backwards in reverse
+    microbatch order). Activation stash peaks at ``n_micro`` per stage.
+  * **1F1B** (PipeDream-flush): each stage runs a warm-up of
+    ``min(S - s, M)`` forwards, then alternates one-forward/one-backward,
+    then drains. Stash peaks at ``min(S - s, M)`` — bounded by the stage
+    depth, so deeper microbatching is free memory-wise.
+
+``simulate_schedule`` lowers a (StagePlan, schedule) pair onto a
+``Topology`` as a dependency-driven timeline: per-stage serial execution
+in schedule order, cross-stage activation / activation-grad transfers
+serialized per directed link. The same timeline code is the *predicted*
+side of the replay executor's cross-check (``exec.replay``) and the
+bubble-fraction source for the pipeline benchmark.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.device import Topology
+from repro.core.profiler import compute_time, transfer_time
+
+SCHEDULES = ("gpipe", "1f1b")
+
+# fraction of a group's traced flops attributed to the forward pass (the
+# training trace contains fwd+bwd; backward is ~2x forward for dense nets)
+FWD_FRAC = 1.0 / 3.0
+
+# a stage boundary's crossing bytes come from the fwd+bwd trace, so they
+# cover BOTH directions: the F-edge carries the activation half, the
+# B-edge the activation-grad half
+BOUNDARY_DIR_FRAC = 0.5
+
+
+@dataclass(frozen=True)
+class Event:
+    kind: str                 # "F" | "B"
+    stage: int
+    mb: int
+
+    def __repr__(self):
+        return f"{self.kind}{self.stage}.{self.mb}"
+
+
+def gpipe_schedule(n_stages: int, n_micro: int) -> list:
+    """Per-stage issue order: F(0..M-1) then B(M-1..0)."""
+    out = []
+    for s in range(n_stages):
+        evs = [Event("F", s, m) for m in range(n_micro)]
+        evs += [Event("B", s, m) for m in reversed(range(n_micro))]
+        out.append(evs)
+    return out
+
+
+def one_f_one_b_schedule(n_stages: int, n_micro: int) -> list:
+    """Per-stage issue order with warm-up ``min(S - s, M)`` forwards."""
+    out = []
+    for s in range(n_stages):
+        warm = min(n_stages - s, n_micro)
+        evs = [Event("F", s, m) for m in range(warm)]
+        nf, nb = warm, 0
+        while nb < n_micro:
+            evs.append(Event("B", s, nb))
+            nb += 1
+            if nf < n_micro:
+                evs.append(Event("F", s, nf))
+                nf += 1
+        out.append(evs)
+    return out
+
+
+def make_schedule(name: str, n_stages: int, n_micro: int) -> list:
+    if name == "gpipe":
+        return gpipe_schedule(n_stages, n_micro)
+    if name == "1f1b":
+        return one_f_one_b_schedule(n_stages, n_micro)
+    raise ValueError(f"unknown schedule {name!r} (use one of {SCHEDULES})")
+
+
+def validate_schedule(order: list, n_stages: int, n_micro: int) -> None:
+    """Schedule invariants; raises ``ValueError`` on violation:
+
+      * every stage issues F and B of every microbatch exactly once;
+      * per stage, B(s, m) comes after F(s, m);
+      * a consistent global order exists: following per-stage order plus
+        the cross-stage deps F(s,m) after F(s-1,m) and B(s,m) after
+        B(s+1,m) never deadlocks (no stage executes a microbatch before
+        its predecessor produced it).
+    """
+    if len(order) != n_stages:
+        raise ValueError(f"{len(order)} stage lists != {n_stages} stages")
+    for s, evs in enumerate(order):
+        for kind in ("F", "B"):
+            mbs = [e.mb for e in evs if e.kind == kind]
+            if sorted(mbs) != list(range(n_micro)):
+                raise ValueError(f"stage {s}: {kind} covers {sorted(mbs)}")
+        seen_f = set()
+        for e in evs:
+            if e.kind == "F":
+                seen_f.add(e.mb)
+            elif e.mb not in seen_f:
+                raise ValueError(f"stage {s}: B before F for mb {e.mb}")
+    flatten_schedule(order, n_stages, n_micro)   # raises on deadlock
+
+
+def flatten_schedule(order: list, n_stages: int, n_micro: int) -> list:
+    """A single dependency-consistent global issue order (the eager
+    engine executes events in this order). Raises on deadlock."""
+    ptr = [0] * n_stages
+    done: set = set()
+    out = []
+    total = sum(len(evs) for evs in order)
+    while len(out) < total:
+        progressed = False
+        for s in range(n_stages):
+            if ptr[s] >= len(order[s]):
+                continue
+            e = order[s][ptr[s]]
+            if e.kind == "F":
+                dep = None if s == 0 else Event("F", s - 1, e.mb)
+            else:
+                dep = None if s == n_stages - 1 else Event("B", s + 1, e.mb)
+            need_f = Event("F", s, e.mb) if e.kind == "B" else None
+            if (dep is None or dep in done) and \
+                    (need_f is None or need_f in done):
+                out.append(e)
+                done.add(e)
+                ptr[s] += 1
+                progressed = True
+        if not progressed:
+            raise ValueError("schedule deadlocks: unsatisfiable order")
+    return out
+
+
+def peak_stash(order: list) -> list:
+    """Per-stage peak number of in-flight forward activations (stash) —
+    the pipeline's activation-memory driver: GPipe peaks at n_micro,
+    1F1B at min(S - s, M)."""
+    peaks = []
+    for evs in order:
+        cur = peak = 0
+        for e in evs:
+            cur += 1 if e.kind == "F" else -1
+            peak = max(peak, cur)
+        peaks.append(peak)
+    return peaks
+
+
+def max_feasible_micro(plan, schedule: str, *, mb_act_bytes: float,
+                       mem_budget: float, cap: int = 64) -> int:
+    """Largest microbatch count whose peak activation stash fits
+    ``mem_budget`` per stage at a FIXED microbatch size (``mb_act_bytes``
+    per stage per microbatch). GPipe stashes all M microbatches, so its
+    feasible M is capped by memory; 1F1B's stash is bounded by the stage
+    depth regardless of M — the schedule's headline advantage."""
+    best = 0
+    for m in range(1, cap + 1):
+        order = make_schedule(schedule, plan.n_stages, m)
+        if max(peak_stash(order)) * mb_act_bytes <= mem_budget:
+            best = m
+    return best
+
+
+# ----------------------------------------------------------- timeline
+
+@dataclass
+class TimedEvent:
+    kind: str                 # "F" | "B" | "X" (boundary transfer)
+    stage: int                # executing stage (transfers: dst stage)
+    mb: int
+    start: float
+    finish: float
+    src: int = -1             # transfers: producing stage (F: stage-1,
+    #                           B: stage+1); -1 for compute events
+
+    @property
+    def dur(self):
+        return self.finish - self.start
+
+
+@dataclass
+class Timeline:
+    events: list                         # list[TimedEvent]
+    makespan: float
+    stage_busy: list                     # compute seconds per stage
+    n_stages: int
+    n_micro: int
+    meta: dict = field(default_factory=dict)
+
+    def bubble_fraction(self) -> float:
+        """1 - busy/(S * makespan): the idle share of stage-seconds."""
+        if self.makespan <= 0:
+            return 0.0
+        return 1.0 - sum(self.stage_busy) / (self.n_stages * self.makespan)
+
+    def finish_of(self, kind: str, stage: int, mb: int) -> float:
+        for e in self.events:
+            if e.kind == kind and e.stage == stage and e.mb == mb:
+                return e.finish
+        raise KeyError((kind, stage, mb))
+
+
+def _stage_speed(plan, topo: Topology, s: int) -> float:
+    dg = topo.groups[plan.stages[s].device_group]
+    return dg.flops * max(dg.num_gpus, 1)
+
+
+def simulate_schedule(plan, topo: Topology, order: list,
+                      *, fwd_frac: float = FWD_FRAC) -> Timeline:
+    """Dependency-driven timeline of a schedule on a topology.
+
+    Per-stage compute is serial in the stage's issue order; forward of
+    microbatch m on stage s waits for stage s-1's forward of m plus the
+    boundary activation transfer; backward waits symmetrically on stage
+    s+1 plus the activation-grad transfer. Transfers serialize per
+    directed (src, dst) device-group link, so a congested boundary link
+    shows up as pipeline bubble exactly like on a real cluster.
+    """
+    S = len(order)
+    M = max((e.mb for evs in order for e in evs), default=-1) + 1
+    fwd_t, bwd_t = [], []
+    for s in range(S):
+        flops_m = plan.stages[s].flops / max(M, 1)
+        speed = _stage_speed(plan, topo, s)
+        fwd_t.append(compute_time(flops_m * fwd_frac, speed))
+        bwd_t.append(compute_time(flops_m * (1.0 - fwd_frac), speed))
+
+    def xfer_t(src_stage: int, dst_stage: int) -> float:
+        gi = plan.stages[src_stage].device_group
+        gj = plan.stages[dst_stage].device_group
+        nb = plan.stages[min(src_stage, dst_stage)].out_bytes \
+            * BOUNDARY_DIR_FRAC / max(M, 1)
+        if nb <= 0 or gi == gj:
+            return 0.0
+        return transfer_time(nb, topo.bw(gi, gj), topo.latency)
+
+    finish: dict = {}                  # (kind, stage, mb) -> finish time
+    stage_free = [0.0] * S
+    link_free: dict = {}               # (src_g, dst_g) -> free time
+    busy = [0.0] * S
+    events: list = []
+    ptr = [0] * S
+
+    def ready(e: Event):
+        """(ready time, transfer TimedEvent|None) for event e."""
+        if e.kind == "F":
+            if e.stage == 0:
+                return 0.0, None
+            src, key = e.stage - 1, ("F", e.stage - 1, e.mb)
+        else:
+            if e.stage == S - 1:
+                return finish.get(("F", e.stage, e.mb), 0.0), None
+            src, key = e.stage + 1, ("B", e.stage + 1, e.mb)
+        if key not in finish:
+            return None, None
+        t0 = finish[key]
+        dur = xfer_t(src, e.stage)
+        if dur <= 0:
+            return t0, None
+        gi = plan.stages[src].device_group
+        gj = plan.stages[e.stage].device_group
+        s0 = max(t0, link_free.get((gi, gj), 0.0))
+        link_free[(gi, gj)] = s0 + dur
+        return s0 + dur, TimedEvent("X", e.stage, e.mb, s0, s0 + dur,
+                                    src=src)
+
+    total = sum(len(evs) for evs in order)
+    while len(finish) < total:
+        progressed = False
+        for s in range(S):
+            if ptr[s] >= len(order[s]):
+                continue
+            e = order[s][ptr[s]]
+            if e.kind == "B" and ("F", s, e.mb) not in finish:
+                continue
+            rt, xev = ready(e)
+            if rt is None:
+                continue
+            if xev is not None:
+                events.append(xev)
+            t = fwd_t[s] if e.kind == "F" else bwd_t[s]
+            start = max(rt, stage_free[s])
+            stage_free[s] = start + t
+            busy[s] += t
+            finish[(e.kind, s, e.mb)] = start + t
+            events.append(TimedEvent(e.kind, s, e.mb, start, start + t))
+            ptr[s] += 1
+            progressed = True
+        if not progressed:
+            raise ValueError("schedule deadlocks on the timeline")
+    makespan = max((e.finish for e in events), default=0.0)
+    return Timeline(events=events, makespan=makespan, stage_busy=busy,
+                    n_stages=S, n_micro=M,
+                    meta={"fwd_t": fwd_t, "bwd_t": bwd_t})

@@ -37,6 +37,15 @@ def make_host_mesh():
     return _make_mesh((n,), ("data",))
 
 
+def stage_device_sets(stage_plan, devices=None) -> list:
+    """Per-stage device slices for a ``repro.exec.stages.StagePlan`` on
+    the local host (proportional to the topology's group sizes).
+    Raises ``repro.exec.stages.PipelineInfeasible`` when the host has
+    fewer devices than stages — callers fall back to single-mesh rules."""
+    return stage_plan.assign_local_devices(
+        jax.devices() if devices is None else devices)
+
+
 # TPU v5e hardware constants (per chip) used by the roofline analysis.
 HW = {
     "peak_flops_bf16": 197e12,   # FLOP/s

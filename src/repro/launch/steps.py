@@ -110,6 +110,48 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, rules: AxisRules,
     return train_step
 
 
+def make_pipeline_train_step(opt: AdamW, runner,
+                             options: StepOptions = StepOptions()):
+    """Train-step builder for the pipeline execution engine.
+
+    ``runner`` is a ``repro.exec.engine.PipelineRunner``; params/opt
+    state are per-stage lists committed to the stage devices. The
+    optimizer update runs per stage (jitted once per stage, computation
+    stays on the stage's devices); gradient clipping is by the GLOBAL
+    norm across stages — per-stage squared norms are tiny scalars, so
+    the cross-stage reduction happens on host like a real multi-host
+    trainer's scalar allreduce.
+    """
+    import jax.numpy as jnp
+    from repro.optim.adam import global_norm
+
+    sq = jax.jit(lambda g: global_norm(g) ** 2)
+
+    upd = jax.jit(
+        lambda p, s, g, step, scale: opt.update(
+            p, s,
+            jax.tree.map(lambda gg: (gg.astype(jnp.float32)
+                                     * scale).astype(gg.dtype), g),
+            step))
+
+    def step_fn(params_list, opt_state_list, step, batch, *,
+                record: bool = False):
+        grads, stats = runner.step(params_list, batch, record=record)
+        gnorm = float(sum(float(sq(g)) for g in grads)) ** 0.5
+        scale = jnp.asarray(min(1.0, options.clip_norm / max(gnorm, 1e-9)),
+                            jnp.float32)
+        new_p, new_s = [], []
+        for p, s, g in zip(params_list, opt_state_list, grads):
+            p2, s2 = upd(p, s, g, step, scale)
+            new_p.append(p2)
+            new_s.append(s2)
+        metrics = dict(stats.metrics, loss=stats.loss, grad_norm=gnorm,
+                       wall_time=stats.wall_time,
+                       peak_stash=stats.peak_stash)
+        return new_p, new_s, metrics
+    return step_fn
+
+
 def make_prefill_step(cfg: ModelConfig, rules: AxisRules):
     def prefill(params, batch):
         with axis_rules(rules):

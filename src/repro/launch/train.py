@@ -28,6 +28,132 @@ from repro.models import init_params
 from repro.optim.adam import AdamW
 
 
+def resolve_pipeline(plan, mode: str):
+    """Decide whether a lowered TAG plan's PIPE stages can really run.
+
+    Returns the ``StagePlan`` to execute, or ``None`` for the single-mesh
+    path — emitting an explicit log line either way, so a strategy with
+    PIPE actions is never *silently* degraded to pure-DP axis rules.
+    """
+    sp = plan.stage_plan
+    if sp is None:
+        if plan.summary.get("options", {}).get("PIPE"):
+            print("TAG pipeline: strategy has PIPE actions but no "
+                  "multi-group pipeline spine; using single-mesh axis "
+                  "rules", flush=True)
+        return None
+    if mode == "off":
+        print(f"TAG pipeline: --pipeline off; degrading "
+              f"{sp.n_stages}-stage plan to single-mesh axis rules",
+              flush=True)
+        return None
+    from repro.exec.stages import PipelineInfeasible
+    try:
+        mesh_mod.stage_device_sets(sp)
+    except PipelineInfeasible as e:
+        print(f"WARNING: TAG pipeline fallback — {e}; degrading to "
+              f"single-mesh DP axis rules", flush=True)
+        return None
+    print(f"TAG pipeline: executing {sp.n_stages} stages "
+          f"(placement={list(sp.placement)}, "
+          f"sync={[s.sync for s in sp.stages]})", flush=True)
+    return sp
+
+
+def _stage_key(s: int) -> str:
+    return f"stage{s}"
+
+
+def run_pipeline(args, cfg, stage_plan):
+    """Train via the pipeline execution engine (repro.exec)."""
+    from repro.exec import PipelineRunner, split_model
+    from repro.optim.adam import AdamW
+
+    n_micro = max(1, args.n_micro)
+    while args.batch % n_micro:
+        n_micro -= 1
+    if n_micro != args.n_micro:
+        print(f"pipeline: n_micro {args.n_micro} -> {n_micro} "
+              f"(must divide batch {args.batch})", flush=True)
+    schedule = "1f1b" if args.pipeline == "auto" else args.pipeline
+
+    device_sets = mesh_mod.stage_device_sets(stage_plan)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    splits = stage_plan.layer_splits(cfg.num_periods)
+    stage_params, fns, mb_keys, tied = split_model(
+        cfg, params, stage_plan.n_stages, splits=splits)
+
+    store = None
+    if args.telemetry_dir:
+        from repro.runtime.telemetry import MeasurementStore
+        store = MeasurementStore(args.telemetry_dir)
+    runner = PipelineRunner(
+        fns, stage_plan, device_sets, schedule=schedule, n_micro=n_micro,
+        mb_keys=mb_keys, tied_ref=tied, store=store,
+        meta={"arch": args.arch, "batch": args.batch, "seq": args.seq,
+              "launcher": "train"})
+
+    opt = AdamW(lr=args.lr)
+    params_list = runner.place_params(stage_params)
+    opt_state_list = [runner.place(s, opt.init(p))
+                      for s, p in enumerate(params_list)]
+    start_step = 0
+    if getattr(args, "resume", False) and args.ckpt_dir \
+            and latest_step(args.ckpt_dir) is not None:
+        start_step, tree = load_checkpoint(args.ckpt_dir)
+        keys = [_stage_key(s) for s in range(stage_plan.n_stages)]
+        if sorted(tree["params"]) != sorted(keys):
+            raise ValueError(
+                f"checkpoint in {args.ckpt_dir} is not a "
+                f"{stage_plan.n_stages}-stage pipeline checkpoint — "
+                f"resume it with the matching stage map (or without "
+                f"--tag-search for single-mesh checkpoints)")
+        params_list = [runner.place(s, tree["params"][k])
+                       for s, k in enumerate(keys)]
+        opt_state_list = [runner.place(s, tree["opt_state"][k])
+                          for s, k in enumerate(keys)]
+        print(f"resumed pipelined run from step {start_step}", flush=True)
+    step_fn = steps_mod.make_pipeline_train_step(opt, runner)
+
+    ds = SyntheticDataset(
+        cfg.vocab_size, args.seq, args.batch, seed=args.seed,
+        frontend_tokens=cfg.frontend_tokens if cfg.frontend != "none" else 0,
+        d_model=cfg.d_model)
+
+    losses = []
+    t_start = time.time()
+    for step in range(start_step, args.steps):
+        batch = jax.tree.map(jnp.asarray, ds.batch(step))
+        params_list, opt_state_list, metrics = step_fn(
+            params_list, opt_state_list, jnp.asarray(step, jnp.int32),
+            batch, record=store is not None)
+        losses.append(metrics["loss"])
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss={metrics['loss']:.4f} "
+                  f"ce={metrics['ce']:.4f} "
+                  f"gnorm={metrics['grad_norm']:.3f} "
+                  f"[pipeline {schedule} x{stage_plan.n_stages}]",
+                  flush=True)
+        if args.ckpt_dir and args.ckpt_every and \
+                (step + 1) % args.ckpt_every == 0:
+            # per-stage trees keyed by stage (the flat-npz checkpointer
+            # walks dicts, not lists)
+            save_checkpoint(
+                args.ckpt_dir, step + 1,
+                {"params": {_stage_key(s): p
+                            for s, p in enumerate(params_list)},
+                 "opt_state": {_stage_key(s): o
+                               for s, o in enumerate(opt_state_list)}})
+    dt = time.time() - t_start
+    n = max(args.steps - start_step, 1)
+    tail = f"; loss {losses[0]:.4f} -> {losses[-1]:.4f}" if losses else ""
+    print(f"done: {n} pipelined steps in {dt:.1f}s "
+          f"({dt/n*1e3:.0f} ms/step, schedule={schedule}, "
+          f"stages={stage_plan.n_stages}, n_micro={n_micro})"
+          f"{tail}", flush=True)
+    return losses
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCH_IDS), default="qwen2-1.5b")
@@ -44,6 +170,13 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=1)
     ap.add_argument("--tag-search", action="store_true",
                     help="run TAG strategy search and apply its plan")
+    ap.add_argument("--pipeline", choices=["auto", "off", "gpipe", "1f1b"],
+                    default="auto",
+                    help="how to execute PIPE actions in a TAG plan: "
+                         "auto/gpipe/1f1b run the pipeline engine "
+                         "(auto = 1f1b), off forces single-mesh rules")
+    ap.add_argument("--n-micro", type=int, default=4,
+                    help="microbatches per pipelined step")
     ap.add_argument("--loss-chunk", type=int, default=0)
     ap.add_argument("--telemetry-dir", default="",
                     help="record per-step telemetry (runtime feedback "
@@ -70,9 +203,13 @@ def main(argv=None):
         result = tag_mod.optimize(
             lambda p, b: model_loss(red, p, b, remat=False)[0],
             rp, rb, topo, name=args.arch, iterations=24, n_groups=24)
-        plan = lower_strategy(result.strategy, result.gg, topo, mesh)
+        plan = lower_strategy(result.strategy, result.gg, topo, mesh,
+                              n_micro=args.n_micro)
         print(f"TAG plan: speedup={result.speedup:.2f}x "
               f"summary={json.dumps(plan.summary)}", flush=True)
+        stage_plan = resolve_pipeline(plan, args.pipeline)
+        if stage_plan is not None:
+            return run_pipeline(args, cfg, stage_plan)
 
     opt = AdamW(lr=args.lr)
     key = jax.random.PRNGKey(args.seed)
@@ -81,6 +218,11 @@ def main(argv=None):
     start_step = 0
     if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
         start_step, tree = load_checkpoint(args.ckpt_dir)
+        if _stage_key(0) in tree.get("params", {}):
+            raise ValueError(
+                f"checkpoint in {args.ckpt_dir} is a per-stage pipeline "
+                f"checkpoint — resume it through the pipeline path "
+                f"(--tag-search with the same stage map)")
         params, opt_state = tree["params"], tree["opt_state"]
         print(f"resumed from step {start_step}", flush=True)
 

@@ -28,6 +28,47 @@ from jax.experimental.shard_map import shard_map
 SYNC_MODES = ("allreduce", "ps", "sfb")
 
 
+# -------------------------------------------------- grad-sync primitives
+# Reusable inside any shard_map body (the dense layers below AND the
+# pipeline engine's per-stage backward in repro.exec.engine).
+
+def allreduce_grad(g, axis: str):
+    """DP-NCCL analogue: one psum, every shard holds the summed grad."""
+    return jax.lax.psum(g, axis)
+
+
+def ps_grad(g, axis: str, n_dev: int):
+    """Sharded parameter server (ZeRO round-robin owners): reduce-scatter
+    one flat shard per owner, then all-gather. Pads to a multiple of the
+    axis size so arbitrary leaf shapes shard evenly."""
+    flat = g.reshape(-1)
+    pad = (-flat.size) % n_dev
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((pad,), flat.dtype)])
+    shard = jax.lax.psum_scatter(flat, axis, scatter_dimension=0,
+                                 tiled=True)
+    full = jax.lax.all_gather(shard, axis, tiled=True)
+    if pad:
+        full = full[:g.size]
+    return full.reshape(g.shape)
+
+
+def tree_grad_sync(grads, axis: str, sync: str, n_dev: int):
+    """Apply one sync mode to every leaf of a gradient pytree. ``sfb``
+    is intentionally absent: SFB does not sync gradients — callers
+    broadcast the sufficient factors and recompute (see
+    ``repro.exec.engine``'s backward and ``sfb_dense_apply`` below)."""
+    if n_dev <= 1:
+        return grads
+    if sync == "allreduce":
+        return jax.tree.map(lambda g: allreduce_grad(g, axis), grads)
+    if sync == "ps":
+        return jax.tree.map(lambda g: ps_grad(g, axis, n_dev), grads)
+    raise ValueError(f"tree_grad_sync cannot apply {sync!r} "
+                     f"(use one of allreduce|ps)")
+
+
 def sfb_dense_apply(mesh: Mesh, axis: str, sync: str):
     """Returns dense(x, w) with x batch-sharded over ``axis``, w replicated,
     and the chosen gradient synchronization executed explicitly.
@@ -45,18 +86,16 @@ def sfb_dense_apply(mesh: Mesh, axis: str, sync: str):
                       in_specs=(P(axis, None), P(None, None)),
                       out_specs=P(axis, None), check_rep=False)
 
+    n_dev = mesh.shape[axis]
+
     def _dw_local(x, dy):
         if sync == "sfb":
             xg = jax.lax.all_gather(x, axis, tiled=True)
             dyg = jax.lax.all_gather(dy, axis, tiled=True)
             return xg.T @ dyg
         if sync == "ps":
-            # round-robin shard owners (ZeRO-style sharded PS):
-            # reduce-scatter on the leading dim, then all-gather
-            shard = jax.lax.psum_scatter(x.T @ dy, axis,
-                                         scatter_dimension=0, tiled=True)
-            return jax.lax.all_gather(shard, axis, tiled=True)
-        return jax.lax.psum(x.T @ dy, axis)
+            return ps_grad(x.T @ dy, axis, n_dev)
+        return allreduce_grad(x.T @ dy, axis)
 
     # dw is identical on every shard after the sync -> replicated out_spec
     dw_sm = shard_map(_dw_local, mesh=mesh,

@@ -47,6 +47,12 @@ class CalibrationProfile:
     latency: float | None = None                # fitted per-transfer alpha
     n_records: int = 0
     meta: dict = field(default_factory=dict)
+    # per-(gi, gj) link-pair fits: "gi-gj" -> CommFit. Fitted only once a
+    # pair accumulates >= min_pair_samples transfers (fit_profile arg);
+    # sparser pairs keep the per-class fit above. Pipeline boundary
+    # transfers (repro.exec.replay / runtime.executor) tag their samples
+    # with the pair key that feeds this tier.
+    pairs: dict = field(default_factory=dict)
 
     def device_flops(self, gpu_type: str, default: float) -> float:
         u = self.util.get(gpu_type)
@@ -70,6 +76,10 @@ class CalibrationProfile:
             t2.coll_eff_cross = self.links["cross"].eff
         if self.latency is not None:
             t2.latency = self.latency
+        for pair, fit in self.pairs.items():
+            gi, gj = (int(x) for x in pair.split("-"))
+            if gi < t2.m and gj < t2.m:
+                t2.pair_eff[(gi, gj)] = fit.eff
         if topo.name:
             t2.name = f"{topo.name}+calib"
         return t2
@@ -78,6 +88,7 @@ class CalibrationProfile:
     def to_dict(self) -> dict:
         return {"version": PROFILE_VERSION, "util": self.util,
                 "links": {k: v.to_dict() for k, v in self.links.items()},
+                "pairs": {k: v.to_dict() for k, v in self.pairs.items()},
                 "latency": self.latency, "n_records": self.n_records,
                 "meta": self.meta}
 
@@ -89,6 +100,8 @@ class CalibrationProfile:
         return cls(util={k: float(v) for k, v in d.get("util", {}).items()},
                    links={k: CommFit.from_dict(v)
                           for k, v in d.get("links", {}).items()},
+                   pairs={k: CommFit.from_dict(v)
+                          for k, v in d.get("pairs", {}).items()},
                    latency=d.get("latency"),
                    n_records=int(d.get("n_records", 0)),
                    meta=d.get("meta", {}))
@@ -139,12 +152,19 @@ def uniform_profile(topo: Topology, scale: float,
               "compute_samples": 0, "comm_samples": 0})
 
 
-def fit_profile(records: list, topo: Topology) -> CalibrationProfile:
+def fit_profile(records: list, topo: Topology, *,
+                min_pair_samples: int = 8) -> CalibrationProfile:
     """Fit a CalibrationProfile from observed StepRecords.
 
     ``topo`` is the NOMINAL topology the samples were recorded against —
     it supplies peak specs, the latency prior for rank-deficient comm
     fits, and names which device types exist.
+
+    Per-link-pair tier: collective samples carrying a ``"pair"`` key
+    ("gi-gj", e.g. pipeline boundary transfers) are additionally
+    bucketed per pair; every pair with at least ``min_pair_samples``
+    observations gets its own (eff, alpha) fit — sparser pairs fall back
+    to the per-class fit.
     """
     by_type: dict = {}
     for r in records:
@@ -162,6 +182,7 @@ def fit_profile(records: list, topo: Topology) -> CalibrationProfile:
             util[t] = u
 
     by_class: dict = {}
+    by_pair: dict = {}
     for r in records:
         for s in r.collectives:
             nb, nd = float(s.get("nbytes", 0.0)), int(s.get("n_dev", 2))
@@ -172,8 +193,10 @@ def fit_profile(records: list, topo: Topology) -> CalibrationProfile:
             kind = s.get("kind", "xfer")
             ring = 2.0 * (nd - 1) / nd if kind in ("allreduce", "ps") \
                 else 1.0
-            by_class.setdefault(s.get("link", "p2p"), []).append(
-                (ring * nb / bw, _lat_mult(kind, nd), dt))
+            sample = (ring * nb / bw, _lat_mult(kind, nd), dt)
+            by_class.setdefault(s.get("link", "p2p"), []).append(sample)
+            if s.get("pair"):
+                by_pair.setdefault(str(s["pair"]), []).append(sample)
     links = {}
     alphas = []
     for cls_name, samples in by_class.items():
@@ -183,11 +206,20 @@ def fit_profile(records: list, topo: Topology) -> CalibrationProfile:
             continue
         links[cls_name] = fit
         alphas.extend([fit.alpha] * fit.n_samples)
+    pairs = {}
+    for pair, samples in by_pair.items():
+        if len(samples) < min_pair_samples:
+            continue                   # sparse pair: class fit covers it
+        s, m, y = (list(x) for x in zip(*samples))
+        fit = fit_comm(s, m, y, prior_alpha=topo.latency)
+        if fit is not None:
+            pairs[pair] = fit
 
     return CalibrationProfile(
-        util=util, links=links,
+        util=util, links=links, pairs=pairs,
         latency=float(np.mean(alphas)) if alphas else None,
         n_records=len(records),
         meta={"topo": topo.name,
               "compute_samples": int(sum(len(v) for v in by_type.values())),
-              "comm_samples": int(sum(len(v) for v in by_class.values()))})
+              "comm_samples": int(sum(len(v) for v in by_class.values())),
+              "pair_samples": {k: len(v) for k, v in by_pair.items()}})

@@ -57,7 +57,7 @@ def execute_plan(tg, true_topo: Topology, *,
             collectives.append({
                 "kind": "xfer", "nbytes": t.nbytes, "n_dev": 2,
                 "nominal_bw": nominal.nominal_bw(gi, gj),
-                "link": "p2p", "time": dur})
+                "link": "p2p", "pair": f"{gi}-{gj}", "time": dur})
         elif t.kind in ("allreduce", "ps"):
             gids = sorted({g_of[d] for d in t.devices})
             b_nom, cls = nominal.nominal_bottleneck(gids)

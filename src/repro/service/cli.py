@@ -136,6 +136,23 @@ def cmd_policy_use(args) -> int:
     return 0
 
 
+def cmd_policy_evict(args) -> int:
+    """Registry-level eviction: drop a named checkpoint and/or apply
+    age / size / count budgets (pinned default is never evicted)."""
+    reg = _registry(args)
+    n = 0
+    if args.name:
+        n += int(reg.remove(args.name))
+    if args.max_age is not None or args.max_bytes is not None \
+            or args.max_count is not None:
+        n += reg.evict_expired(max_age_s=args.max_age,
+                               max_bytes=args.max_bytes,
+                               max_count=args.max_count)
+    print(json.dumps({"evicted": n, "remaining": len(reg),
+                      "default": reg.default_name()}))
+    return 0
+
+
 def cmd_inspect(args) -> int:
     store = PlanStore(path=args.cache_dir)
     rows = [{
@@ -328,6 +345,20 @@ def main(argv=None) -> int:
     pp.add_argument("--name", required=True)
     pp.add_argument("--cache-dir", default=".plans")
     pp.set_defaults(fn=cmd_policy_use)
+
+    pp = psub.add_parser("evict",
+                         help="drop checkpoints by name or budget "
+                              "(age/bytes/count; pinned default kept)")
+    pp.add_argument("--name", default=None,
+                    help="remove this checkpoint")
+    pp.add_argument("--max-age", type=float, default=None,
+                    help="evict checkpoints older than SECONDS")
+    pp.add_argument("--max-bytes", type=int, default=None,
+                    help="shrink the registry to this many bytes")
+    pp.add_argument("--max-count", type=int, default=None,
+                    help="keep at most N checkpoints (newest win)")
+    pp.add_argument("--cache-dir", default=".plans")
+    pp.set_defaults(fn=cmd_policy_evict)
 
     args = ap.parse_args(argv)
     return args.fn(args)

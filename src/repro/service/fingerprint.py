@@ -28,7 +28,13 @@ def fingerprint_topology(topo: Topology) -> str:
     return _sha({"groups": groups, "inter_bw": topo.inter_bw,
                  "latency": topo.latency,
                  "eff": [topo.coll_eff_cross, topo.coll_eff_intra,
-                         topo.p2p_eff]})
+                         topo.p2p_eff],
+                 # per-pair calibrated overrides (Topology.bw reads them;
+                 # two calibrations differing only per-pair must not
+                 # dedupe to one cached plan)
+                 "pair_eff": sorted(
+                     (f"{gi}-{gj}", eff)
+                     for (gi, gj), eff in topo.pair_eff.items())})
 
 
 def topology_structure_fingerprint(topo: Topology) -> str:

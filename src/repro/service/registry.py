@@ -97,10 +97,23 @@ class PolicyRegistry:
     All disk mutations take an fcntl lock on ``.lock`` in the registry
     directory (shared for reads), mirroring ``PlanStore`` — many launcher
     processes can train into / serve from one registry.
+
+    Eviction budgets (mirroring the plan store's disk-tier budgets):
+    ``max_age_s`` drops checkpoints older than this, ``max_bytes`` caps
+    the registry's on-disk size (json + npz, oldest evicted first),
+    ``max_count`` caps the checkpoint count (newest win). Budgets are
+    enforced on every ``save`` and on demand via ``evict_expired`` /
+    the ``repro-plan policy evict`` CLI. The pinned default is never a
+    victim — an operator's explicit pin outranks any budget.
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, *, max_age_s: float | None = None,
+                 max_bytes: int | None = None,
+                 max_count: int | None = None):
         self.path = path
+        self.max_age_s = max_age_s
+        self.max_bytes = max_bytes
+        self.max_count = max_count
         self._policies: dict = {}      # name -> (PolicyRecord, policy)
 
     # ------------------------------------------------------------- locking
@@ -138,6 +151,7 @@ class PolicyRegistry:
             with os.fdopen(fd, "w") as f:
                 json.dump(rec.to_dict(), f, sort_keys=True)
             os.replace(tmp, self._meta_path(name))
+            self._enforce_budgets()
         self._policies.pop(name, None)       # invalidate any cached build
         return rec
 
@@ -205,6 +219,95 @@ class PolicyRegistry:
                 return json.load(f).get("name")
         except (OSError, json.JSONDecodeError):
             return None
+
+    # ------------------------------------------------------------- budgets
+    def _entries(self):
+        """[(name, mtime, bytes)] per checkpoint, newest first (caller
+        holds the lock)."""
+        out = []
+        for fn in os.listdir(self.path):
+            if not fn.endswith(".json") or fn == DEFAULT_FILE:
+                continue
+            name = fn[:-len(".json")]
+            try:
+                st = os.stat(os.path.join(self.path, fn))
+            except (OSError, ValueError):
+                continue
+            mtime, size = st.st_mtime, st.st_size
+            try:
+                size += os.stat(self._params_path(name)).st_size
+            except (OSError, ValueError):
+                pass       # orphaned meta (npz gone): still budget-
+                #            visible so eviction can clean it up
+            out.append((name, mtime, size))
+        out.sort(key=lambda e: -e[1])
+        return out
+
+    def _remove_files(self, name: str) -> bool:
+        hit = False
+        for p in (self._meta_path(name), self._params_path(name)):
+            try:
+                os.remove(p)
+                hit = True
+            except OSError:
+                pass
+        self._policies.pop(name, None)
+        return hit
+
+    def _enforce_budgets(self, now: float | None = None) -> int:
+        """Apply age/size/count budgets (caller holds the lock). Newest
+        checkpoints win; the pinned default is never evicted."""
+        if self.max_age_s is None and self.max_bytes is None \
+                and self.max_count is None:
+            return 0
+        now = time.time() if now is None else now
+        pinned = self.default_name()
+        entries = [e for e in self._entries()]
+        victims = set()
+        if self.max_age_s is not None:
+            victims |= {n for n, mtime, _ in entries
+                        if now - mtime > self.max_age_s and n != pinned}
+        if self.max_count is not None:
+            # the pinned checkpoint always survives and fills a slot
+            kept = sum(1 for n, _, _ in entries
+                       if n == pinned and n not in victims)
+            for n, _, _ in entries:             # newest first
+                if n in victims or n == pinned:
+                    continue
+                kept += 1
+                if kept > self.max_count:
+                    victims.add(n)
+        if self.max_bytes is not None:
+            total = sum(s for n, _, s in entries if n not in victims)
+            for n, _, s in reversed(entries):   # oldest first
+                if total <= self.max_bytes:
+                    break
+                if n in victims or n == pinned:
+                    continue
+                victims.add(n)
+                total -= s
+        return sum(self._remove_files(n) for n in victims)
+
+    def evict_expired(self, *, max_age_s: float | None = None,
+                      max_bytes: int | None = None,
+                      max_count: int | None = None,
+                      now: float | None = None) -> int:
+        """One-shot cleanup under explicit budgets (the CLI's ``policy
+        evict``). Arguments default to the registry's standing budgets."""
+        saved = (self.max_age_s, self.max_bytes, self.max_count)
+        if max_age_s is not None:
+            self.max_age_s = max_age_s
+        if max_bytes is not None:
+            self.max_bytes = max_bytes
+        if max_count is not None:
+            self.max_count = max_count
+        try:
+            if not os.path.isdir(self.path):
+                return 0
+            with self._lock():
+                return self._enforce_budgets(now=now)
+        finally:
+            (self.max_age_s, self.max_bytes, self.max_count) = saved
 
     # ------------------------------------------------------------ selection
     def select(self, graph_fp: str | None = None,

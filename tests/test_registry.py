@@ -372,3 +372,73 @@ def test_mcts_runs_one_forward_per_episode_with_cached_policy(gg, topo):
     # exact (uncached) policies keep the per-vertex featurization path
     legacy = make_policy(state.cfg, state.params, cache_embeddings=False)
     assert not getattr(legacy, "cache_embeddings", False)
+
+
+# ------------------------------------------------- eviction budgets
+
+def _mk_ckpts(path, names, **budget):
+    import os
+    reg = PolicyRegistry(str(path), **budget)
+    for i, n in enumerate(names):
+        reg.save(n, GNNConfig(), {"w": np.ones(4, np.float32)},
+                 created=100.0 + i)
+        t = 100.0 + i
+        os.utime(os.path.join(str(path), f"{n}.json"), (t, t))
+    return reg
+
+
+def test_registry_max_count_budget(tmp_path):
+    """Constructor-enforced count quota, mirroring the plan store's
+    disk-tier budgets: newest checkpoints win on every save."""
+    reg = _mk_ckpts(tmp_path, ["a", "b", "c"], max_count=2)
+    assert sorted(r.name for r in reg.records()) == ["b", "c"]
+
+
+def test_registry_max_age_budget(tmp_path):
+    import time as _time
+    reg = _mk_ckpts(tmp_path, ["old", "new"])
+    n = reg.evict_expired(max_age_s=0.5,
+                          now=_time.time() + 100.0)
+    assert n == 2 and len(reg) == 0
+
+
+def test_registry_max_bytes_budget(tmp_path):
+    import os
+    reg = _mk_ckpts(tmp_path, ["a", "b", "c"])
+    per = sum(os.stat(os.path.join(str(tmp_path), f"a{ext}")).st_size
+              for ext in (".json", ".npz"))
+    n = reg.evict_expired(max_bytes=2 * per + per // 2)
+    assert n == 1                      # oldest ("a") evicted
+    assert sorted(r.name for r in reg.records()) == ["b", "c"]
+
+
+def test_registry_budget_never_evicts_pinned_default(tmp_path):
+    reg = _mk_ckpts(tmp_path, ["a", "b", "c"])
+    reg.set_default("a")               # oldest, would otherwise be evicted
+    n = reg.evict_expired(max_count=1)
+    assert n == 2
+    assert [r.name for r in reg.records()] == ["a"]
+    assert reg.default_name() == "a"
+
+
+def test_registry_cli_policy_evict(tmp_path):
+    import json as _json
+    from repro.service.cli import main as cli_main
+    _mk_ckpts(tmp_path / "policies", ["a", "b", "c"])
+    rc = cli_main(["policy", "evict", "--cache-dir", str(tmp_path),
+                   "--max-count", "1"])
+    assert rc == 0
+    reg = PolicyRegistry(str(tmp_path / "policies"))
+    assert [r.name for r in reg.records()] == ["c"]
+
+
+def test_registry_budget_evicts_orphaned_meta(tmp_path):
+    """A checkpoint whose npz vanished stays budget-visible so eviction
+    can clean up the orphan instead of ignoring it forever."""
+    import os
+    reg = _mk_ckpts(tmp_path, ["orphan", "whole"])   # orphan is older
+    os.remove(os.path.join(str(tmp_path), "orphan.npz"))
+    assert [r.name for r in reg.records()] == ["whole"]   # unservable
+    n = reg.evict_expired(max_count=1)
+    assert n == 1
+    assert not os.path.exists(os.path.join(str(tmp_path), "orphan.json"))

@@ -336,3 +336,75 @@ def test_observe_drift_evicts_and_replans(gg, topo):
     assert simulate(tg, calib).makespan \
         == pytest.approx(rec.wall_time, rel=1e-6)
     assert svc.stats()["replans"] == 1 and svc.stats()["observations"] == 2
+
+
+# ------------------------------------------- per-link-pair calibration
+
+def _pair_records(topo, true_eff: dict, n: int = 10):
+    from repro.core.profiler import transfer_time
+    recs = []
+    for i in range(n):
+        colls = []
+        for (gi, gj), eff in true_eff.items():
+            nb = 1e6 * (1 + i % 3)
+            colls.append({
+                "kind": "xfer", "nbytes": nb, "n_dev": 2,
+                "nominal_bw": topo.nominal_bw(gi, gj),
+                "link": "p2p", "pair": f"{gi}-{gj}",
+                "time": transfer_time(
+                    nb, topo.nominal_bw(gi, gj) * eff, topo.latency)})
+        recs.append(StepRecord(collectives=colls, step=i))
+    return recs
+
+
+def test_per_pair_calibration_fits_each_link(topo):
+    """ISSUE satellite: once a (gi, gj) pair crosses the sample
+    threshold it gets its own alpha/beta fit; ``apply`` routes it into
+    ``Topology.bw`` while other pairs keep the class fallback."""
+    true_eff = {(0, 1): 0.2, (0, 2): 0.45}
+    recs = _pair_records(topo, true_eff)
+    prof = fit_profile(recs, topo, min_pair_samples=8)
+    assert set(prof.pairs) == {"0-1", "0-2"}
+    for (gi, gj), eff in true_eff.items():
+        assert prof.pairs[f"{gi}-{gj}"].eff == pytest.approx(eff, rel=1e-6)
+    t2 = prof.apply(topo)
+    assert t2.bw(0, 1) == pytest.approx(
+        topo.nominal_bw(0, 1) * 0.2, rel=1e-6)
+    assert t2.bw(0, 2) == pytest.approx(
+        topo.nominal_bw(0, 2) * 0.45, rel=1e-6)
+    # unobserved pair keeps the class-level efficiency
+    assert t2.bw(1, 2) == pytest.approx(
+        topo.nominal_bw(1, 2) * t2.p2p_eff, rel=1e-6)
+
+
+def test_per_pair_calibration_falls_back_when_sparse(topo):
+    """Below the volume threshold the pair tier stays empty and the
+    per-link-class fit carries the signal (the pre-existing behavior)."""
+    recs = _pair_records(topo, {(0, 1): 0.2}, n=5)
+    prof = fit_profile(recs, topo, min_pair_samples=8)
+    assert prof.pairs == {}
+    assert prof.links["p2p"].eff == pytest.approx(0.2, rel=1e-6)
+    assert prof.meta["pair_samples"] == {"0-1": 5}
+
+
+def test_pair_profile_serialization_roundtrip(tmp_path, topo):
+    recs = _pair_records(topo, {(0, 1): 0.3})
+    prof = fit_profile(recs, topo, min_pair_samples=4)
+    p = str(tmp_path / "prof.json")
+    prof.save(p)
+    prof2 = CalibrationProfile.load(p)
+    assert set(prof2.pairs) == set(prof.pairs)
+    assert prof2.pairs["0-1"].eff == pytest.approx(
+        prof.pairs["0-1"].eff, rel=1e-12)
+    assert prof2.apply(make_testbed()).pair_eff
+
+
+def test_executor_records_pair_keys(topo, gg):
+    """The TaskGraph replay executor tags p2p samples with the pair key
+    the per-pair tier consumes."""
+    from repro.core.strategy import Action, Option, Strategy
+    strat = Strategy([Action((0, 1), Option.PS)] * gg.n)
+    tg = compile_strategy(gg, strat, topo)
+    rec = execute_plan(tg, topo)
+    xfers = [c for c in rec.collectives if c["kind"] == "xfer"]
+    assert xfers and all("pair" in c for c in xfers)
