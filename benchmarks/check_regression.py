@@ -1,0 +1,185 @@
+"""Benchmark-regression gate for CI.
+
+    python -m benchmarks.check_regression \
+        --baseline-dir results_baseline --fresh-dir results
+
+Compares freshly produced ``BENCH_*.json`` files against the committed
+baselines with per-metric tolerances: step time, bubble fraction and
+playouts-to-best may not regress more than 10% (other metrics carry
+their own tolerance), and boolean gates may not flip to false. Only
+deterministic simulation/count metrics are gated — wall-clock latencies
+vary across runners and are deliberately absent.
+
+The comparison logic (``compare`` / ``check_files``) is pure so the unit
+test can inject a synthetic regression and prove the gate catches it.
+"""
+from __future__ import annotations
+
+import argparse
+from dataclasses import dataclass
+import json
+import os
+import sys
+
+# (json path, kind, tolerance). Kinds:
+#   "lower"  — lower is better; fresh may exceed baseline by at most tol
+#   "higher" — higher is better; fresh may fall below baseline by tol
+#   "true"   — boolean gate; fresh must stay truthy
+METRICS = {
+    "BENCH_pipeline.json": [
+        ("1f1b.step_time_s", "lower", 0.10),
+        ("1f1b.bubble_frac", "lower", 0.10),
+        ("zb.step_time_s", "lower", 0.10),
+        ("pipeline_speedup_vs_dp", "higher", 0.10),
+        ("schedule_quality.1f1b.bubble_frac", "lower", 0.10),
+        ("schedule_quality.interleaved.bubble_frac", "lower", 0.10),
+        ("schedule_quality.zb.bubble_frac", "lower", 0.10),
+        ("schedule_quality.zb_lower_bubble", "true", 0.0),
+        ("schedule_quality.interleaved_lower_bubble", "true", 0.0),
+        ("mcts.aware_step_time_s", "lower", 0.10),
+        ("mcts.variants.zb.step_time_s", "lower", 0.10),
+        ("mcts.fifo_schedule_blind", "true", 0.0),
+        ("mcts.aware_pick_is_best", "true", 0.0),
+    ],
+    "BENCH_planner.json": [
+        ("warm.iters", "lower", 0.10),          # playouts-to-best
+        ("hit.byte_identical", "true", 0.0),
+        ("warm.no_worse_makespan", "true", 0.0),
+    ],
+    "BENCH_feedback.json": [
+        ("error_reduction_x", "higher", 0.50),
+        ("calibration_closes_2x", "true", 0.0),
+        ("drift.replanned", "true", 0.0),
+        ("drift.improved", "true", 0.0),
+        ("drift.replanned_time_s", "lower", 0.10),
+    ],
+    "BENCH_policy.json": [
+        ("tiny_win_count", "higher", 0.0),
+        ("tiny_dp_floor", "true", 0.0),
+        ("policy_guided_all", "true", 0.0),
+        ("transfer.0.guided_sim_time_s", "lower", 0.10),
+        ("struct_warmstart.warm_beats_dp", "true", 0.0),
+        ("struct_warmstart.warm_sim_time_s", "lower", 0.10),
+    ],
+}
+
+
+@dataclass
+class Violation:
+    file: str
+    path: str
+    kind: str
+    baseline: object
+    fresh: object
+    message: str
+
+    def __str__(self):
+        return (f"{self.file}:{self.path} [{self.kind}] "
+                f"baseline={self.baseline} fresh={self.fresh} — "
+                f"{self.message}")
+
+
+def lookup(doc: dict, path: str):
+    """Resolve a dotted path (integer components index into lists)."""
+    node = doc
+    for part in path.split("."):
+        if isinstance(node, list):
+            node = node[int(part)]
+        elif isinstance(node, dict):
+            if part not in node:
+                raise KeyError(path)
+            node = node[part]
+        else:
+            raise KeyError(path)
+    return node
+
+
+def compare(fname: str, baseline: dict, fresh: dict,
+            metrics=None) -> list:
+    """Violations of one fresh benchmark document vs its baseline."""
+    out = []
+    for path, kind, tol in (metrics if metrics is not None
+                            else METRICS.get(fname, [])):
+        try:
+            base = lookup(baseline, path)
+        except (KeyError, IndexError):
+            continue                    # metric added after the baseline
+        try:
+            new = lookup(fresh, path)
+        except (KeyError, IndexError):
+            out.append(Violation(fname, path, kind, base, None,
+                                 "metric missing from fresh results"))
+            continue
+        if kind == "true":
+            if not new:
+                out.append(Violation(fname, path, kind, base, new,
+                                     "boolean gate flipped to false"))
+        elif kind == "lower":
+            limit = float(base) * (1.0 + tol)
+            if float(new) > limit:
+                out.append(Violation(
+                    fname, path, kind, base, new,
+                    f"regressed >{tol:.0%} (limit {limit:.6g})"))
+        elif kind == "higher":
+            limit = float(base) * (1.0 - tol)
+            if float(new) < limit:
+                out.append(Violation(
+                    fname, path, kind, base, new,
+                    f"regressed >{tol:.0%} (limit {limit:.6g})"))
+        else:
+            raise ValueError(f"unknown metric kind {kind!r}")
+    return out
+
+
+def check_files(baseline_dir: str, fresh_dir: str,
+                metrics_by_file=None) -> tuple:
+    """-> (violations, notes). A baseline file without a fresh
+    counterpart is a violation (the benchmark silently stopped running);
+    a fresh file without a baseline is a note (new benchmark — commit
+    its results to start gating it)."""
+    spec = metrics_by_file if metrics_by_file is not None else METRICS
+    violations, notes = [], []
+    for fname, metrics in spec.items():
+        bpath = os.path.join(baseline_dir, fname)
+        fpath = os.path.join(fresh_dir, fname)
+        if not os.path.exists(bpath):
+            notes.append(f"{fname}: no committed baseline — skipped "
+                         f"(commit fresh results to start gating)")
+            continue
+        if not os.path.exists(fpath):
+            violations.append(Violation(
+                fname, "-", "presence", "present", "missing",
+                "benchmark produced no fresh results"))
+            continue
+        with open(bpath) as f:
+            baseline = json.load(f)
+        with open(fpath) as f:
+            fresh = json.load(f)
+        vs = compare(fname, baseline, fresh, metrics)
+        violations.extend(vs)
+        if not vs:
+            notes.append(f"{fname}: {len(metrics)} metric(s) ok")
+    return violations, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default="results_baseline",
+                    help="committed BENCH_*.json baselines")
+    ap.add_argument("--fresh-dir", default="results",
+                    help="freshly produced BENCH_*.json files")
+    args = ap.parse_args(argv)
+    violations, notes = check_files(args.baseline_dir, args.fresh_dir)
+    for n in notes:
+        print(f"gate: {n}")
+    if violations:
+        print(f"gate: {len(violations)} benchmark regression(s):")
+        for v in violations:
+            print(f"  FAIL {v}")
+        return 1
+    print("gate: no benchmark regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,9 @@
 """Shared helpers for the paper-table benchmarks."""
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.core.compiler import compile_strategy
-from repro.core.device import testbed, cloud, two_1080ti, homogeneous_2v100
 from repro.core.graph import group_graph
 from repro.core.jax_export import trace_training_graph
 from repro.core.mcts import MCTS
@@ -54,7 +51,6 @@ def mcmc_search(gg, topo, iters: int = 300, seed: int = 0,
     heterogeneity_blind, proposals are COSTED on a homogenized cluster
     (all devices = mean speed) and the result is evaluated on the true
     one — reproducing FlexFlow's blindness to device heterogeneity."""
-    from dataclasses import replace as dreplace
     import copy
     rng = np.random.default_rng(seed)
     topo_cost = topo

@@ -7,7 +7,8 @@ the largest win on VGG19 (comm-bound); ResNet101 gains the least.
 from __future__ import annotations
 
 from benchmarks.common import (
-    MODELS, dp_time, fmt_row, grouped, mcmc_search, tag_search, testbed)
+    MODELS, dp_time, fmt_row, grouped, mcmc_search, tag_search)
+from repro.core.device import testbed
 
 
 def run(iters: int = 60, models=None):

@@ -7,8 +7,8 @@ non-open-source baselines are compared via their reported numbers (same
 methodology as the paper §5.4)."""
 from __future__ import annotations
 
-from benchmarks.common import (
-    dp_time, fmt_row, grouped, homogeneous_2v100, tag_search)
+from benchmarks.common import dp_time, fmt_row, grouped, tag_search
+from repro.core.device import homogeneous_2v100
 
 # relative speed vs human expert, as REPORTED in the cited papers
 REPORTED = {

@@ -21,8 +21,9 @@ import os
 
 import numpy as np
 
-from benchmarks.common import fmt_row, grouped, testbed
+from benchmarks.common import fmt_row, grouped
 from repro.core.compiler import compile_strategy
+from repro.core.device import testbed
 from repro.core.simulator import simulate
 from repro.core.trainer import init_trainer, train_policy
 from repro.runtime import execute_plan, fit_profile

@@ -16,7 +16,8 @@ import json
 import os
 import time
 
-from benchmarks.common import fmt_row, grouped, testbed
+from benchmarks.common import fmt_row, grouped
+from repro.core.device import testbed
 from repro.service import PlannerService
 from repro.service.planner import PlanRequest
 

@@ -6,9 +6,10 @@ rarely use the P100s; PS/AR mixes vary per model; "duplicate" only at
 small batch."""
 from __future__ import annotations
 
-from benchmarks.common import MODELS, fmt_row, grouped, testbed
+from benchmarks.common import MODELS, fmt_row, grouped
+from repro.core.device import testbed
 from repro.core.mcts import MCTS
-from repro.core.tag import TAGResult, sfb_post_pass, evaluate_strategy
+from repro.core.tag import TAGResult, evaluate_strategy
 
 
 def run(models=None, iters=60):

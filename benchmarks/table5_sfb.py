@@ -8,8 +8,8 @@ PS/AR.
 """
 from __future__ import annotations
 
-from benchmarks.common import (
-    MODELS, dp_time, fmt_row, grouped, tag_search, two_1080ti)
+from benchmarks.common import MODELS, dp_time, fmt_row, grouped, tag_search
+from repro.core.device import two_1080ti
 
 
 def run(models=None):

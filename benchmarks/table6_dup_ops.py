@@ -5,7 +5,8 @@ from __future__ import annotations
 
 from collections import Counter
 
-from benchmarks.common import MODELS, grouped, two_1080ti, fmt_row
+from benchmarks.common import MODELS, fmt_row, grouped
+from repro.core.device import two_1080ti
 from repro.core.tag import dp_baseline, sfb_post_pass
 
 

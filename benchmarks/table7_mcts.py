@@ -11,8 +11,8 @@ import os
 
 import numpy as np
 
-from benchmarks.common import MODELS, fmt_row, grouped, testbed
-from repro.core.device import random_topology
+from benchmarks.common import MODELS, fmt_row, grouped
+from repro.core.device import testbed
 from repro.core.mcts import MCTS
 from repro.core.trainer import init_trainer, make_policy, train_policy
 

@@ -6,10 +6,10 @@ Paper claims: hold-out strategies are only marginally worse (e.g. VGG19
 """
 from __future__ import annotations
 
-from benchmarks.common import (
-    MODELS, dp_time, fmt_row, grouped, testbed, cloud, sim_time)
-from repro.core.trainer import init_trainer, make_policy, train_policy
+from benchmarks.common import dp_time, fmt_row, grouped, sim_time
+from repro.core.device import testbed
 from repro.core.mcts import MCTS
+from repro.core.trainer import init_trainer, make_policy, train_policy
 
 
 def _speedup(gg, topo, policy, iters=40, seed=0):

@@ -9,11 +9,11 @@ import sys
 import numpy as np
 
 from repro.core.device import cloud, random_topology, testbed
-from repro.core.tag import optimize
-from repro.core.zoo import ZOO, build
-from repro.core.jax_export import trace_training_graph
 from repro.core.graph import group_graph
+from repro.core.jax_export import trace_training_graph
 from repro.core.partition import partition
+from repro.core.tag import optimize
+from repro.core.zoo import build
 
 
 def main():

@@ -8,7 +8,6 @@ schedule; pass --full for the real thing on accelerators.
 """
 import sys
 
-from repro.configs import get_config
 from repro.launch.train import main as train_main
 
 

@@ -9,10 +9,8 @@ import json
 import os
 import re
 
-import numpy as np
-
-import jax
 import jax.numpy as jnp
+import numpy as np
 
 _BF16 = "bfloat16"
 

@@ -8,15 +8,15 @@ log-scaled where sizes/times appear so unseen model scales stay in range.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
+import math
 
 import numpy as np
 
 from repro.core.device import Topology
 from repro.core.graph import GroupedGraph
 from repro.core.simulator import SimResult, device_group_stats
-from repro.core.strategy import Option, Strategy
+from repro.core.strategy import Strategy
 
 OP_F = 13      # per-op-node features (5-wide option one-hot)
 DEV_F = 8      # per-device-node features

@@ -7,8 +7,8 @@ the strategy creator.
 """
 from __future__ import annotations
 
-import enum
 from dataclasses import dataclass, field
+import enum
 
 
 class Split(enum.Enum):
@@ -120,7 +120,6 @@ class CompGraph:
         if not anchors:
             return self
         keep = set(anchors)
-        moved = True
         und = {i: set() for i in self.nodes}
         for e in self.edges:
             und[e.src].add(e.dst)

@@ -13,8 +13,8 @@ slices yields the MCTS priors G(s, a).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
+import math
 
 import jax
 import jax.numpy as jnp
@@ -113,34 +113,34 @@ def gnn_forward(cfg: GNNConfig, p: dict, g: HetGraph):
 
 
 def actions_to_arrays(actions, m: int, bucket: int = 8):
-    """(P (A',M), O (A',4), mask (A',)) padded to a bucket size so jitted
+    """(P (A',M), opt (A',4), mask (A',)) padded to a bucket size so jitted
     calls hit a small number of compiled shapes."""
     A = len(actions)
     Ap = -(-A // bucket) * bucket
     P = np.zeros((Ap, m), np.float32)
-    O = np.zeros((Ap, N_OPTIONS), np.float32)
+    opt = np.zeros((Ap, N_OPTIONS), np.float32)
     mask = np.zeros((Ap,), np.float32)
     for k, a in enumerate(actions):
         for j in a.placement:
             P[k, j] = 1.0
-        O[k, int(a.option)] = 1.0
+        opt[k, int(a.option)] = 1.0
         mask[k] = 1.0
-    return P, O, mask
+    return P, opt, mask
 
 
-def score_actions(cfg: GNNConfig, p: dict, e_op, e_dev, gid, P, O):
+def score_actions(cfg: GNNConfig, p: dict, e_op, e_dev, gid, P, opt):
     """Thin decoder: scores for (padded) strategy slices."""
     dev_sum = P @ e_dev                                     # (A, H)
     op_e = jnp.broadcast_to(e_op[gid][None], (P.shape[0], e_op.shape[1]))
-    x = jnp.concatenate([dev_sum, op_e, O], axis=-1)
+    x = jnp.concatenate([dev_sum, op_e, opt], axis=-1)
     h = jax.nn.relu(x @ p["dec1"] + p["dec1b"])
     return (h @ p["dec2"])[:, 0]
 
 
-def _policy_core(cfg, p, arrays, gid, P, O, mask):
+def _policy_core(cfg, p, arrays, gid, P, opt, mask):
     g = HetGraph(*arrays)
     e_op, e_dev = gnn_forward(cfg, p, g)
-    logits = score_actions(cfg, p, e_op, e_dev, gid, P, O)
+    logits = score_actions(cfg, p, e_op, e_dev, gid, P, opt)
     return jnp.where(mask > 0, logits, -1e30)
 
 
@@ -159,8 +159,8 @@ def _embed_core(cfg, p, arrays):
 _embed_jit = jax.jit(_embed_core, static_argnums=(0,))
 
 
-def _score_core(cfg, p, e_op, e_dev, gid, P, O, mask):
-    logits = score_actions(cfg, p, e_op, e_dev, gid, P, O)
+def _score_core(cfg, p, e_op, e_dev, gid, P, opt, mask):
+    logits = score_actions(cfg, p, e_op, e_dev, gid, P, opt)
     return jnp.where(mask > 0, logits, -1e30)
 
 
@@ -175,8 +175,8 @@ def embed_hetgraph(cfg: GNNConfig, p: dict, g: HetGraph):
 def score_embedded(cfg: GNNConfig, p: dict, e_op, e_dev, gid: int, actions,
                    m: int):
     """Decoder half: logits for ``actions`` given precomputed embeddings."""
-    P, O, mask = actions_to_arrays(actions, m)
-    out = _score_jit(cfg, p, e_op, e_dev, jnp.asarray(gid), P, O, mask)
+    P, opt, mask = actions_to_arrays(actions, m)
+    out = _score_jit(cfg, p, e_op, e_dev, jnp.asarray(gid), P, opt, mask)
     return out[:len(actions)]
 
 
@@ -185,8 +185,8 @@ def _het_arrays(g: HetGraph):
 
 
 def policy_logits(cfg: GNNConfig, p: dict, g: HetGraph, gid: int, actions):
-    P, O, mask = actions_to_arrays(actions, g.dev_x.shape[0])
-    out = _policy_jit(cfg, p, _het_arrays(g), jnp.asarray(gid), P, O, mask)
+    P, opt, mask = actions_to_arrays(actions, g.dev_x.shape[0])
+    out = _policy_jit(cfg, p, _het_arrays(g), jnp.asarray(gid), P, opt, mask)
     return out[:len(actions)]
 
 
@@ -194,10 +194,10 @@ def policy_probs(cfg: GNNConfig, p: dict, g: HetGraph, gid: int, actions):
     return jax.nn.softmax(policy_logits(cfg, p, g, gid, actions))
 
 
-def record_loss_core(cfg, p, arrays, gid, P, O, mask, pi):
+def record_loss_core(cfg, p, arrays, gid, P, opt, mask, pi):
     """Cross-entropy between GNN prior and (padded) MCTS visit dist."""
     g = HetGraph(*arrays)
     e_op, e_dev = gnn_forward(cfg, p, g)
-    logits = score_actions(cfg, p, e_op, e_dev, gid, P, O)
+    logits = score_actions(cfg, p, e_op, e_dev, gid, P, opt)
     logits = jnp.where(mask > 0, logits, -1e30)
     return -jnp.sum(pi * jax.nn.log_softmax(logits))

@@ -20,10 +20,10 @@ from __future__ import annotations
 import math
 
 import jax
-import numpy as np
 from jax.extend.core import Literal
+import numpy as np
 
-from repro.core.graph import CompGraph, OpNode, Split, TensorEdge
+from repro.core.graph import CompGraph, OpNode, Split
 
 _ELEMWISE = {
     "add", "sub", "mul", "div", "max", "min", "pow", "exp", "log", "tanh",

@@ -13,8 +13,8 @@ uniform prior gives the "pure MCTS" ablation (Table 7).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
+import math
 
 import numpy as np
 
@@ -24,7 +24,7 @@ from repro.core.features import featurize
 from repro.core.graph import GroupedGraph
 from repro.core.simulator import simulate
 from repro.core.strategy import (
-    Strategy, candidate_actions, data_parallel_all)
+    Action, Option, Strategy, candidate_actions, data_parallel_all)
 
 
 @dataclass
@@ -51,6 +51,11 @@ class SearchResult:
     visit_records: list              # (featurized state, gid, actions, pi)
     iterations_run: int = 0          # playouts actually executed
     warm_started: bool = False       # seeded from a prior strategy
+    # best strategy among the playouts whose FILLED strategy pipelines
+    # (None when no playout did) — diagnostic view of the pipe-subspace
+    # decision when the overall winner is a single-mesh plan
+    best_pipelined: Strategy | None = None
+    best_pipelined_reward: float = float("-inf")
 
 
 class MCTS:
@@ -59,11 +64,20 @@ class MCTS:
                  record_threshold: int = 8,
                  prior_strategy: Strategy | None = None,
                  prior_weight: float = 0.5,
-                 observed_feedback=None):
+                 observed_feedback=None,
+                 schedule_aware: bool = True,
+                 pipe_global_micro: int = 16):
         self.gg = gg
         self.topo = topo
         self.policy = policy          # callable(hetgraph, gid, actions)->probs
         self.c = c_puct
+        # schedule-aware PIPE costing: pipelined strategies are ranked by
+        # the schedule timeline simulator (bubble fraction + boundary
+        # transfers under a memory-capped microbatch depth) instead of the
+        # generic task-graph FIFO model; False = the PR-4-era FIFO ablation
+        self.schedule_aware = schedule_aware
+        self.pipe_global_micro = pipe_global_micro
+        self._pipe_cache: dict = {}   # (partition, schedule) -> (step, res)
         # runtime feedback (paper §4.3): when a deployed plan's measured
         # step telemetry is available, its SimResult-shaped aggregate
         # overrides the simulated feedback features the GNN sees
@@ -76,6 +90,16 @@ class MCTS:
         if prior_strategy is not None \
                 and len(prior_strategy.actions) != gg.n:
             raise ValueError("prior_strategy has wrong group count")
+        if prior_strategy is not None:
+            # plans cached before PIPE actions carried a schedule store
+            # schedule="" — candidate_actions only emits named variants
+            # now, so normalize to the legacy default (1f1b) or the
+            # blend/seed lookups would silently never match them
+            prior_strategy = Strategy([
+                Action(a.placement, a.option, schedule="1f1b")
+                if a is not None and a.option == Option.PIPE
+                and not a.schedule and len(a.placement) > 1 else a
+                for a in prior_strategy.actions])
         self.prior_strategy = prior_strategy
         self.prior_weight = prior_weight
 
@@ -92,11 +116,54 @@ class MCTS:
     # ---------------------------------------------------------------- eval
     def _evaluate(self, strat: Strategy):
         filled = strat.fill_undecided(self._fill_action(strat))
+        if self.schedule_aware and filled.has_pipeline():
+            out = self._pipe_evaluate(filled)
+            if out is not None:
+                return out
         tg = compile_strategy(self.gg, filled, self.topo)
         res = simulate(tg, self.topo)
         if not res.feasible:
             return -1.0, res
         return self.baseline_time / res.makespan, res
+
+    def _pipe_evaluate(self, filled: Strategy):
+        """Schedule-aware reward of a pipelined strategy: cut it into a
+        StagePlan, run the voted microbatch schedule through the timeline
+        simulator at the memory-capped feasible depth, and charge flushes
+        plus the per-stage gradient sync. Results are memoized per
+        (partition, schedule) — the timeline is episode-static, and many
+        playouts land on the same cut. Returns None when the strategy has
+        no multi-group spine (the FIFO model stays in charge); an
+        infeasible memory cap is the paper's interactive OOM-rejection
+        (-1 reward)."""
+        # lazy import: repro.exec sits above core in the layering
+        from repro.exec.schedule import (
+            schedule_step_cost, timeline_to_simresult)
+        from repro.exec.stages import build_stage_plan
+        plan = build_stage_plan(self.gg, filled, self.topo,
+                                n_micro=self.pipe_global_micro)
+        if plan is None:
+            return None
+        key = (plan.placement, plan.schedule,
+               tuple(tuple(s.op_group_ids) for s in plan.stages),
+               tuple(s.sync for s in plan.stages))
+        hit = self._pipe_cache.get(key)
+        if hit is None:
+            cost = schedule_step_cost(plan, self.topo, plan.schedule,
+                                      global_micro=self.pipe_global_micro)
+            if cost is None:
+                hit = (None, None)
+            else:
+                res = timeline_to_simresult(
+                    plan, cost["timeline"], self.topo, self.gg,
+                    flushes=cost["flushes"],
+                    sync_time=cost["sync_time_s"])
+                hit = (cost["step_time_s"], res)
+            self._pipe_cache[key] = hit
+        step, res = hit
+        if step is None:
+            return -1.0, res
+        return self.baseline_time / step, res
 
     def _fill_action(self, strat: Strategy):
         """Paper footnote 2: undecided groups copy the strategy of the most
@@ -150,7 +217,19 @@ class MCTS:
         if v.depth < self.gg.n and v.actions is None:
             v.actions, v.prior = self._priors(v)
             v.N = np.zeros(len(v.actions))
-            v.Q = np.zeros(len(v.actions))
+            # First-play urgency: unvisited actions start at the vertex's
+            # own evaluation instead of 0. Deciding one more group often
+            # fills to the SAME complete strategy as the parent (footnote-2
+            # fill), so the child's reward exactly repeats the parent's —
+            # with Q(unvisited)=0 such a plateau child outranks every
+            # unexplored sibling and a small-budget search marches down a
+            # constant-reward chain, learning nothing per playout (the
+            # schedule-aware PIPE rewards made these plateaus common
+            # enough to trap the policy-training searches). At Q=v.reward
+            # a plateau child ties its siblings and the prior-weighted
+            # exploration term decides; the init washes out on the first
+            # real visit (running average with N=1 sets Q=r).
+            v.Q = np.full(len(v.actions), v.reward)
 
     def _backprop(self, path, r):
         for (pv, ai) in path:
@@ -190,7 +269,8 @@ class MCTS:
                stop_reward: float | None = None) -> SearchResult:
         root = Vertex(Strategy.empty(self.gg.n), 0)
         root.reward, root.feedback = self._evaluate(root.strategy)
-        best = {"r": root.reward, "s": root.strategy, "iters": -1}
+        best = {"r": root.reward, "s": root.strategy, "iters": -1,
+                "pipe_r": float("-inf"), "pipe_s": None}
         rewards = []
         records = []
         it_run = 0
@@ -203,6 +283,12 @@ class MCTS:
                 best["r"], best["s"] = r, v.strategy
             if best["iters"] < 0 and r > 1.0:
                 best["iters"] = it_run
+            if r > best["pipe_r"]:      # guard keeps the re-fill off the
+                #                         common path (rarely improves)
+                filled_v = v.strategy.fill_undecided(
+                    self._fill_action(v.strategy))
+                if filled_v.has_pipeline():
+                    best["pipe_r"], best["pipe_s"] = r, filled_v
 
         if self.prior_strategy is not None and iterations > 0:
             seeded = self._seed_playout(root)
@@ -261,7 +347,6 @@ class MCTS:
         visit(root)
 
         filled = best["s"].fill_undecided(self._fill_action(best["s"]))
-        r_best, res_best = self._evaluate(best["s"])
         return SearchResult(
             best_strategy=filled,
             best_reward=best["r"],
@@ -272,4 +357,6 @@ class MCTS:
             rewards=rewards,
             visit_records=records,
             iterations_run=it_run,
-            warm_started=self.prior_strategy is not None)
+            warm_started=self.prior_strategy is not None,
+            best_pipelined=best["pipe_s"],
+            best_pipelined_reward=best["pipe_r"])

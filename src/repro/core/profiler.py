@@ -9,8 +9,8 @@ assumption, and used to fit GRPC/AllReduce-style comm curves.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
+import time
 
 import numpy as np
 

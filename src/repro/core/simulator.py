@@ -10,8 +10,8 @@ idle %, peak memory) and an OOM flag.
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
+import heapq
 
 from repro.core.compiler import TaskGraph
 from repro.core.device import Topology

@@ -11,10 +11,9 @@ and one of the four replication options O_i:
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 import enum
-import itertools
 import json
-from dataclasses import dataclass, field
 
 from repro.core.device import Topology
 
@@ -28,23 +27,44 @@ class Option(enum.IntEnum):
                # pipeline the group's stages across devices w/ microbatches
 
 
+# microbatch schedules the search may attach to a PIPE action (GPipe is
+# excluded: it is dominated by 1F1B on both bubble and stash, so offering
+# it only widens the branching factor; it stays reachable via --pipeline)
+PIPE_SEARCH_SCHEDULES = ("1f1b", "interleaved", "zb")
+
+
 @dataclass(frozen=True)
 class Action:
-    """Deployment of one op group: device groups + replication option."""
+    """Deployment of one op group: device groups + replication option.
+
+    PIPE actions additionally carry the microbatch ``schedule`` the
+    pipeline should run ("gpipe" | "1f1b" | "interleaved" | "zb") — the
+    schedule-aware search costs each choice with the schedule timeline
+    simulator. Empty string = not applicable / legacy default (1F1B).
+    """
     placement: tuple          # sorted tuple of device-group ids
     option: Option
+    schedule: str = ""        # PIPE only; "" elsewhere
 
     def __repr__(self):
-        return f"<{self.option.name}@{','.join(map(str, self.placement))}>"
+        tail = f":{self.schedule}" if self.schedule else ""
+        return (f"<{self.option.name}{tail}"
+                f"@{','.join(map(str, self.placement))}>")
 
     def to_dict(self) -> dict:
-        return {"placement": [int(g) for g in self.placement],
-                "option": self.option.name}
+        d = {"placement": [int(g) for g in self.placement],
+             "option": self.option.name}
+        if self.schedule:
+            d["schedule"] = self.schedule   # omitted when unset, so plans
+            #                                 stored before the field keep
+            #                                 a byte-identical canonical form
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "Action":
         return cls(placement=tuple(int(g) for g in d["placement"]),
-                   option=Option[d["option"]])
+                   option=Option[d["option"]],
+                   schedule=d.get("schedule", ""))
 
 
 @dataclass
@@ -107,7 +127,7 @@ def data_parallel_all(topo: Topology, option: Option = Option.AR) -> Action:
 
 
 def candidate_actions(topo: Topology, *, has_grad: bool,
-                      max_actions: int = 96) -> list:
+                      max_actions: int = 128) -> list:
     """Enumerate the candidate deployments for one op group.
 
     The raw space (2^M - 1 placements x 4 options) is intractable for MCTS
@@ -149,9 +169,13 @@ def candidate_actions(topo: Topology, *, has_grad: bool,
             opts.append(Option.DUP)
         if n_dev > 1:
             opts.append(Option.MP)
-            opts.append(Option.PIPE)
         for o in opts:
             actions.append(Action(p, o))
+        if n_dev > 1 and len(p) > 1:
+            # one PIPE variant per searchable schedule: the schedule-aware
+            # evaluator ranks them by bubble fraction + boundary transfers
+            for sched in PIPE_SEARCH_SCHEDULES:
+                actions.append(Action(p, Option.PIPE, schedule=sched))
     return actions[:max_actions]
 
 

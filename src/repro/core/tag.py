@@ -11,15 +11,13 @@ simulated per-iteration time.
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass, field
-
-import numpy as np
+from dataclasses import dataclass
 
 from repro.core import sfb as sfb_mod
 from repro.core.compiler import compile_strategy
 from repro.core.device import Topology
 from repro.core.fingerprint import fingerprint_grouped_cached
-from repro.core.graph import CompGraph, GroupedGraph, group_graph
+from repro.core.graph import GroupedGraph, group_graph
 from repro.core.jax_export import trace_training_graph
 from repro.core.mcts import MCTS, SearchResult
 from repro.core.partition import partition
@@ -128,19 +126,28 @@ def optimize(loss_fn, params, batch, topo: Topology, *, name: str = "",
              prior_strategy: Strategy | None = None,
              prior_weight: float = 0.5,
              stop_reward: float | None = None,
-             observed_feedback=None) -> TAGResult:
+             observed_feedback=None,
+             schedule_aware: bool = True) -> TAGResult:
     if gg is None:
         gg = build_grouped(loss_fn, params, batch, name, n_groups)
     mcts = MCTS(gg, topo, policy=policy, seed=seed,
                 prior_strategy=prior_strategy, prior_weight=prior_weight,
-                observed_feedback=observed_feedback)
+                observed_feedback=observed_feedback,
+                schedule_aware=schedule_aware)
     search = mcts.search(iterations, stop_reward=stop_reward)
     strat = search.best_strategy
     plans = sfb_post_pass(gg, strat, topo) if enable_sfb else {}
     res = simulate(compile_strategy(gg, strat, topo, sfb_plans=plans), topo)
+    time = res.makespan
+    if schedule_aware and strat.has_pipeline():
+        # report the same cost model the search ranked the winner under
+        # (schedule timeline, not the FIFO task-graph estimate)
+        out = mcts._pipe_evaluate(strat)
+        if out is not None and out[0] > 0:
+            time = search.baseline_time / out[0]
     return TAGResult(
         strategy=strat, sfb_plans=plans, search=search,
-        time=res.makespan, baseline_time=search.baseline_time,
+        time=time, baseline_time=search.baseline_time,
         result=res, gg=gg)
 
 
@@ -150,6 +157,31 @@ def evaluate_strategy(gg: GroupedGraph, strat: Strategy, topo: Topology,
     tg = compile_strategy(gg, strat, topo, proportional=proportional,
                           sfb_plans=plans)
     return simulate(tg, topo), plans
+
+
+def strategy_step_time(gg: GroupedGraph, strat: Strategy, topo: Topology,
+                       *, sfb: bool = False,
+                       global_micro: int = 16) -> float:
+    """Step time of a complete strategy under the same cost model the
+    schedule-aware search ranks it with: pipelined strategies go through
+    the schedule timeline (memory-capped microbatch depth, flushes,
+    per-stage sync — ``exec.schedule.schedule_step_cost``), everything
+    else through the FIFO task-graph simulator. The runtime feedback
+    loop scores stale plans and re-search seeds with this, so its
+    improved/regressed verdicts compare like with like. An OOM-
+    infeasible pipeline costs ``inf``."""
+    if strat.has_pipeline():
+        # lazy import: repro.exec sits above core in the layering
+        from repro.exec.schedule import schedule_step_cost
+        from repro.exec.stages import build_stage_plan
+        plan = build_stage_plan(gg, strat, topo, n_micro=global_micro)
+        if plan is not None:
+            cost = schedule_step_cost(plan, topo, plan.schedule,
+                                      global_micro=global_micro)
+            if cost is None:
+                return float("inf")
+            return cost["step_time_s"]
+    return evaluate_strategy(gg, strat, topo, sfb=sfb)[0].makespan
 
 
 def dp_baseline(gg: GroupedGraph, topo: Topology,

@@ -7,9 +7,9 @@ G_theta(s, a) and the MCTS selection probability pi(s, a) = N / sum N.
 """
 from __future__ import annotations
 
-import hashlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
+import hashlib
 
 import jax
 import jax.numpy as jnp
@@ -19,8 +19,7 @@ from repro.core.device import Topology, random_topology
 from repro.core.features import HetGraph
 from repro.core.graph import GroupedGraph
 from repro.core.hetgnn import (
-    GNNConfig, embed_hetgraph, init_gnn, policy_logits, policy_probs,
-    score_embedded)
+    GNNConfig, embed_hetgraph, init_gnn, policy_probs, score_embedded)
 from repro.core.mcts import MCTS
 from repro.optim.adam import AdamW
 
@@ -113,8 +112,8 @@ def init_trainer(cfg: GNNConfig | None = None, seed: int = 0,
     return TrainState(cfg, params, opt, opt.init(params))
 
 
-from repro.core.hetgnn import actions_to_arrays, record_loss_core
-from repro.core.hetgnn import _het_arrays
+from repro.core.hetgnn import (  # noqa: E402 — needs TrainState above
+    _het_arrays, actions_to_arrays, record_loss_core)
 
 _loss_and_grad = jax.jit(
     jax.value_and_grad(record_loss_core, argnums=1), static_argnums=(0,))

@@ -13,7 +13,6 @@ import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 f32 = jnp.dtype("float32")
 

@@ -20,19 +20,23 @@ from repro.exec.engine import PipelineRunner, split_microbatches
 from repro.exec.model_split import split_model
 from repro.exec.replay import execute_pipeline
 from repro.exec.schedule import (
-    SCHEDULES, Timeline, flatten_schedule, gpipe_schedule, make_schedule,
-    max_feasible_micro, one_f_one_b_schedule, peak_stash,
-    simulate_schedule, validate_schedule)
+    SCHEDULES, Timeline, flatten_schedule, gpipe_schedule,
+    interleaved_1f1b_schedule, make_schedule, max_feasible_micro,
+    one_f_one_b_schedule, peak_stash, schedule_step_cost, simulate_schedule,
+    stage_sync_time, timeline_to_simresult, validate_schedule,
+    zero_bubble_schedule)
 from repro.exec.stages import (
-    PipelineInfeasible, StagePlan, StageSpec, build_stage_plan,
-    pipeline_spine)
+    PipelineInfeasible, StagePlan, StageSpec, build_stage_plan, pipeline_spine,
+    vote_schedule)
 
 __all__ = [
     "PipelineRunner", "split_microbatches", "split_model",
     "execute_pipeline",
     "SCHEDULES", "Timeline", "flatten_schedule", "gpipe_schedule",
-    "make_schedule", "max_feasible_micro", "one_f_one_b_schedule",
-    "peak_stash", "simulate_schedule", "validate_schedule",
+    "interleaved_1f1b_schedule", "make_schedule", "max_feasible_micro",
+    "one_f_one_b_schedule", "peak_stash", "schedule_step_cost",
+    "simulate_schedule", "stage_sync_time", "timeline_to_simresult",
+    "validate_schedule", "zero_bubble_schedule",
     "PipelineInfeasible", "StagePlan", "StageSpec", "build_stage_plan",
-    "pipeline_spine",
+    "pipeline_spine", "vote_schedule",
 ]

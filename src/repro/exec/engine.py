@@ -8,10 +8,25 @@ parallelism via ``shard_map`` submeshes, and explicit AR / PS / SFB
 parameter-gradient synchronization (the §4.2.3 ILP's decisions routed
 through ``parallel.sfb_dense``'s primitives).
 
+Two schedule extensions execute for real here:
+
+  * **interleaved** (virtual stages): ``n_chunks`` model chunks per
+    physical stage — ``stage_fns`` has ``S * n_chunks`` entries, virtual
+    stage ``u = chunk * S + s`` running on physical stage ``s``'s
+    devices; chunk boundaries wrap from the last physical stage back to
+    the first, exactly the extra transfers the schedule simulator
+    charges.
+  * **zb** (zero-bubble): the backward splits into an activation-grad
+    half (``B`` events, on the cross-stage critical path) and a
+    weight-grad half (``W`` events, stage-local). Each half re-runs the
+    stage forward and vjp's through it, so the split costs one extra
+    rematerialization — the price of freeing the B chain.
+
 Backward recomputes the stage forward (GPipe-style rematerialization):
 each backward callable re-runs the stage on the stashed *input* and
 vjp's through it, so only boundary activations are stashed — the stash
-count follows the schedule's ``peak_stash`` exactly.
+count follows the schedule's ``peak_stash`` exactly (``W`` releases the
+stash under zb).
 
 Gradient semantics (proved by the parity tests): the global step loss is
 the mean over microbatches of the mean over stage-DP shards of the local
@@ -22,14 +37,14 @@ SFB gather-recompute), accumulates over microbatches, and divides by
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
+import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import numpy as np
 
 from repro.exec.schedule import flatten_schedule, make_schedule
 from repro.parallel.sfb_dense import tree_grad_sync
@@ -80,30 +95,42 @@ class StepStats:
     loss: float
     metrics: dict
     wall_time: float
-    events: list = field(default_factory=list)   # (kind, stage, mb, dur)
+    events: list = field(default_factory=list)  # (kind, stage, mb, dur,
+    #                                              chunk)
     peak_stash: int = 0
 
 
 class PipelineRunner:
     """Execute stage functions under a microbatch schedule.
 
-    ``stage_fns[s]`` has signature ``fn(params_s, carry, mb) -> carry``
-    (``(loss, metrics)`` for the last stage); ``device_sets[s]`` lists
-    the jax devices hosting stage ``s`` (>1 devices = per-stage data
-    parallelism over a "dp" submesh, grad sync per ``plan.stages[s]
-    .sync``). ``mb_keys[s]`` names the microbatch entries the stage
-    consumes (default: all).
+    ``stage_fns[u]`` has signature ``fn(params_u, carry, mb) -> carry``
+    (``(loss, metrics)`` for the last virtual stage); with
+    ``n_chunks > 1`` there are ``S * n_chunks`` virtual stages, virtual
+    stage ``u`` running on physical stage ``u % S``. ``device_sets[s]``
+    lists the jax devices hosting physical stage ``s`` (>1 devices =
+    per-stage data parallelism over a "dp" submesh, grad sync per
+    ``plan.stages[s].sync``). ``mb_keys[u]`` names the microbatch
+    entries virtual stage ``u`` consumes (default: all).
     """
 
     def __init__(self, stage_fns, plan, device_sets, *,
                  schedule: str = "1f1b", n_micro: int | None = None,
-                 mb_keys=None, tied_ref=None, store=None,
-                 graph_fp: str = "", topo_fp: str = "",
+                 n_chunks: int = 1, mb_keys=None, tied_ref=None,
+                 store=None, graph_fp: str = "", topo_fp: str = "",
                  meta: dict | None = None):
         self.fns = list(stage_fns)
         self.plan = plan
-        self.S = len(stage_fns)
-        assert len(device_sets) == self.S, (len(device_sets), self.S)
+        self.S = len(device_sets)
+        self.V = max(1, int(n_chunks))
+        if self.V > 1 and schedule != "interleaved":
+            # only the interleaved generator emits chunked events; any
+            # other schedule would leave virtual stages S..U-1 unscheduled
+            # and fail deep inside the event loop
+            raise ValueError(
+                f"n_chunks={self.V} requires schedule='interleaved' "
+                f"(got {schedule!r})")
+        self.U = self.S * self.V
+        assert len(self.fns) == self.U, (len(self.fns), self.S, self.V)
         self.device_sets = [list(d) for d in device_sets]
         self.schedule = schedule
         self.n_micro = int(n_micro or plan.n_micro)
@@ -117,18 +144,26 @@ class PipelineRunner:
         self.meshes = [
             Mesh(np.asarray(devs), ("dp",)) if len(devs) > 1 else None
             for devs in self.device_sets]
-        order = make_schedule(schedule, self.S, self.n_micro)
+        order = make_schedule(schedule, self.S, self.n_micro,
+                              n_chunks=self.V)
         self.flat = flatten_schedule(order, self.S, self.n_micro)
-        self._fwd = [None] * self.S
-        self._bwd = [None] * self.S
+        self.has_w = any(e.kind == "W" for e in self.flat)
+        self._fwd = [None] * self.U
+        self._bwd = [None] * self.U          # joint (dp, dc)
+        self._bwd_act = [None] * self.U      # zb: dc only
+        self._bwd_wgt = [None] * self.U      # zb: dp only
 
     # ------------------------------------------------------- placement
+    def phys(self, u: int) -> int:
+        """Physical stage hosting virtual stage ``u``."""
+        return u % self.S
+
     def _ndev(self, s: int) -> int:
         return len(self.device_sets[s])
 
     def place(self, s: int, tree, *, batch: bool = False):
-        """Commit a pytree to stage ``s``'s devices (replicated params,
-        batch-sharded activations on multi-device stages)."""
+        """Commit a pytree to physical stage ``s``'s devices (replicated
+        params, batch-sharded activations on multi-device stages)."""
         if tree is None:
             return None
         mesh = self.meshes[s]
@@ -142,18 +177,22 @@ class PipelineRunner:
         return jax.device_put(tree, shardings)
 
     def place_params(self, params_list) -> list:
-        return [self.place(s, p) for s, p in enumerate(params_list)]
+        return [self.place(self.phys(u), p)
+                for u, p in enumerate(params_list)]
 
-    def _mb_for(self, s: int, mb: dict) -> dict:
+    def _mb_for(self, u: int, mb: dict) -> dict:
         if self.mb_keys is None:
             return mb
-        return {k: mb[k] for k in self.mb_keys[s] if k in mb}
+        return {k: mb[k] for k in self.mb_keys[u] if k in mb}
 
     # ------------------------------------------------------- compiled fns
-    def _build(self, s: int, p_ex, c_ex, mb_ex):
-        """Compile stage ``s``'s forward and backward callables."""
-        fn = self.fns[s]
-        is_last = s == self.S - 1
+    def _build(self, u: int, p_ex, c_ex, mb_ex):
+        """Compile virtual stage ``u``'s forward and backward callables
+        (joint backward, plus the split activation-grad / weight-grad
+        pair when the schedule zero-bubbles)."""
+        fn = self.fns[u]
+        is_last = u == self.U - 1
+        s = self.phys(u)
         ndev = self._ndev(s)
         mesh = self.meshes[s]
         sync = self.syncs[s]
@@ -164,18 +203,30 @@ class PipelineRunner:
                     loss, mets = fn(p, c, mb)
                     return loss[None], jax.tree.map(lambda v: v[None], mets)
 
-                def bwd(p, c, mb, dout):
-                    f = lambda pp, cc: fn(pp, cc, mb)[0]       # noqa: E731
-                    _, vjp = jax.vjp(f, p, c)
-                    return vjp(dout)
+                def f_of(p, c, mb):
+                    return fn(p, c, mb)[0]
             else:
                 fwd = fn
+                f_of = fn
 
-                def bwd(p, c, mb, dout):
-                    f = lambda pp, cc: fn(pp, cc, mb)          # noqa: E731
-                    _, vjp = jax.vjp(f, p, c)
-                    return vjp(dout)
-            self._fwd[s], self._bwd[s] = jax.jit(fwd), jax.jit(bwd)
+            def bwd(p, c, mb, dout):
+                _, vjp = jax.vjp(lambda pp, cc: f_of(pp, cc, mb), p, c)
+                return vjp(dout)
+
+            def bwd_act(p, c, mb, dout):
+                _, vjp = jax.vjp(lambda cc: f_of(p, cc, mb), c)
+                return vjp(dout)[0]
+
+            def bwd_wgt(p, c, mb, dout):
+                _, vjp = jax.vjp(lambda pp: f_of(pp, c, mb), p)
+                return vjp(dout)[0]
+
+            self._fwd[u] = jax.jit(fwd)
+            if self.has_w:
+                self._bwd_act[u] = jax.jit(bwd_act)
+                self._bwd_wgt[u] = jax.jit(bwd_wgt)
+            else:
+                self._bwd[u] = jax.jit(bwd)
             return
 
         p_specs = jax.tree.map(lambda _: P(), p_ex)
@@ -196,119 +247,155 @@ class PipelineRunner:
             fwd_out_specs = _specs(out_ex, ndev)
             dout_specs = fwd_out_specs                  # cotangent of out
 
-        def bwd_body(p, c, mb, dout):
-            if is_last:
-                f_loc = lambda pp, cc: fn(pp, cc, mb)[0]       # noqa: E731
-            else:
-                f_loc = lambda pp, cc: fn(pp, cc, mb)          # noqa: E731
+        def f_loc(p, c, mb):
+            return fn(p, c, mb)[0] if is_last else fn(p, c, mb)
+
+        def dp_of(p, c, mb, dout):
+            """Parameter gradient with the stage's sync mode applied."""
             if sync == "sfb":
                 # sufficient factors (inputs + output grads) on the wire,
                 # parameter grads recomputed locally on the full batch
                 c_g = _gather(c, c_specs)
                 mb_g = _gather(mb, mb_specs)
                 if is_last:
-                    fg = lambda pp: fn(pp, c_g, mb_g)[0]       # noqa: E731
                     seed = dout * ndev          # 1/ndev -> 1: gathered
                     #                             loss is the global mean
                 else:
-                    fg = lambda pp: fn(pp, c_g, mb_g)          # noqa: E731
                     seed = _gather(dout, dout_specs)
-                _, vjp_g = jax.vjp(fg, p)
+                _, vjp_g = jax.vjp(lambda pp: f_loc(pp, c_g, mb_g), p)
                 dp, = vjp_g(seed)
-                _, vjp_l = jax.vjp(lambda cc: f_loc(p, cc), c)
-                dc, = vjp_l(dout)
-            else:
-                _, vjp = jax.vjp(f_loc, p, c)
-                dp, dc = vjp(dout)
-                dp = tree_grad_sync(dp, "dp", sync, ndev)
-            return dp, dc
+                return dp
+            _, vjp = jax.vjp(lambda pp: f_loc(pp, c, mb), p)
+            dp, = vjp(dout)
+            return tree_grad_sync(dp, "dp", sync, ndev)
 
-        self._fwd[s] = jax.jit(shard_map(
+        def dc_of(p, c, mb, dout):
+            _, vjp_l = jax.vjp(lambda cc: f_loc(p, cc, mb), c)
+            dc, = vjp_l(dout)
+            return dc
+
+        def bwd_body(p, c, mb, dout):
+            return dp_of(p, c, mb, dout), dc_of(p, c, mb, dout)
+
+        self._fwd[u] = jax.jit(shard_map(
             fwd_body, mesh=mesh, in_specs=(p_specs, c_specs, mb_specs),
             out_specs=fwd_out_specs, check_rep=False))
-        self._bwd[s] = jax.jit(shard_map(
-            bwd_body, mesh=mesh,
-            in_specs=(p_specs, c_specs, mb_specs, dout_specs),
-            out_specs=(p_specs, c_specs), check_rep=False))
+        in_specs = (p_specs, c_specs, mb_specs, dout_specs)
+        if self.has_w:
+            self._bwd_act[u] = jax.jit(shard_map(
+                dc_of, mesh=mesh, in_specs=in_specs, out_specs=c_specs,
+                check_rep=False))
+            self._bwd_wgt[u] = jax.jit(shard_map(
+                dp_of, mesh=mesh, in_specs=in_specs, out_specs=p_specs,
+                check_rep=False))
+        else:
+            self._bwd[u] = jax.jit(shard_map(
+                bwd_body, mesh=mesh, in_specs=in_specs,
+                out_specs=(p_specs, c_specs), check_rep=False))
 
     # ------------------------------------------------------------- step
     def step(self, params_list, batch, *, record: bool = False) -> tuple:
         """One pipelined train step.
 
         Returns ``(grads_list, StepStats)``; grads match the structure of
-        ``params_list`` (tied-head gradient already folded back into the
-        stage-0 embedding).
+        ``params_list`` (one entry per virtual stage; tied-head gradient
+        already folded back into the stage-0 embedding).
         """
         t_start = time.perf_counter()
         mbs = split_microbatches(batch, self.n_micro)
-        S, M = self.S, self.n_micro
+        S, U, M = self.S, self.U, self.n_micro
 
         params_eff = list(params_list)
         if self.tied_ref is not None:
             src_key, dst_key = self.tied_ref
-            head = self.place(S - 1, params_list[0][src_key])
-            params_eff[S - 1] = dict(params_list[S - 1], **{dst_key: head})
+            head = self.place(self.phys(U - 1), params_list[0][src_key])
+            params_eff[U - 1] = dict(params_list[U - 1], **{dst_key: head})
 
-        mb_cache: dict = {}             # (s, m) -> placed microbatch
+        mb_cache: dict = {}             # (u, m) -> placed microbatch
 
-        def mb_at(s, m):
-            if (s, m) not in mb_cache:
-                mb_cache[(s, m)] = self.place(
-                    s, self._mb_for(s, mbs[m]), batch=True)
-            return mb_cache[(s, m)]
+        def mb_at(u, m):
+            if (u, m) not in mb_cache:
+                mb_cache[(u, m)] = self.place(
+                    self.phys(u), self._mb_for(u, mbs[m]), batch=True)
+            return mb_cache[(u, m)]
 
-        outs: dict = {}                 # (s, m) -> stage output carry
-        stage_in: dict = {}             # (s, m) -> placed input (stash)
-        dcs: dict = {}                  # (s, m) -> d loss / d input of s
-        grads: list = [None] * S
+        outs: dict = {}                 # (u, m) -> stage output carry
+        stage_in: dict = {}             # (u, m) -> placed input (stash)
+        dcs: dict = {}                  # (u, m) -> d loss / d input of u
+        w_dout: dict = {}               # (u, m) -> dout stashed for W (zb)
+        grads: list = [None] * U
         losses, mets_acc = [], []
         events, stash, peak = [], 0, 0
-        seed_last = 1.0 / self._ndev(S - 1)
+        seed_last = 1.0 / self._ndev(self.phys(U - 1))
 
         for ev in self.flat:
             s, m = ev.stage, ev.mb
+            u = ev.chunk * S + s
             t0 = time.perf_counter()
             if ev.kind == "F":
                 carry = None
-                if s > 0:
-                    carry = self.place(s, outs.pop((s - 1, m)), batch=True)
-                stage_in[(s, m)] = carry
+                if u > 0:
+                    carry = self.place(s, outs.pop((u - 1, m)), batch=True)
+                stage_in[(u, m)] = carry
                 stash += 1
                 peak = max(peak, stash)
-                mb = mb_at(s, m)
-                if self._fwd[s] is None:
-                    self._build(s, params_eff[s], carry, mb)
-                out = self._fwd[s](params_eff[s], carry, mb)
-                if s == S - 1:
+                mb = mb_at(u, m)
+                if self._fwd[u] is None:
+                    self._build(u, params_eff[u], carry, mb)
+                out = self._fwd[u](params_eff[u], carry, mb)
+                if u == U - 1:
                     loss, mets = out
                     losses.append(loss)
                     mets_acc.append(mets)
                 else:
-                    outs[(s, m)] = out
+                    outs[(u, m)] = out
                 if record:
                     jax.block_until_ready(out)
-            else:
-                if s == S - 1:
+            elif ev.kind == "B":
+                if u == U - 1:
                     dout = jnp.asarray(seed_last, jnp.float32)
                 else:
-                    dout = self.place(s, dcs.pop((s + 1, m)), batch=True)
-                carry = stage_in.pop((s, m))
+                    dout = self.place(s, dcs.pop((u + 1, m)), batch=True)
+                if self.has_w:
+                    # zero-bubble: activation grad only; the stash (and
+                    # dout) stay pinned until this microbatch's W
+                    carry = stage_in[(u, m)]
+                    dc = self._bwd_act[u](params_eff[u], carry,
+                                          mb_at(u, m), dout)
+                    w_dout[(u, m)] = dout
+                    if u > 0:
+                        dcs[(u, m)] = dc
+                    if record:
+                        jax.block_until_ready(dc)
+                else:
+                    carry = stage_in.pop((u, m))
+                    stash -= 1
+                    dp, dc = self._bwd[u](params_eff[u], carry,
+                                          mb_at(u, m), dout)
+                    grads[u] = dp if grads[u] is None else jax.tree.map(
+                        jnp.add, grads[u], dp)
+                    if u > 0:
+                        dcs[(u, m)] = dc
+                    if record:
+                        jax.block_until_ready(dp)
+            else:                       # "W": weight grad, releases stash
+                carry = stage_in.pop((u, m))
                 stash -= 1
-                dp, dc = self._bwd[s](params_eff[s], carry, mb_at(s, m),
+                dout = w_dout.pop((u, m))
+                dp = self._bwd_wgt[u](params_eff[u], carry, mb_at(u, m),
                                       dout)
-                grads[s] = dp if grads[s] is None else jax.tree.map(
-                    jnp.add, grads[s], dp)
-                if s > 0:
-                    dcs[(s, m)] = dc
+                grads[u] = dp if grads[u] is None else jax.tree.map(
+                    jnp.add, grads[u], dp)
                 if record:
                     jax.block_until_ready(dp)
             if record:
-                events.append((ev.kind, s, m, time.perf_counter() - t0))
+                events.append((ev.kind, s, m,
+                               time.perf_counter() - t0, ev.chunk))
 
-        grads = [jax.tree.map(lambda g: g / M, g_s) for g_s in grads]
+        grads = [jax.tree.map(lambda g: g / M, g_u) for g_u in grads]
         if self.tied_ref is not None:
             src_key, dst_key = self.tied_ref
-            dhead = grads[S - 1].pop(dst_key)
+            dhead = grads[U - 1].pop(dst_key)
             dhead = self.place(0, dhead)
             grads[0] = dict(grads[0], **{
                 src_key: grads[0][src_key] + dhead})
@@ -328,22 +415,28 @@ class PipelineRunner:
 
     # -------------------------------------------------------- telemetry
     def _record_telemetry(self, stats: StepStats):
+        from repro.exec.schedule import FWD_FRAC, ZB_DGRAD_FRAC
         from repro.runtime.telemetry import StepRecord
-        from repro.exec.schedule import FWD_FRAC
+        bwd_frac = 1.0 - FWD_FRAC
         compute = []
-        for kind, s, m, dur in stats.events:
+        for kind, s, m, dur, chunk in stats.events:
             spec = self.plan.stages[s] if s < len(self.plan.stages) else None
-            flops_m = (spec.flops / self.n_micro) if spec else 0.0
-            frac = FWD_FRAC if kind == "F" else 1.0 - FWD_FRAC
+            flops_m = (spec.flops / self.n_micro / self.V) if spec else 0.0
+            if kind == "F":
+                frac = FWD_FRAC
+            elif kind == "W":
+                frac = bwd_frac * (1.0 - ZB_DGRAD_FRAC)
+            else:
+                frac = bwd_frac * (ZB_DGRAD_FRAC if self.has_w else 1.0)
             compute.append({
                 "gpu_type": getattr(spec, "gpu_type", "") or "",
                 "flops": flops_m * frac, "time": dur,
-                "stage": s, "mb": m, "kind": kind})
+                "stage": s, "mb": m, "kind": kind, "chunk": chunk})
         rec = StepRecord(
             graph_fp=self.graph_fp, topo_fp=self.topo_fp,
             wall_time=stats.wall_time, compute=compute,
             meta=dict(self.meta, executor="pipeline",
                       schedule=self.schedule, n_stages=self.S,
-                      n_micro=self.n_micro, loss=stats.loss,
-                      peak_stash=stats.peak_stash))
+                      n_chunks=self.V, n_micro=self.n_micro,
+                      loss=stats.loss, peak_stash=stats.peak_stash))
         self.store.append(rec)

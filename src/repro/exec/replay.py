@@ -25,13 +25,15 @@ import numpy as np
 
 from repro.core.device import Topology
 from repro.exec.schedule import (
-    FWD_FRAC, Timeline, make_schedule, simulate_schedule)
+    DEFAULT_CHUNKS, FWD_FRAC, ZB_DGRAD_FRAC, Timeline, make_schedule,
+    simulate_schedule)
 from repro.exec.stages import StagePlan
 from repro.runtime.telemetry import MeasurementStore, StepRecord
 
 
 def execute_pipeline(plan: StagePlan, true_topo: Topology, *,
                      schedule: str = "1f1b",
+                     n_chunks: int = DEFAULT_CHUNKS,
                      nominal_topo: Topology | None = None,
                      graph_fp: str = "", topo_fp: str = "",
                      step: int = 0, noise: float = 0.0, seed: int = 0,
@@ -39,41 +41,48 @@ def execute_pipeline(plan: StagePlan, true_topo: Topology, *,
                      meta: dict | None = None) -> tuple:
     """Execute one pipelined step on ``true_topo``; returns
     ``(StepRecord, Timeline)``. ``noise`` adds multiplicative jitter
-    (relative std-dev) per recorded sample."""
+    (relative std-dev) per recorded sample. ``n_chunks`` only applies to
+    the interleaved schedule (virtual chunks per stage)."""
     nominal = nominal_topo or true_topo
     rng = np.random.default_rng(seed)
 
     def jitter():
         return 1.0 + noise * float(rng.standard_normal()) if noise else 1.0
 
-    order = make_schedule(schedule, plan.n_stages, plan.n_micro)
+    order = make_schedule(schedule, plan.n_stages, plan.n_micro,
+                          n_chunks=n_chunks)
     tl: Timeline = simulate_schedule(plan, true_topo, order)
     M = max(plan.n_micro, 1)
+    has_w = any(e.kind == "W" for e in tl.events)
+    bwd_frac = 1.0 - FWD_FRAC
 
     compute, collectives = [], []
     stage_events = []
     for e in tl.events:
         dur = e.dur * jitter()
         spec = plan.stages[e.stage]
-        if e.kind in ("F", "B"):
-            frac = FWD_FRAC if e.kind == "F" else 1.0 - FWD_FRAC
+        if e.kind != "X":
+            if e.kind == "F":
+                frac = FWD_FRAC
+            elif e.kind == "W":
+                frac = bwd_frac * (1.0 - ZB_DGRAD_FRAC)
+            else:
+                frac = bwd_frac * (ZB_DGRAD_FRAC if has_w else 1.0)
             compute.append({
-                "gpu_type": spec.gpu_type, "flops": spec.flops / M * frac,
+                "gpu_type": spec.gpu_type,
+                "flops": spec.flops / M / tl.n_chunks * frac,
                 "time": dur, "stage": e.stage, "mb": e.mb,
-                "kind": e.kind})
+                "kind": e.kind, "chunk": e.chunk})
         else:                              # "X": boundary transfer
-            from repro.exec.schedule import BOUNDARY_DIR_FRAC
             src = plan.stages[e.src]
             gi, gj = src.device_group, spec.device_group
-            nb = plan.stages[min(e.src, e.stage)].out_bytes \
-                * BOUNDARY_DIR_FRAC / M
             collectives.append({
-                "kind": "xfer", "nbytes": nb, "n_dev": 2,
+                "kind": "xfer", "nbytes": e.nbytes, "n_dev": 2,
                 "nominal_bw": nominal.nominal_bw(gi, gj),
                 "link": "p2p", "pair": f"{gi}-{gj}", "time": dur})
         stage_events.append({"kind": e.kind, "stage": e.stage,
-                             "mb": e.mb, "start": e.start,
-                             "finish": e.start + dur})
+                             "mb": e.mb, "chunk": e.chunk,
+                             "start": e.start, "finish": e.start + dur})
 
     busy = {str(s.device_group): tl.stage_busy[i]
             for i, s in enumerate(plan.stages)}
@@ -83,7 +92,7 @@ def execute_pipeline(plan: StagePlan, true_topo: Topology, *,
         device_busy=busy, compute=compute, collectives=collectives,
         meta=dict(meta or {}, executor="pipeline-replay",
                   schedule=schedule, n_stages=plan.n_stages,
-                  n_micro=plan.n_micro,
+                  n_chunks=tl.n_chunks, n_micro=plan.n_micro,
                   bubble_frac=tl.bubble_fraction(),
                   true_topo=true_topo.name, events=stage_events))
     if store is not None:

@@ -1,35 +1,64 @@
 """Microbatch pipeline schedules as explicit event lists.
 
-A schedule is, per stage, an ordered list of ``Event``s — ``F(s, m)``
-(forward of microbatch ``m`` on stage ``s``) and ``B(s, m)`` (backward).
-Two classic schedules are provided:
+A schedule is, per physical stage, an ordered list of ``Event``s —
+``F(s, m)`` (forward of microbatch ``m`` on stage ``s``), ``B(s, m)``
+(backward), plus two extensions:
 
-  * **GPipe**: all forwards, then all backwards (backwards in reverse
-    microbatch order). Activation stash peaks at ``n_micro`` per stage.
-  * **1F1B** (PipeDream-flush): each stage runs a warm-up of
-    ``min(S - s, M)`` forwards, then alternates one-forward/one-backward,
-    then drains. Stash peaks at ``min(S - s, M)`` — bounded by the stage
-    depth, so deeper microbatching is free memory-wise.
+  * a ``chunk`` id for **interleaved (virtual-stage)** schedules: stage
+    ``s`` hosts ``V`` model chunks, chunk ``v`` of stage ``s`` being
+    virtual pipeline stage ``u = v * S + s`` (the Megatron-LM mapping).
+    For ``V == 1`` everything degenerates to the plain schedules.
+  * a ``W`` kind for **zero-bubble** schedules: the backward is split
+    into the activation-gradient half ``B`` (on the cross-stage critical
+    path) and the weight-gradient half ``W`` (local to the stage, free to
+    slide into bubbles).
+
+Four schedules are provided:
+
+  * **GPipe**: all forwards, then all backwards. Stash peaks at
+    ``n_micro`` per stage.
+  * **1F1B** (PipeDream-flush): warm-up of ``min(S - s, M)`` forwards,
+    then one-forward/one-backward, then drain. Stash peaks at
+    ``min(S - s, M)``.
+  * **Interleaved 1F1B** (Megatron virtual stages): each stage runs
+    ``V`` chunks; warm-up ``min(2(S - s - 1) + (V - 1) S, M V)``
+    virtual forwards with microbatch groups of size ``S`` (requires
+    ``M % S == 0``). Warm-up/drain bubbles shrink by ``V`` at the cost
+    of ``V``x the boundary transfers.
+  * **Zero-bubble** (ZB-H1-style): 1F1B skeleton with the backward
+    split; each drain gap is filled by a pending ``W``, and the
+    cross-stage ``B`` chain is half as deep as a full backward — same
+    activation stash as 1F1B (``W`` promptly releases the stash).
 
 ``simulate_schedule`` lowers a (StagePlan, schedule) pair onto a
 ``Topology`` as a dependency-driven timeline: per-stage serial execution
-in schedule order, cross-stage activation / activation-grad transfers
-serialized per directed link. The same timeline code is the *predicted*
-side of the replay executor's cross-check (``exec.replay``) and the
-bubble-fraction source for the pipeline benchmark.
+in schedule order, cross-(virtual-)stage activation / activation-grad
+transfers serialized per directed link. The same timeline code is the
+*predicted* side of the replay executor's cross-check (``exec.replay``),
+the bubble-fraction source for the pipeline benchmark, and — via
+``schedule_step_cost`` — the cost model MCTS uses to rank PIPE actions.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
 from repro.core.device import Topology
-from repro.core.profiler import compute_time, transfer_time
+from repro.core.profiler import (
+    allreduce_time, compute_time, ps_round_time, transfer_time)
 
-SCHEDULES = ("gpipe", "1f1b")
+SCHEDULES = ("gpipe", "1f1b", "interleaved", "zb")
 
 # fraction of a group's traced flops attributed to the forward pass (the
 # training trace contains fwd+bwd; backward is ~2x forward for dense nets)
 FWD_FRAC = 1.0 / 3.0
+
+# zero-bubble split of the backward: activation-grad (B) vs weight-grad
+# (W). For dense nets dgrad ~= wgrad ~= one forward each, so the split is
+# even — F, B and W all cost ~1/3 of the traced fwd+bwd flops.
+ZB_DGRAD_FRAC = 0.5
+
+# default virtual-chunk count for interleaved schedules
+DEFAULT_CHUNKS = 2
 
 # a stage boundary's crossing bytes come from the fwd+bwd trace, so they
 # cover BOTH directions: the F-edge carries the activation half, the
@@ -39,12 +68,14 @@ BOUNDARY_DIR_FRAC = 0.5
 
 @dataclass(frozen=True)
 class Event:
-    kind: str                 # "F" | "B"
-    stage: int
+    kind: str                 # "F" | "B" | "W"
+    stage: int                # physical stage
     mb: int
+    chunk: int = 0            # virtual chunk (interleaved); 0 otherwise
 
     def __repr__(self):
-        return f"{self.kind}{self.stage}.{self.mb}"
+        c = f"c{self.chunk}" if self.chunk else ""
+        return f"{self.kind}{self.stage}{c}.{self.mb}"
 
 
 def gpipe_schedule(n_stages: int, n_micro: int) -> list:
@@ -74,43 +105,165 @@ def one_f_one_b_schedule(n_stages: int, n_micro: int) -> list:
     return out
 
 
-def make_schedule(name: str, n_stages: int, n_micro: int) -> list:
+def interleaved_1f1b_schedule(n_stages: int, n_micro: int,
+                              n_chunks: int = DEFAULT_CHUNKS) -> list:
+    """Megatron-style interleaved 1F1B over ``n_chunks`` virtual stages
+    per physical stage.
+
+    Virtual microbatches are issued in groups of ``S`` per chunk
+    (forwards walk chunks 0..V-1, backwards V-1..0), which requires
+    ``n_micro % n_stages == 0``. Warm-up is
+    ``min(2 (S - s - 1) + (V - 1) S, M V)`` virtual forwards, then
+    one-forward/one-backward, then drain.
+    """
+    S, M, V = n_stages, n_micro, n_chunks
+    if V < 2:
+        raise ValueError(f"interleaved needs n_chunks >= 2, got {V}")
+    if S < 2:
+        raise ValueError("interleaved needs n_stages >= 2")
+    if M % S:
+        raise ValueError(
+            f"interleaved needs n_micro % n_stages == 0 "
+            f"(got M={M}, S={S})")
+    total = M * V
+
+    def chunk_mb(k: int, forward: bool) -> tuple:
+        c = (k % (S * V)) // S
+        if not forward:
+            c = V - 1 - c
+        return c, (k // (S * V)) * S + k % S
+
+    out = []
+    for s in range(S):
+        warm = min(2 * (S - s - 1) + (V - 1) * S, total)
+        evs = []
+        for k in range(warm):
+            c, mb = chunk_mb(k, True)
+            evs.append(Event("F", s, mb, c))
+        nf, nb = warm, 0
+        while nf < total:
+            c, mb = chunk_mb(nf, True)
+            evs.append(Event("F", s, mb, c))
+            nf += 1
+            c, mb = chunk_mb(nb, False)
+            evs.append(Event("B", s, mb, c))
+            nb += 1
+        while nb < total:
+            c, mb = chunk_mb(nb, False)
+            evs.append(Event("B", s, mb, c))
+            nb += 1
+        out.append(evs)
+    return out
+
+
+def zero_bubble_schedule(n_stages: int, n_micro: int) -> list:
+    """ZB-H1-style split-backward schedule: the 1F1B skeleton with each
+    backward split into ``B`` (activation grad, cross-stage dependency)
+    and ``W`` (weight grad, stage-local). ``W(m)`` is issued promptly
+    after ``B(m)`` — releasing the activation stash BEFORE the next
+    forward acquires one, so peak stash stays exactly at 1F1B's
+    ``min(S - s, M)`` bound — and in the drain phase it fills the gap
+    while the stage waits for the next downstream ``B``.
+    """
+    S, M = n_stages, n_micro
+    out = []
+    for s in range(S):
+        warm = min(S - s, M)
+        evs = [Event("F", s, m) for m in range(warm)]
+        nf, nb, nw = warm, 0, 0
+        while nb < M:
+            evs.append(Event("B", s, nb))
+            nb += 1
+            evs.append(Event("W", s, nw))
+            nw += 1
+            if nf < M:
+                evs.append(Event("F", s, nf))
+                nf += 1
+        out.append(evs)
+    return out
+
+
+def make_schedule(name: str, n_stages: int, n_micro: int, *,
+                  n_chunks: int = DEFAULT_CHUNKS) -> list:
     if name == "gpipe":
         return gpipe_schedule(n_stages, n_micro)
     if name == "1f1b":
         return one_f_one_b_schedule(n_stages, n_micro)
+    if name == "interleaved":
+        return interleaved_1f1b_schedule(n_stages, n_micro, n_chunks)
+    if name == "zb":
+        return zero_bubble_schedule(n_stages, n_micro)
     raise ValueError(f"unknown schedule {name!r} (use one of {SCHEDULES})")
+
+
+def n_chunks_of(order: list) -> int:
+    """Virtual-chunk count of a schedule (1 for plain schedules)."""
+    return max((e.chunk for evs in order for e in evs), default=0) + 1
+
+
+def _dep_of(e: Event, n_stages: int, n_chunks: int) -> Event | None:
+    """The cross-event dependency of ``e`` (None when it has none beyond
+    its own stage's F). Virtual stage ``u = chunk * S + stage``: forwards
+    chain up the virtual pipeline, backwards chain down it, ``W`` waits
+    on its own ``B``."""
+    S, U = n_stages, n_stages * n_chunks
+    u = e.chunk * S + e.stage
+    if e.kind == "F":
+        if u == 0:
+            return None
+        p = u - 1
+        return Event("F", p % S, e.mb, p // S)
+    if e.kind == "B":
+        if u == U - 1:
+            return None                 # only its own F (checked separately)
+        p = u + 1
+        return Event("B", p % S, e.mb, p // S)
+    return Event("B", e.stage, e.mb, e.chunk)       # "W"
 
 
 def validate_schedule(order: list, n_stages: int, n_micro: int) -> None:
     """Schedule invariants; raises ``ValueError`` on violation:
 
-      * every stage issues F and B of every microbatch exactly once;
-      * per stage, B(s, m) comes after F(s, m);
+      * every stage issues F and B of every (chunk, microbatch) exactly
+        once (chunk count inferred from the events);
+      * per stage, B(s, m, c) comes after F(s, m, c);
+      * when a stage issues W events (zero-bubble), they cover the same
+        (chunk, mb) set and W(s, m, c) comes after B(s, m, c);
       * a consistent global order exists: following per-stage order plus
-        the cross-stage deps F(s,m) after F(s-1,m) and B(s,m) after
-        B(s+1,m) never deadlocks (no stage executes a microbatch before
-        its predecessor produced it).
+        the cross-virtual-stage deps never deadlocks (no stage executes
+        a microbatch before its predecessor produced it).
     """
     if len(order) != n_stages:
         raise ValueError(f"{len(order)} stage lists != {n_stages} stages")
+    V = n_chunks_of(order)
+    want = sorted((c, m) for c in range(V) for m in range(n_micro))
     for s, evs in enumerate(order):
-        for kind in ("F", "B"):
-            mbs = [e.mb for e in evs if e.kind == kind]
-            if sorted(mbs) != list(range(n_micro)):
-                raise ValueError(f"stage {s}: {kind} covers {sorted(mbs)}")
-        seen_f = set()
+        kinds = {e.kind for e in evs}
+        for kind in ("F", "B") + (("W",) if "W" in kinds else ()):
+            cms = sorted((e.chunk, e.mb) for e in evs if e.kind == kind)
+            if cms != want:
+                raise ValueError(f"stage {s}: {kind} covers {cms}")
+        seen: dict = {"F": set(), "B": set()}
         for e in evs:
             if e.kind == "F":
-                seen_f.add(e.mb)
-            elif e.mb not in seen_f:
-                raise ValueError(f"stage {s}: B before F for mb {e.mb}")
+                seen["F"].add((e.chunk, e.mb))
+            elif e.kind == "B":
+                if (e.chunk, e.mb) not in seen["F"]:
+                    raise ValueError(
+                        f"stage {s}: B before F for {(e.chunk, e.mb)}")
+                seen["B"].add((e.chunk, e.mb))
+            else:
+                if (e.chunk, e.mb) not in seen["B"]:
+                    raise ValueError(
+                        f"stage {s}: W before B for {(e.chunk, e.mb)}")
     flatten_schedule(order, n_stages, n_micro)   # raises on deadlock
 
 
 def flatten_schedule(order: list, n_stages: int, n_micro: int) -> list:
     """A single dependency-consistent global issue order (the eager
     engine executes events in this order). Raises on deadlock."""
+    del n_micro
+    V = n_chunks_of(order)
     ptr = [0] * n_stages
     done: set = set()
     out = []
@@ -121,11 +274,8 @@ def flatten_schedule(order: list, n_stages: int, n_micro: int) -> list:
             if ptr[s] >= len(order[s]):
                 continue
             e = order[s][ptr[s]]
-            if e.kind == "F":
-                dep = None if s == 0 else Event("F", s - 1, e.mb)
-            else:
-                dep = None if s == n_stages - 1 else Event("B", s + 1, e.mb)
-            need_f = Event("F", s, e.mb) if e.kind == "B" else None
+            dep = _dep_of(e, n_stages, V)
+            need_f = Event("F", s, e.mb, e.chunk) if e.kind == "B" else None
             if (dep is None or dep in done) and \
                     (need_f is None or need_f in done):
                 out.append(e)
@@ -140,28 +290,47 @@ def flatten_schedule(order: list, n_stages: int, n_micro: int) -> list:
 def peak_stash(order: list) -> list:
     """Per-stage peak number of in-flight forward activations (stash) —
     the pipeline's activation-memory driver: GPipe peaks at n_micro,
-    1F1B at min(S - s, M)."""
+    1F1B at min(S - s, M). A stash is released by the event that last
+    consumes the stage input: ``W`` when the stage splits its backward
+    (zero-bubble), else ``B``."""
     peaks = []
     for evs in order:
+        release = "W" if any(e.kind == "W" for e in evs) else "B"
         cur = peak = 0
         for e in evs:
-            cur += 1 if e.kind == "F" else -1
+            if e.kind == "F":
+                cur += 1
+            elif e.kind == release:
+                cur -= 1
             peak = max(peak, cur)
         peaks.append(peak)
     return peaks
 
 
-def max_feasible_micro(plan, schedule: str, *, mb_act_bytes: float,
-                       mem_budget: float, cap: int = 64) -> int:
-    """Largest microbatch count whose peak activation stash fits
-    ``mem_budget`` per stage at a FIXED microbatch size (``mb_act_bytes``
-    per stage per microbatch). GPipe stashes all M microbatches, so its
-    feasible M is capped by memory; 1F1B's stash is bounded by the stage
-    depth regardless of M — the schedule's headline advantage."""
+def max_feasible_micro(plan, schedule: str, *, mb_act_bytes,
+                       mem_budget, cap: int = 64,
+                       n_chunks: int = DEFAULT_CHUNKS) -> int:
+    """Largest microbatch count whose peak activation stash fits the
+    memory budget per stage at a FIXED microbatch size. ``mb_act_bytes``
+    and ``mem_budget`` are scalars (uniform across stages) or per-stage
+    sequences. GPipe stashes all M microbatches, so its feasible M is
+    memory-capped; 1F1B/zero-bubble stash is bounded by the stage depth
+    regardless of M; interleaved stashes more warm-up activations (its
+    M must also be a multiple of the stage count — other M are skipped
+    as infeasible)."""
+    S = plan.n_stages
+    acts = list(mb_act_bytes) if hasattr(mb_act_bytes, "__len__") \
+        else [mb_act_bytes] * S
+    buds = list(mem_budget) if hasattr(mem_budget, "__len__") \
+        else [mem_budget] * S
     best = 0
     for m in range(1, cap + 1):
-        order = make_schedule(schedule, plan.n_stages, m)
-        if max(peak_stash(order)) * mb_act_bytes <= mem_budget:
+        try:
+            order = make_schedule(schedule, S, m, n_chunks=n_chunks)
+        except ValueError:
+            continue
+        peaks = peak_stash(order)
+        if all(p * a <= b for p, a, b in zip(peaks, acts, buds)):
             best = m
     return best
 
@@ -170,13 +339,15 @@ def max_feasible_micro(plan, schedule: str, *, mb_act_bytes: float,
 
 @dataclass
 class TimedEvent:
-    kind: str                 # "F" | "B" | "X" (boundary transfer)
+    kind: str                 # "F" | "B" | "W" | "X" (boundary transfer)
     stage: int                # executing stage (transfers: dst stage)
     mb: int
     start: float
     finish: float
     src: int = -1             # transfers: producing stage (F: stage-1,
     #                           B: stage+1); -1 for compute events
+    chunk: int = 0
+    nbytes: float = 0.0       # transfers: bytes on the wire
 
     @property
     def dur(self):
@@ -190,6 +361,7 @@ class Timeline:
     stage_busy: list                     # compute seconds per stage
     n_stages: int
     n_micro: int
+    n_chunks: int = 1
     meta: dict = field(default_factory=dict)
 
     def bubble_fraction(self) -> float:
@@ -198,11 +370,13 @@ class Timeline:
             return 0.0
         return 1.0 - sum(self.stage_busy) / (self.n_stages * self.makespan)
 
-    def finish_of(self, kind: str, stage: int, mb: int) -> float:
+    def finish_of(self, kind: str, stage: int, mb: int,
+                  chunk: int = 0) -> float:
         for e in self.events:
-            if e.kind == kind and e.stage == stage and e.mb == mb:
+            if e.kind == kind and e.stage == stage and e.mb == mb \
+                    and e.chunk == chunk:
                 return e.finish
-        raise KeyError((kind, stage, mb))
+        raise KeyError((kind, stage, mb, chunk))
 
 
 def _stage_speed(plan, topo: Topology, s: int) -> float:
@@ -210,19 +384,43 @@ def _stage_speed(plan, topo: Topology, s: int) -> float:
     return dg.flops * max(dg.num_gpus, 1)
 
 
+def boundary_bytes(plan, u_lo: int, n_micro: int) -> float:
+    """Per-direction, per-microbatch bytes crossing the virtual boundary
+    (u_lo, u_lo + 1). Interior boundaries carry the traced stage-crossing
+    activation; chunk-wrap boundaries (last physical stage back to the
+    first, between chunks) are estimated as the mean interior crossing —
+    the wrapped tensor is the same hidden-state carry, just not present
+    in the unchunked trace."""
+    S = plan.n_stages
+    s = u_lo % S
+    if s < S - 1:
+        nb = plan.stages[s].out_bytes
+    else:
+        interior = [st.out_bytes for st in plan.stages[:-1]
+                    if st.out_bytes > 0]
+        nb = sum(interior) / len(interior) if interior else 0.0
+    return nb * BOUNDARY_DIR_FRAC / max(n_micro, 1)
+
+
 def simulate_schedule(plan, topo: Topology, order: list,
                       *, fwd_frac: float = FWD_FRAC) -> Timeline:
     """Dependency-driven timeline of a schedule on a topology.
 
     Per-stage compute is serial in the stage's issue order; forward of
-    microbatch m on stage s waits for stage s-1's forward of m plus the
-    boundary activation transfer; backward waits symmetrically on stage
-    s+1 plus the activation-grad transfer. Transfers serialize per
-    directed (src, dst) device-group link, so a congested boundary link
-    shows up as pipeline bubble exactly like on a real cluster.
+    virtual stage u waits for virtual stage u-1's forward plus the
+    boundary activation transfer; backward waits symmetrically on u+1
+    plus the activation-grad transfer; W (zero-bubble weight grad) waits
+    only on the stage's own B. Transfers serialize per directed
+    (src, dst) device-group link, so a congested boundary link shows up
+    as pipeline bubble exactly like on a real cluster. Interleaved
+    chunks split each stage's compute by the chunk count and pay the
+    extra chunk-boundary transfers.
     """
     S = len(order)
+    V = n_chunks_of(order)
+    U = S * V
     M = max((e.mb for evs in order for e in evs), default=-1) + 1
+    has_w = any(e.kind == "W" for evs in order for e in evs)
     fwd_t, bwd_t = [], []
     for s in range(S):
         flops_m = plan.stages[s].flops / max(M, 1)
@@ -230,16 +428,22 @@ def simulate_schedule(plan, topo: Topology, order: list,
         fwd_t.append(compute_time(flops_m * fwd_frac, speed))
         bwd_t.append(compute_time(flops_m * (1.0 - fwd_frac), speed))
 
-    def xfer_t(src_stage: int, dst_stage: int) -> float:
+    def dur_of(e: Event) -> float:
+        if e.kind == "F":
+            return fwd_t[e.stage] / V
+        if e.kind == "W":
+            return bwd_t[e.stage] / V * (1.0 - ZB_DGRAD_FRAC)
+        return bwd_t[e.stage] / V * (ZB_DGRAD_FRAC if has_w else 1.0)
+
+    def xfer_t(u_lo: int, src_stage: int, dst_stage: int) -> tuple:
         gi = plan.stages[src_stage].device_group
         gj = plan.stages[dst_stage].device_group
-        nb = plan.stages[min(src_stage, dst_stage)].out_bytes \
-            * BOUNDARY_DIR_FRAC / max(M, 1)
+        nb = boundary_bytes(plan, u_lo, M)
         if nb <= 0 or gi == gj:
-            return 0.0
-        return transfer_time(nb, topo.bw(gi, gj), topo.latency)
+            return 0.0, 0.0
+        return transfer_time(nb, topo.bw(gi, gj), topo.latency), nb
 
-    finish: dict = {}                  # (kind, stage, mb) -> finish time
+    finish: dict = {}          # (kind, stage, mb, chunk) -> finish time
     stage_free = [0.0] * S
     link_free: dict = {}               # (src_g, dst_g) -> free time
     busy = [0.0] * S
@@ -248,18 +452,28 @@ def simulate_schedule(plan, topo: Topology, order: list,
 
     def ready(e: Event):
         """(ready time, transfer TimedEvent|None) for event e."""
+        u = e.chunk * S + e.stage
         if e.kind == "F":
-            if e.stage == 0:
+            if u == 0:
                 return 0.0, None
-            src, key = e.stage - 1, ("F", e.stage - 1, e.mb)
-        else:
-            if e.stage == S - 1:
-                return finish.get(("F", e.stage, e.mb), 0.0), None
-            src, key = e.stage + 1, ("B", e.stage + 1, e.mb)
+            p = u - 1
+            key = ("F", p % S, e.mb, p // S)
+        elif e.kind == "B":
+            if u == U - 1:
+                return finish.get(("F", e.stage, e.mb, e.chunk), 0.0), None
+            p = u + 1
+            key = ("B", p % S, e.mb, p // S)
+        else:                                       # "W": own B, no transfer
+            key = ("B", e.stage, e.mb, e.chunk)
+            if key not in finish:
+                return None, None
+            return finish[key], None
         if key not in finish:
             return None, None
         t0 = finish[key]
-        dur = xfer_t(src, e.stage)
+        src = key[1]
+        u_lo = min(u, p)
+        dur, nb = xfer_t(u_lo, src, e.stage)
         if dur <= 0:
             return t0, None
         gi = plan.stages[src].device_group
@@ -267,7 +481,7 @@ def simulate_schedule(plan, topo: Topology, order: list,
         s0 = max(t0, link_free.get((gi, gj), 0.0))
         link_free[(gi, gj)] = s0 + dur
         return s0 + dur, TimedEvent("X", e.stage, e.mb, s0, s0 + dur,
-                                    src=src)
+                                    src=src, chunk=e.chunk, nbytes=nb)
 
     total = sum(len(evs) for evs in order)
     while len(finish) < total:
@@ -276,24 +490,146 @@ def simulate_schedule(plan, topo: Topology, order: list,
             if ptr[s] >= len(order[s]):
                 continue
             e = order[s][ptr[s]]
-            if e.kind == "B" and ("F", s, e.mb) not in finish:
+            if e.kind == "B" and ("F", s, e.mb, e.chunk) not in finish:
                 continue
             rt, xev = ready(e)
             if rt is None:
                 continue
             if xev is not None:
                 events.append(xev)
-            t = fwd_t[s] if e.kind == "F" else bwd_t[s]
+            t = dur_of(e)
             start = max(rt, stage_free[s])
             stage_free[s] = start + t
             busy[s] += t
-            finish[(e.kind, s, e.mb)] = start + t
-            events.append(TimedEvent(e.kind, s, e.mb, start, start + t))
+            finish[(e.kind, s, e.mb, e.chunk)] = start + t
+            events.append(TimedEvent(e.kind, s, e.mb, start, start + t,
+                                     chunk=e.chunk))
             ptr[s] += 1
             progressed = True
         if not progressed:
             raise ValueError("schedule deadlocks on the timeline")
     makespan = max((e.finish for e in events), default=0.0)
     return Timeline(events=events, makespan=makespan, stage_busy=busy,
-                    n_stages=S, n_micro=M,
+                    n_stages=S, n_micro=M, n_chunks=V,
                     meta={"fwd_t": fwd_t, "bwd_t": bwd_t})
+
+
+# ------------------------------------------------ search-facing costing
+
+def stage_sync_time(plan, topo: Topology) -> float:
+    """Worst per-stage gradient-sync time (intra-group collective after
+    the flush). Stages sync on disjoint device groups, so they overlap —
+    the slowest one bounds the step. SFB stages broadcast sufficient
+    factors with the activations and recompute locally, so they add no
+    post-flush sync."""
+    worst = 0.0
+    for st in plan.stages:
+        if st.grad_bytes <= 0 or st.n_devices <= 1 or st.sync == "sfb":
+            continue
+        tau = topo.bottleneck_bw([st.device_group])
+        if st.sync == "ps":
+            t = ps_round_time(st.grad_bytes, st.n_devices, tau, topo.latency)
+        else:
+            t = allreduce_time(st.grad_bytes, st.n_devices, tau,
+                               topo.latency)
+        worst = max(worst, t)
+    return worst
+
+
+def schedule_step_cost(plan, topo: Topology, schedule: str, *,
+                       global_micro: int = 16,
+                       n_chunks: int = DEFAULT_CHUNKS,
+                       mb_act_bytes=None, mem_budget=None,
+                       include_sync: bool = True) -> dict | None:
+    """Memory-capped effective per-global-batch cost of one schedule.
+
+    The schedule runs at its largest feasible microbatch depth under the
+    per-stage activation budget; shallower depths pay multiple pipeline
+    flushes (``ceil(global_micro / m)``). Default budgets derive from
+    the topology: per stage, group memory minus 4x resident parameters
+    (param + grad + Adam moments); a stage whose parameters alone
+    overflow is infeasible. Returns ``None`` when no microbatch depth
+    fits, else a dict with ``n_micro/flushes/flush_time_s/step_time_s/
+    bubble_frac/sync_time_s/timeline``.
+    """
+    S = plan.n_stages
+    if mb_act_bytes is None:
+        mb_act_bytes = [
+            (plan.stages[s - 1].out_bytes if s else plan.stages[0].out_bytes)
+            / max(global_micro, 1) for s in range(S)]
+    if mem_budget is None:
+        mem_budget = []
+        for st in plan.stages:
+            dg = topo.groups[st.device_group]
+            free = (dg.mem_bytes - 4.0 * st.param_bytes) * max(dg.num_gpus, 1)
+            mem_budget.append(free)
+    if any(b <= 0 for b in mem_budget):
+        return None
+    m = max_feasible_micro(plan, schedule, mb_act_bytes=mb_act_bytes,
+                           mem_budget=mem_budget, cap=global_micro,
+                           n_chunks=n_chunks)
+    if m <= 0:
+        return None
+    m = min(m, global_micro)
+    flushes = -(-global_micro // m)
+    order = make_schedule(schedule, S, m, n_chunks=n_chunks)
+    tl = simulate_schedule(plan, topo, order)
+    sync = stage_sync_time(plan, topo) if include_sync else 0.0
+    return {"schedule": schedule, "n_micro": m, "flushes": flushes,
+            "flush_time_s": tl.makespan,
+            "step_time_s": flushes * tl.makespan + sync,
+            "bubble_frac": tl.bubble_fraction(),
+            "sync_time_s": sync, "timeline": tl}
+
+
+def timeline_to_simresult(plan, tl: Timeline, topo: Topology, gg=None, *,
+                          flushes: int = 1, sync_time: float = 0.0):
+    """Project a schedule ``Timeline`` into the ``SimResult`` shape the
+    GNN featurization consumes (runtime-feedback features part 3), so
+    schedule-aware MCTS evaluations feed the policy the same way FIFO
+    evaluations do: per-device busy/idle, per-link busy, peak memory,
+    and per-op-group start/finish mapped through the stage that hosts
+    the group."""
+    from repro.core.simulator import SimResult
+
+    step = flushes * tl.makespan + sync_time
+    dev_busy: dict = {}
+    peak_mem: dict = {}
+    link_busy: dict = {}
+    order: list = [[] for _ in range(tl.n_stages)]
+    for e in tl.events:
+        if e.kind == "X":
+            gi = plan.stages[e.src].device_group
+            gj = plan.stages[e.stage].device_group
+            link_busy[(gi, gj)] = link_busy.get((gi, gj), 0.0) \
+                + e.dur * flushes
+        else:
+            order[e.stage].append(e)
+    base = [sum(topo.groups[k].num_gpus for k in range(g))
+            for g in range(topo.m)]
+    stash = peak_stash(order) if any(order) else [0] * tl.n_stages
+    for si, st in enumerate(plan.stages):
+        g = st.device_group
+        dg = topo.groups[g]
+        act = boundary_bytes(plan, si - 1 if si else si, tl.n_micro) \
+            * 2.0 * stash[si]
+        per_dev = 4.0 * st.param_bytes + act / max(dg.num_gpus, 1)
+        for d in range(base[g], base[g] + dg.num_gpus):
+            dev_busy[d] = tl.stage_busy[si] * flushes + sync_time
+            peak_mem[d] = per_dev
+    res = SimResult(makespan=step, feasible=True, task_start=[],
+                    task_finish=[], device_busy=dev_busy,
+                    peak_mem=peak_mem, link_busy=link_busy)
+    if gg is not None:
+        span = {}
+        for e in tl.events:
+            if e.kind == "X":
+                continue
+            lo, hi = span.get(e.stage, (e.start, e.finish))
+            span[e.stage] = (min(lo, e.start), max(hi, e.finish))
+        for si, st in enumerate(plan.stages):
+            lo, hi = span.get(si, (0.0, 0.0))
+            for gid in st.op_group_ids:
+                res.group_start[gid] = lo
+                res.group_finish[gid] = hi
+    return res

@@ -87,6 +87,8 @@ class StagePlan:
     placement: tuple                    # device-group ids (pipeline spine)
     n_micro: int = 4
     topo_name: str = ""
+    schedule: str = "1f1b"              # microbatch schedule the PIPE
+    #                                     actions voted for (flops-weighted)
     meta: dict = field(default_factory=dict)
 
     @property
@@ -97,11 +99,18 @@ class StagePlan:
         tot = sum(s.flops for s in self.stages) or 1.0
         return [s.flops / tot for s in self.stages]
 
-    def layer_splits(self, n_layers: int) -> list:
-        """Contiguous [lo, hi) layer spans per stage, proportional to the
-        stages' flops share (model adapter: map transformer periods onto
-        stages). Every stage gets >= 0 layers; all layers are covered."""
+    def layer_splits(self, n_layers: int, n_chunks: int = 1) -> list:
+        """Contiguous [lo, hi) layer spans per virtual stage, proportional
+        to the stages' flops share (model adapter: map transformer periods
+        onto stages). With ``n_chunks > 1`` (interleaved schedules) each
+        physical stage hosts ``n_chunks`` model chunks; virtual stage
+        ``u = chunk * S + s`` executes the u-th span at 1/n_chunks of the
+        stage's flops share. Every span gets >= 0 layers; all layers are
+        covered."""
         fracs = self.flops_fracs()
+        if n_chunks > 1:
+            fracs = [fracs[u % len(fracs)] / n_chunks
+                     for u in range(len(fracs) * n_chunks)]
         splits, lo = [], 0
         acc = 0.0
         for s, f in enumerate(fracs):
@@ -112,6 +121,20 @@ class StagePlan:
             splits.append((lo, hi))
             lo = hi
         return splits
+
+    def with_carry_bytes(self, nbytes: float) -> "StagePlan":
+        """Copy with every interior boundary's bytes replaced by the
+        EXECUTED inter-stage carry. The traced graph's cut-crossing bytes
+        include tensors the engine never ships (it rematerializes the
+        stage forward during backward and only moves the hidden-state
+        carry — see the boundary accounting note in ``build_stage_plan``);
+        callers that know the model's carry size (batch x seq x d_model x
+        dtype) use this to cost schedules against real traffic."""
+        import copy
+        plan = copy.deepcopy(self)
+        for s in plan.stages[:-1]:
+            s.out_bytes = float(nbytes)
+        return plan
 
     def assign_local_devices(self, devices) -> list:
         """Map stages onto the host's jax devices: one contiguous slice
@@ -144,7 +167,7 @@ class StagePlan:
         return {"stages": [s.to_dict() for s in self.stages],
                 "placement": [int(g) for g in self.placement],
                 "n_micro": self.n_micro, "topo_name": self.topo_name,
-                "meta": self.meta}
+                "schedule": self.schedule, "meta": self.meta}
 
     @classmethod
     def from_dict(cls, d: dict) -> "StagePlan":
@@ -152,6 +175,7 @@ class StagePlan:
                    placement=tuple(d["placement"]),
                    n_micro=int(d.get("n_micro", 4)),
                    topo_name=d.get("topo_name", ""),
+                   schedule=d.get("schedule", "1f1b"),
                    meta=d.get("meta", {}))
 
 
@@ -179,6 +203,26 @@ def pipeline_spine(strat: Strategy, gg: GroupedGraph,
         votes[a.placement] = votes.get(a.placement, 0.0) + max(w, 1.0)
     if not votes:
         return None
+    return max(votes.items(), key=lambda kv: kv[1])[0]
+
+
+def vote_schedule(strat: Strategy, gg: GroupedGraph,
+                  spine: tuple) -> str:
+    """Flops-weighted majority microbatch schedule among the PIPE
+    actions on the chosen spine; "1f1b" when none names one (legacy
+    strategies searched before the schedule field existed)."""
+    votes: dict = {}
+    fallback: dict = {}
+    for gid, a in enumerate(strat.actions):
+        if a is None or a.option != Option.PIPE or not a.schedule:
+            continue
+        w = gg.groups[gid].flops if gid < len(gg.groups) else 1.0
+        fallback[a.schedule] = fallback.get(a.schedule, 0.0) + max(w, 1.0)
+        if a.placement == spine:
+            votes[a.schedule] = votes.get(a.schedule, 0.0) + max(w, 1.0)
+    votes = votes or fallback       # truncated spine: no exact match
+    if not votes:
+        return "1f1b"
     return max(votes.items(), key=lambda kv: kv[1])[0]
 
 
@@ -334,6 +378,7 @@ def build_stage_plan(gg: GroupedGraph, strat: Strategy, topo: Topology,
             gpu_type=dg.gpu_type))
     return StagePlan(stages=stages, placement=spine, n_micro=n_micro,
                      topo_name=topo.name,
+                     schedule=vote_schedule(strat, gg, spine),
                      meta={"n_groups": gg.n,
                            "pipe_groups": sum(
                                1 for a in strat.actions

@@ -12,12 +12,11 @@ block, the (bq, bk) score tile lives entirely in VMEM/VREGs, and only the
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
 
 NEG_INF = -1e30
 

@@ -7,7 +7,6 @@ Python for correctness validation; on a real TPU pass interpret=False.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention

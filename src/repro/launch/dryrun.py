@@ -8,18 +8,18 @@ stand-ins only), and extract the roofline terms from the compiled artifact.
 Run:  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
       python -m repro.launch.dryrun --all --out results/dryrun.json
 """
-import argparse
-import json
-import time
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
 
-import jax
-import jax.numpy as jnp
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
-from repro.configs import ARCH_IDS, SHAPES, config_for_shape
-from repro.core.hlo_analysis import analyze_hlo, xla_cost_analysis
-from repro.launch import mesh as mesh_mod
-from repro.launch import steps as steps_mod
-from repro.optim.adam import AdamW
+from repro.configs import ARCH_IDS, SHAPES, config_for_shape  # noqa: E402
+from repro.core.hlo_analysis import analyze_hlo, xla_cost_analysis  # noqa: E402
+from repro.launch import mesh as mesh_mod  # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.optim.adam import AdamW  # noqa: E402
 
 
 def roofline_terms(flops, hbm_bytes, coll_bytes, n_chips, links_per_chip=4):

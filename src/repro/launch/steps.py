@@ -7,8 +7,7 @@ trace time under whatever mesh the launcher chose.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.configs import ARCH_IDS, get_config, get_reduced
@@ -54,8 +53,9 @@ def resolve_pipeline(plan, mode: str):
         print(f"WARNING: TAG pipeline fallback — {e}; degrading to "
               f"single-mesh DP axis rules", flush=True)
         return None
+    sched = sp.schedule if mode == "auto" else mode
     print(f"TAG pipeline: executing {sp.n_stages} stages "
-          f"(placement={list(sp.placement)}, "
+          f"(schedule={sched}, placement={list(sp.placement)}, "
           f"sync={[s.sync for s in sp.stages]})", flush=True)
     return sp
 
@@ -69,19 +69,31 @@ def run_pipeline(args, cfg, stage_plan):
     from repro.exec import PipelineRunner, split_model
     from repro.optim.adam import AdamW
 
+    schedule = stage_plan.schedule if args.pipeline == "auto" \
+        else args.pipeline
+    n_chunks = max(2, args.n_chunks) if schedule == "interleaved" else 1
     n_micro = max(1, args.n_micro)
-    while args.batch % n_micro:
+    while n_micro > 1 and (args.batch % n_micro
+                           or (schedule == "interleaved"
+                               and n_micro % stage_plan.n_stages)):
         n_micro -= 1
+    if schedule == "interleaved" and n_micro % stage_plan.n_stages:
+        raise ValueError(
+            f"interleaved needs n_micro divisible by "
+            f"{stage_plan.n_stages} stages (and by batch {args.batch}); "
+            f"none <= {args.n_micro} works — pick --n-micro/--batch "
+            f"accordingly or another --pipeline schedule")
     if n_micro != args.n_micro:
         print(f"pipeline: n_micro {args.n_micro} -> {n_micro} "
-              f"(must divide batch {args.batch})", flush=True)
-    schedule = "1f1b" if args.pipeline == "auto" else args.pipeline
+              f"(must divide batch {args.batch}"
+              + (f" and be a multiple of {stage_plan.n_stages} stages"
+                 if schedule == "interleaved" else "") + ")", flush=True)
 
     device_sets = mesh_mod.stage_device_sets(stage_plan)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
-    splits = stage_plan.layer_splits(cfg.num_periods)
+    splits = stage_plan.layer_splits(cfg.num_periods, n_chunks=n_chunks)
     stage_params, fns, mb_keys, tied = split_model(
-        cfg, params, stage_plan.n_stages, splits=splits)
+        cfg, params, stage_plan.n_stages * n_chunks, splits=splits)
 
     store = None
     if args.telemetry_dir:
@@ -89,29 +101,31 @@ def run_pipeline(args, cfg, stage_plan):
         store = MeasurementStore(args.telemetry_dir)
     runner = PipelineRunner(
         fns, stage_plan, device_sets, schedule=schedule, n_micro=n_micro,
-        mb_keys=mb_keys, tied_ref=tied, store=store,
+        n_chunks=n_chunks, mb_keys=mb_keys, tied_ref=tied, store=store,
         meta={"arch": args.arch, "batch": args.batch, "seq": args.seq,
               "launcher": "train"})
 
     opt = AdamW(lr=args.lr)
     params_list = runner.place_params(stage_params)
-    opt_state_list = [runner.place(s, opt.init(p))
-                      for s, p in enumerate(params_list)]
+    n_virtual = len(params_list)
+    opt_state_list = [runner.place(runner.phys(u), opt.init(p))
+                      for u, p in enumerate(params_list)]
     start_step = 0
     if getattr(args, "resume", False) and args.ckpt_dir \
             and latest_step(args.ckpt_dir) is not None:
         start_step, tree = load_checkpoint(args.ckpt_dir)
-        keys = [_stage_key(s) for s in range(stage_plan.n_stages)]
+        keys = [_stage_key(u) for u in range(n_virtual)]
         if sorted(tree["params"]) != sorted(keys):
             raise ValueError(
                 f"checkpoint in {args.ckpt_dir} is not a "
-                f"{stage_plan.n_stages}-stage pipeline checkpoint — "
-                f"resume it with the matching stage map (or without "
-                f"--tag-search for single-mesh checkpoints)")
-        params_list = [runner.place(s, tree["params"][k])
-                       for s, k in enumerate(keys)]
-        opt_state_list = [runner.place(s, tree["opt_state"][k])
-                          for s, k in enumerate(keys)]
+                f"{n_virtual}-stage pipeline checkpoint — "
+                f"resume it with the matching stage map and schedule "
+                f"(or without --tag-search for single-mesh checkpoints)")
+        params_list = [runner.place(runner.phys(u), tree["params"][k])
+                       for u, k in enumerate(keys)]
+        opt_state_list = [runner.place(runner.phys(u),
+                                       tree["opt_state"][k])
+                          for u, k in enumerate(keys)]
         print(f"resumed pipelined run from step {start_step}", flush=True)
     step_fn = steps_mod.make_pipeline_train_step(opt, runner)
 
@@ -129,10 +143,11 @@ def run_pipeline(args, cfg, stage_plan):
             batch, record=store is not None)
         losses.append(metrics["loss"])
         if step % args.log_every == 0:
+            chunks = f"x{n_chunks}v" if n_chunks > 1 else ""
             print(f"step {step:5d} loss={metrics['loss']:.4f} "
                   f"ce={metrics['ce']:.4f} "
                   f"gnorm={metrics['grad_norm']:.3f} "
-                  f"[pipeline {schedule} x{stage_plan.n_stages}]",
+                  f"[pipeline {schedule} x{stage_plan.n_stages}{chunks}]",
                   flush=True)
         if args.ckpt_dir and args.ckpt_every and \
                 (step + 1) % args.ckpt_every == 0:
@@ -170,13 +185,20 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=1)
     ap.add_argument("--tag-search", action="store_true",
                     help="run TAG strategy search and apply its plan")
-    ap.add_argument("--pipeline", choices=["auto", "off", "gpipe", "1f1b"],
+    ap.add_argument("--pipeline",
+                    choices=["auto", "off", "gpipe", "1f1b",
+                             "interleaved", "zb"],
                     default="auto",
                     help="how to execute PIPE actions in a TAG plan: "
-                         "auto/gpipe/1f1b run the pipeline engine "
-                         "(auto = 1f1b), off forces single-mesh rules")
+                         "a schedule name runs the pipeline engine, "
+                         "auto uses the schedule the searched strategy "
+                         "voted for (legacy plans: 1f1b), off forces "
+                         "single-mesh rules")
     ap.add_argument("--n-micro", type=int, default=4,
                     help="microbatches per pipelined step")
+    ap.add_argument("--n-chunks", type=int, default=2,
+                    help="virtual model chunks per stage for the "
+                         "interleaved schedule")
     ap.add_argument("--loss-chunk", type=int, default=0)
     ap.add_argument("--telemetry-dir", default="",
                     help="record per-step telemetry (runtime feedback "

@@ -7,7 +7,7 @@ logical-axes tree used by the sharding rules.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
-from repro.models.layers import ParamDef, mlp_defs, mlp_fwd, rms_norm, stack_defs
+from repro.models.layers import (
+    ParamDef, mlp_defs, mlp_fwd, rms_norm, stack_defs)
 from repro.parallel.sharding import logical_shard
 
 

@@ -31,7 +31,10 @@ class AdamW:
 
 def adamw_init(params, state_dtype="float32"):
     dt = jnp.dtype(state_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return {
         "mu": jax.tree.map(zeros, params),
         "nu": jax.tree.map(zeros, params),
@@ -66,7 +69,8 @@ def adamw_update(opt: AdamW, params, state, grads, step, lr):
 
 def global_norm(tree):
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in leaves))
 
 
 def clip_by_global_norm(grads, max_norm: float):

@@ -18,12 +18,10 @@ the real execution engine rather than only in the simulator.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
+from jax.experimental.shard_map import shard_map
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
 SYNC_MODES = ("allreduce", "ps", "sfb")
 

@@ -16,8 +16,8 @@ optimizer step.
 from __future__ import annotations
 
 import contextlib
-import threading
 from dataclasses import dataclass, field
+import threading
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

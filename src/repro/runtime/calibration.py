@@ -18,9 +18,9 @@ effective-bandwidth constants.
 from __future__ import annotations
 
 import copy
+from dataclasses import dataclass, field
 import json
 import os
-from dataclasses import dataclass, field
 
 import numpy as np
 

@@ -12,7 +12,7 @@ immediately; raise ``min_samples`` to require sustained drift.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass

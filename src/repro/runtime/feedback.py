@@ -112,7 +112,10 @@ class FeedbackLoop:
         calib_topo = profile.apply(topo)
 
         stale_strat = cached.strategy_obj()
-        stale_res, _ = tag_mod.evaluate_strategy(
+        # schedule-aware when the stale plan pipelines, FIFO otherwise —
+        # the SAME model the planner reported cached.time under, so the
+        # improved/regressed verdict compares like with like
+        stale_time = tag_mod.strategy_step_time(
             gg, stale_strat, calib_topo, sfb=enable_sfb)
 
         self.service.store.evict(graph_fp=graph_fp, topo_fp=topo_fp)
@@ -124,11 +127,10 @@ class FeedbackLoop:
         # optimum far from the cached plan, and MCTS warm-started from a
         # now-bad prior would stay in its basin.
         seed_strat, seed_time = adapt_strategy(stale_strat, gg.n,
-                                               calib_topo), \
-            stale_res.makespan
+                                               calib_topo), stale_time
         for cand in canonical_strategies(gg.n, calib_topo):
-            t = tag_mod.evaluate_strategy(
-                gg, cand, calib_topo, sfb=enable_sfb)[0].makespan
+            t = tag_mod.strategy_step_time(gg, cand, calib_topo,
+                                           sfb=enable_sfb)
             if t < seed_time:
                 seed_strat, seed_time = cand, t
 
@@ -144,5 +146,5 @@ class FeedbackLoop:
             observed_feedback=observed_sim_result(history, topo))
         return FeedbackResult(
             kind="replanned", report=report, profile=profile,
-            response=resp, stale_time=stale_res.makespan,
+            response=resp, stale_time=stale_time,
             observed=rec.wall_time)

@@ -14,10 +14,10 @@ step, ``fcntl``-locked appends so concurrent launchers can share a log);
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
 import json
 import os
 import time
-from dataclasses import dataclass, field
 
 import numpy as np
 

@@ -11,8 +11,8 @@ with per-request budgets and within-batch dedup.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 import os
-from dataclasses import dataclass, field
 
 from repro.core import tag as tag_mod
 from repro.core.device import Topology

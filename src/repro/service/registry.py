@@ -20,12 +20,12 @@ Checkpoint selection, most- to least-specific:
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
 import json
 import os
 import re
 import tempfile
 import time
-from dataclasses import dataclass, field
 
 import numpy as np
 

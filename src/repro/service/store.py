@@ -13,13 +13,13 @@ directory so multiple launcher processes can share one cache.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
+from contextlib import contextmanager
+from dataclasses import dataclass, field
 import json
 import os
 import tempfile
 import time
-from collections import OrderedDict
-from contextlib import contextmanager
-from dataclasses import dataclass, field
 
 from repro.core.sfb import GroupSFB
 from repro.core.strategy import Strategy

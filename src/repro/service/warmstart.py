@@ -54,7 +54,7 @@ def adapt_strategy(prior: Strategy, n_groups: int,
         if n_dev <= 1 and (clipped or a.option != Option.AR):
             acts.append(None)
             continue
-        acts.append(Action(placement, a.option))
+        acts.append(Action(placement, a.option, schedule=a.schedule))
     return Strategy(acts)
 
 

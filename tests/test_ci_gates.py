@@ -1,0 +1,135 @@
+"""CI benchmark-regression gate (benchmarks/check_regression.py).
+
+The gate must catch an injected regression — step time / bubble fraction
+creeping past the tolerance, a boolean acceptance flag flipping, or a
+benchmark silently disappearing — and must pass an unchanged or
+improved run.
+"""
+import copy
+import json
+import os
+
+from benchmarks.check_regression import (
+    METRICS, Violation, check_files, compare, lookup, main)
+
+BASELINE = {
+    "1f1b": {"step_time_s": 2.0, "bubble_frac": 0.50},
+    "zb": {"step_time_s": 1.9},
+    "pipeline_speedup_vs_dp": 2.3,
+    "schedule_quality": {
+        "1f1b": {"bubble_frac": 0.52},
+        "interleaved": {"bubble_frac": 0.47},
+        "zb": {"bubble_frac": 0.46},
+        "zb_lower_bubble": True,
+        "interleaved_lower_bubble": True,
+    },
+    "mcts": {"aware_step_time_s": 0.16,
+             "variants": {"zb": {"step_time_s": 2.78}},
+             "fifo_schedule_blind": True,
+             "aware_pick_is_best": True},
+}
+
+
+def test_unchanged_run_passes():
+    assert compare("BENCH_pipeline.json", BASELINE,
+                   copy.deepcopy(BASELINE)) == []
+
+
+def test_improvement_passes():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["1f1b"]["step_time_s"] = 1.5          # faster
+    fresh["pipeline_speedup_vs_dp"] = 3.0       # higher
+    assert compare("BENCH_pipeline.json", BASELINE, fresh) == []
+
+
+def test_injected_step_time_regression_caught():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["1f1b"]["step_time_s"] = 2.0 * 1.11   # > 10% tolerance
+    vs = compare("BENCH_pipeline.json", BASELINE, fresh)
+    assert len(vs) == 1 and vs[0].path == "1f1b.step_time_s"
+    # within tolerance is allowed
+    fresh["1f1b"]["step_time_s"] = 2.0 * 1.09
+    assert compare("BENCH_pipeline.json", BASELINE, fresh) == []
+
+
+def test_injected_bubble_and_bool_regressions_caught():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["schedule_quality"]["zb"]["bubble_frac"] = 0.60
+    fresh["schedule_quality"]["zb_lower_bubble"] = False
+    fresh["mcts"]["aware_pick_is_best"] = False
+    paths = {v.path for v in
+             compare("BENCH_pipeline.json", BASELINE, fresh)}
+    assert paths == {"schedule_quality.zb.bubble_frac",
+                     "schedule_quality.zb_lower_bubble",
+                     "mcts.aware_pick_is_best"}
+
+
+def test_higher_is_better_direction():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["pipeline_speedup_vs_dp"] = 2.3 * 0.85     # fell > 10%
+    vs = compare("BENCH_pipeline.json", BASELINE, fresh)
+    assert [v.path for v in vs] == ["pipeline_speedup_vs_dp"]
+
+
+def test_missing_fresh_metric_is_violation():
+    fresh = copy.deepcopy(BASELINE)
+    del fresh["mcts"]
+    paths = {v.path for v in
+             compare("BENCH_pipeline.json", BASELINE, fresh)}
+    assert "mcts.aware_step_time_s" in paths
+
+
+def test_metric_added_after_baseline_skipped():
+    base = copy.deepcopy(BASELINE)
+    del base["zb"]                       # baseline predates the metric
+    assert compare("BENCH_pipeline.json", base,
+                   copy.deepcopy(BASELINE)) == []
+
+
+def test_check_files_and_cli(tmp_path):
+    bdir, fdir = tmp_path / "base", tmp_path / "fresh"
+    bdir.mkdir()
+    fdir.mkdir()
+    spec = {"BENCH_pipeline.json": METRICS["BENCH_pipeline.json"]}
+    (bdir / "BENCH_pipeline.json").write_text(json.dumps(BASELINE))
+    bad = copy.deepcopy(BASELINE)
+    bad["mcts"]["aware_step_time_s"] = 99.0
+    (fdir / "BENCH_pipeline.json").write_text(json.dumps(bad))
+    vs, _ = check_files(str(bdir), str(fdir), spec)
+    assert len(vs) == 1 and isinstance(vs[0], Violation)
+    # missing fresh file = violation; missing baseline = note only
+    os.remove(fdir / "BENCH_pipeline.json")
+    vs, _ = check_files(str(bdir), str(fdir), spec)
+    assert vs and vs[0].kind == "presence"
+    os.remove(bdir / "BENCH_pipeline.json")
+    (fdir / "BENCH_pipeline.json").write_text(json.dumps(BASELINE))
+    vs, notes = check_files(str(bdir), str(fdir), spec)
+    assert vs == [] and any("no committed baseline" in n for n in notes)
+    # CLI exit codes against the real metric table
+    (bdir / "BENCH_pipeline.json").write_text(json.dumps(BASELINE))
+    assert main(["--baseline-dir", str(bdir),
+                 "--fresh-dir", str(fdir)]) == 0
+    (fdir / "BENCH_pipeline.json").write_text(json.dumps(bad))
+    assert main(["--baseline-dir", str(bdir),
+                 "--fresh-dir", str(fdir)]) == 1
+
+
+def test_lookup_list_paths():
+    doc = {"transfer": [{"halved": True}, {"halved": False}]}
+    assert lookup(doc, "transfer.0.halved") is True
+    assert lookup(doc, "transfer.1.halved") is False
+
+
+def test_real_committed_baselines_parse():
+    """Every gated metric path resolves in the committed baselines (so
+    the CI gate can never silently no-op)."""
+    results = os.path.join(os.path.dirname(__file__), "..", "results")
+    for fname, metrics in METRICS.items():
+        path = os.path.join(results, fname)
+        assert os.path.exists(path), fname
+        with open(path) as f:
+            doc = json.load(f)
+        for mpath, kind, _ in metrics:
+            val = lookup(doc, mpath)
+            if kind == "true":
+                assert val, (fname, mpath)

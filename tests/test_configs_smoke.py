@@ -6,10 +6,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCH_IDS, SHAPES, get_config, get_reduced, \
-    config_for_shape
-from repro.models import decode_step, init_cache, init_params, loss_fn
+from repro.configs import ARCH_IDS, config_for_shape, get_config, get_reduced
 from repro.launch import steps as steps_mod
+from repro.models import decode_step, init_cache, init_params
 from repro.optim.adam import AdamW
 from repro.parallel.sharding import AxisRules
 

@@ -134,7 +134,6 @@ def test_partition_acyclic_on_random_dags(dag, n_groups):
     assert set(asn) == set(range(n))
     # group-level acyclicity via topological numbering property
     gg = group_graph(g, asn)
-    order = {i: i for i in range(gg.n)}
     state = [0] * gg.n
     adj = {i: set() for i in range(gg.n)}
     for (a, b) in gg.edges:
@@ -156,7 +155,6 @@ def test_partition_acyclic_on_random_dags(dag, n_groups):
 
 def test_refinement_does_not_increase_cut(bert_graph):
     """Partition cut should beat naive contiguous chunking."""
-    from repro.core.partition import _monotone_refine
     order = bert_graph.topo_order()
     n_groups = 20
     weights = {i: max(bert_graph.nodes[i].flops, 1.0) for i in bert_graph.nodes}

@@ -3,8 +3,6 @@ modules; trip-count multiplication on scanned modules; collective byte
 extraction."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core.hlo_analysis import analyze_hlo, xla_cost_analysis
 

@@ -1,7 +1,5 @@
 """Optimizer, schedules, data pipeline, checkpointing, profiler
 regressions."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,7 +1,6 @@
 """Pallas kernel validation: shape/dtype sweeps against the pure-jnp
 oracles in kernels/ref.py (interpret mode executes the kernel bodies on
 CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

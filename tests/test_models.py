@@ -7,11 +7,11 @@ import pytest
 
 from repro.configs import get_reduced
 from repro.models import decode_step, forward, init_cache, init_params
-from repro.models.layers import cross_entropy, rms_norm, rotary
-from repro.models.model import _head
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
+from repro.models.layers import cross_entropy, rms_norm, rotary
 from repro.models.layers import init_tree
+from repro.models.model import _head
 
 RNG = np.random.default_rng(1)
 

@@ -1,14 +1,10 @@
 """Sharding rules + multi-device runtime tests. Multi-device cases run in
 subprocesses so XLA's forced host device count never leaks into other
 tests."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
-
-import jax
-import pytest
 
 from jax.sharding import PartitionSpec as P
 

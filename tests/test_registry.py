@@ -14,8 +14,7 @@ from repro.core.hetgnn import GNNConfig, policy_logits, policy_probs
 from repro.core.jax_export import trace_training_graph
 from repro.core.mcts import MCTS
 from repro.core.partition import partition
-from repro.core.strategy import (
-    Action, Option, Strategy, candidate_actions)
+from repro.core.strategy import Action, Option, Strategy, candidate_actions
 from repro.core.trainer import init_trainer, make_policy, train_step
 from repro.core.zoo import build
 from repro.service import (
@@ -422,7 +421,6 @@ def test_registry_budget_never_evicts_pinned_default(tmp_path):
 
 
 def test_registry_cli_policy_evict(tmp_path):
-    import json as _json
     from repro.service.cli import main as cli_main
     _mk_ckpts(tmp_path / "policies", ["a", "b", "c"])
     rc = cli_main(["policy", "evict", "--cache-dir", str(tmp_path),

@@ -3,7 +3,6 @@ recovering known ground-truth parameters, drift detection, and the
 drift-triggered invalidate -> recalibrate -> replan loop (ISSUE
 acceptance criteria)."""
 import copy
-import math
 
 import numpy as np
 import pytest
@@ -15,7 +14,7 @@ from repro.core.graph import group_graph
 from repro.core.jax_export import trace_training_graph
 from repro.core.partition import partition
 from repro.core.profiler import (
-    OP_OVERHEAD, allreduce_time, fit_comm, fit_utilization, transfer_time)
+    OP_OVERHEAD, fit_comm, fit_utilization, transfer_time)
 from repro.core.simulator import simulate
 from repro.core.zoo import build
 from repro.runtime import (

@@ -7,11 +7,11 @@ import pytest
 pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
-from repro.core.device import testbed as make_testbed, two_1080ti
+from repro.core.device import two_1080ti
 from repro.core.graph import group_graph
 from repro.core.jax_export import trace_training_graph
 from repro.core.partition import partition
-from repro.core.sfb import SFBProblem, optimize_group, solve, solve_brute
+from repro.core.sfb import SFBProblem, solve, solve_brute
 from repro.core.strategy import Strategy, data_parallel_all
 from repro.core.tag import sfb_post_pass
 from repro.core.zoo import build

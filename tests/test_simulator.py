@@ -10,7 +10,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.compiler import compile_strategy
 from repro.core.device import DeviceGroup, Topology, _full_inter
 from repro.core.device import testbed as make_testbed
-from repro.core.graph import CompGraph, OpNode, group_graph
+from repro.core.graph import group_graph
 from repro.core.jax_export import trace_training_graph
 from repro.core.partition import partition
 from repro.core.profiler import OP_OVERHEAD, compute_time

@@ -2,14 +2,12 @@
 task; serving generates; TAG's full pipeline produces a deployable plan."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_reduced
 from repro.core.device import tpu_pods
 from repro.core.plan import lower_strategy
-from repro.core.tag import optimize, build_grouped
+from repro.core.tag import optimize
 from repro.launch.serve import generate
-from repro.launch import steps as steps_mod
 from repro.launch.train import main as train_main
 from repro.models import init_params, loss_fn
 from repro.parallel.sharding import AxisRules
