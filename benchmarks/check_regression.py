@@ -53,6 +53,11 @@ METRICS = {
         ("drift.improved", "true", 0.0),
         ("drift.replanned_time_s", "lower", 0.10),
     ],
+    "BENCH_overhead.json": [
+        # wall-clock latencies themselves are runner-dependent; the gate
+        # is the boolean "<5% observability tax" acceptance criterion
+        ("overhead_under_5pct", "true", 0.0),
+    ],
     "BENCH_policy.json": [
         ("tiny_win_count", "higher", 0.0),
         ("tiny_dp_floor", "true", 0.0),

@@ -4,9 +4,18 @@ TAG only needs MCTS + GNN inference; HeteroG-style systems retrain their
 GNN per topology; HDP evaluates candidates on the real cluster. We
 measure TAG's wall time and model the baselines' overheads with the same
 search budget (HeteroG = TAG search + GNN training from scratch;
-HDP = search where every evaluation costs a real-cluster run)."""
+HDP = search where every evaluation costs a real-cluster run).
+
+``--overhead`` (also run by default) measures the observability tax: the
+same cold MCTS search with the span tracer + planner metrics fully
+enabled vs disabled, interleaved repeats, compared on the min — the
+acceptance gate is ``overhead_frac < 0.05``, written to
+``results/BENCH_overhead.json`` and enforced by check_regression.py."""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import numpy as np
@@ -95,6 +104,78 @@ def run_expansion_cache(n_topos=2, iters=30, warmup=True):
     return out
 
 
+def run_instrumentation_overhead(iters=48, repeats=5,
+                                 model="bert_small") -> dict:
+    """Observability tax on a cold planner search: spans enabled
+    (per-playout/evaluate/expand + planner-phase spans, metrics
+    recording) vs the disabled fast path. Interleaved repeats, compared
+    on the min (wall-clock noise rejection); the ISSUE acceptance gate
+    is ``overhead_frac < 0.05``."""
+    from repro.core.device import cloud
+    from repro.obs.spans import Tracer, get_tracer, set_tracer
+    from repro.service.planner import PlannerService
+
+    gg = grouped(model)
+    topo = cloud()
+
+    def cold_search():
+        svc = PlannerService(use_registry=False, warm_start=False)
+        t0 = time.perf_counter()
+        svc.plan_graph(gg, topo, iterations=iters)
+        return time.perf_counter() - t0
+
+    # warm every cross-run cache (fingerprints, pipe timelines) before
+    # the timed region so both modes see identical state
+    cold_search()
+
+    times = {"off": [], "on": []}
+    spans_recorded = 0
+    for _ in range(repeats):
+        for mode in ("off", "on"):
+            tracer = Tracer(enabled=(mode == "on"))
+            old = set_tracer(tracer)
+            try:
+                times[mode].append(cold_search())
+            finally:
+                set_tracer(old)
+            if mode == "on":
+                spans_recorded = len(tracer.spans())
+    base = float(min(times["off"]))
+    instrumented = float(min(times["on"]))
+    overhead = (instrumented - base) / base
+    return {
+        "model": model, "iterations": iters, "repeats": repeats,
+        "base_s": base, "instrumented_s": instrumented,
+        "base_median_s": float(np.median(times["off"])),
+        "instrumented_median_s": float(np.median(times["on"])),
+        "overhead_frac": overhead,
+        "overhead_under_5pct": bool(overhead < 0.05),
+        "spans_per_search": spans_recorded,
+        "tracer_default_enabled": get_tracer().enabled,
+    }
+
+
+def main_overhead():
+    o = run_instrumentation_overhead()
+    os.makedirs("results", exist_ok=True)
+    out = os.path.join("results", "BENCH_overhead.json")
+    with open(out, "w") as f:
+        json.dump(o, f, indent=2, sort_keys=True)
+    print("fig8,overhead,metric,value")
+    print(fmt_row("fig8", "search_base_s", f"{o['base_s']:.3f}"))
+    print(fmt_row("fig8", "search_instrumented_s",
+                  f"{o['instrumented_s']:.3f}"))
+    print(fmt_row("fig8", "instrumentation_overhead_frac",
+                  f"{o['overhead_frac']:.4f}"))
+    print(fmt_row("fig8", "spans_per_search", o["spans_per_search"]))
+    print(fmt_row("fig8", "overhead_under_5pct",
+                  o["overhead_under_5pct"]))
+    assert o["overhead_under_5pct"], \
+        (o["overhead_frac"], o["base_s"], o["instrumented_s"])
+    assert not o["tracer_default_enabled"]
+    return o
+
+
 def main():
     r = run()
     print("fig8,system,strategy_generation_seconds")
@@ -112,8 +193,17 @@ def main():
     print(fmt_row("fig8", "policy_query_speedup",
                   f"{c['policy_speedup']:.1f}"))
     r["expansion_cache"] = c
+    r["instrumentation"] = main_overhead()
     return r
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--overhead", action="store_true",
+                    help="only run the observability-overhead section "
+                         "(writes results/BENCH_overhead.json)")
+    a = ap.parse_args()
+    if a.overhead:
+        main_overhead()
+    else:
+        main()

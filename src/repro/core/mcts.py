@@ -25,6 +25,7 @@ from repro.core.graph import GroupedGraph
 from repro.core.simulator import simulate
 from repro.core.strategy import (
     Action, Option, Strategy, candidate_actions, data_parallel_all)
+from repro.obs.spans import get_tracer
 
 
 @dataclass
@@ -120,8 +121,9 @@ class MCTS:
             out = self._pipe_evaluate(filled)
             if out is not None:
                 return out
-        tg = compile_strategy(self.gg, filled, self.topo)
-        res = simulate(tg, self.topo)
+        with get_tracer().span("simulate", cat="mcts"):
+            tg = compile_strategy(self.gg, filled, self.topo)
+            res = simulate(tg, self.topo)
         if not res.feasible:
             return -1.0, res
         return self.baseline_time / res.makespan, res
@@ -192,13 +194,17 @@ class MCTS:
         if self.policy is None:
             probs = np.full(len(actions), 1.0 / len(actions))
         else:
+            tracer = get_tracer()
             if getattr(self.policy, "cache_embeddings", False):
                 het = self._episode_het()
             else:
-                het = featurize(self.gg, self.topo, vertex.strategy,
-                                vertex.feedback, gid,
-                                observed=self.observed_feedback)
-            probs = np.asarray(self.policy(het, gid, actions), np.float64)
+                with tracer.span("featurize", cat="mcts"):
+                    het = featurize(self.gg, self.topo, vertex.strategy,
+                                    vertex.feedback, gid,
+                                    observed=self.observed_feedback)
+            with tracer.span("gnn_forward", cat="mcts"):
+                probs = np.asarray(self.policy(het, gid, actions),
+                                   np.float64)
             probs = probs / max(probs.sum(), 1e-9)
         return actions, self._blend_prior(gid, actions, probs)
 
@@ -295,40 +301,44 @@ class MCTS:
             if seeded is not None:
                 note(*seeded)
 
+        tracer = get_tracer()
         while it_run < iterations:
             if stop_reward is not None and best["r"] >= stop_reward:
                 break
-            # selection
-            path = []
-            v = root
-            while True:
-                if v.depth >= self.gg.n:
-                    break
-                if v.actions is None:  # unexpanded leaf
-                    break
-                total_n = v.N.sum()
-                u = v.Q + self.c * v.prior * math.sqrt(total_n + 1e-9) \
-                    / (1.0 + v.N)
-                a_idx = int(np.argmax(u))
-                path.append((v, a_idx))
-                if a_idx not in v.children:
-                    gid = self.order[v.depth]
-                    child = Vertex(
-                        v.strategy.with_action(gid, v.actions[a_idx]),
-                        v.depth + 1)
-                    v.children[a_idx] = child
-                    v = child
-                    break
-                v = v.children[a_idx]
+            with tracer.span("playout", cat="mcts", iter=it_run):
+                # selection
+                path = []
+                v = root
+                while True:
+                    if v.depth >= self.gg.n:
+                        break
+                    if v.actions is None:  # unexpanded leaf
+                        break
+                    total_n = v.N.sum()
+                    u = v.Q + self.c * v.prior \
+                        * math.sqrt(total_n + 1e-9) / (1.0 + v.N)
+                    a_idx = int(np.argmax(u))
+                    path.append((v, a_idx))
+                    if a_idx not in v.children:
+                        gid = self.order[v.depth]
+                        child = Vertex(
+                            v.strategy.with_action(gid, v.actions[a_idx]),
+                            v.depth + 1)
+                        v.children[a_idx] = child
+                        v = child
+                        break
+                    v = v.children[a_idx]
 
-            # expansion + evaluation
-            r, res = self._evaluate(v.strategy)
-            v.reward, v.feedback = r, res
-            self._expand(v)
+                # expansion + evaluation
+                with tracer.span("evaluate", cat="mcts", depth=v.depth):
+                    r, res = self._evaluate(v.strategy)
+                v.reward, v.feedback = r, res
+                with tracer.span("expand", cat="mcts"):
+                    self._expand(v)
 
-            # back-propagation
-            self._backprop(path, r)
-            note(r, v)
+                # back-propagation
+                self._backprop(path, r)
+                note(r, v)
 
         # collect training records from well-visited vertices
         def visit(v):

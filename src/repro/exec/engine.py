@@ -96,7 +96,9 @@ class StepStats:
     metrics: dict
     wall_time: float
     events: list = field(default_factory=list)  # (kind, stage, mb, dur,
-    #                                              chunk)
+    #                                              chunk, start) — start
+    #                                              is seconds from step
+    #                                              begin
     peak_stash: int = 0
 
 
@@ -152,6 +154,7 @@ class PipelineRunner:
         self._bwd = [None] * self.U          # joint (dp, dc)
         self._bwd_act = [None] * self.U      # zb: dc only
         self._bwd_wgt = [None] * self.U      # zb: dp only
+        self.last_stats = None               # StepStats of the last step
 
     # ------------------------------------------------------- placement
     def phys(self, u: int) -> int:
@@ -390,7 +393,8 @@ class PipelineRunner:
                     jax.block_until_ready(dp)
             if record:
                 events.append((ev.kind, s, m,
-                               time.perf_counter() - t0, ev.chunk))
+                               time.perf_counter() - t0, ev.chunk,
+                               t0 - t_start))
 
         grads = [jax.tree.map(lambda g: g / M, g_u) for g_u in grads]
         if self.tied_ref is not None:
@@ -409,6 +413,8 @@ class PipelineRunner:
         wall = time.perf_counter() - t_start
         stats = StepStats(loss=loss, metrics=metrics, wall_time=wall,
                           events=events, peak_stash=peak)
+        self.last_stats = stats         # latest recorded step, for trace
+        #                                 export (obs.trace)
         if self.store is not None:
             self._record_telemetry(stats)
         return grads, stats
@@ -418,8 +424,10 @@ class PipelineRunner:
         from repro.exec.schedule import FWD_FRAC, ZB_DGRAD_FRAC
         from repro.runtime.telemetry import StepRecord
         bwd_frac = 1.0 - FWD_FRAC
-        compute = []
-        for kind, s, m, dur, chunk in stats.events:
+        compute, ev_meta = [], []
+        for e in stats.events:
+            kind, s, m, dur, chunk = e[:5]
+            start = e[5] if len(e) > 5 else 0.0
             spec = self.plan.stages[s] if s < len(self.plan.stages) else None
             flops_m = (spec.flops / self.n_micro / self.V) if spec else 0.0
             if kind == "F":
@@ -430,13 +438,17 @@ class PipelineRunner:
                 frac = bwd_frac * (ZB_DGRAD_FRAC if self.has_w else 1.0)
             compute.append({
                 "gpu_type": getattr(spec, "gpu_type", "") or "",
-                "flops": flops_m * frac, "time": dur,
+                "flops": flops_m * frac, "time": dur, "op": kind,
                 "stage": s, "mb": m, "kind": kind, "chunk": chunk})
+            ev_meta.append({"kind": kind, "stage": s, "mb": m,
+                            "chunk": chunk, "start": start,
+                            "finish": start + dur})
         rec = StepRecord(
             graph_fp=self.graph_fp, topo_fp=self.topo_fp,
             wall_time=stats.wall_time, compute=compute,
             meta=dict(self.meta, executor="pipeline",
                       schedule=self.schedule, n_stages=self.S,
                       n_chunks=self.V, n_micro=self.n_micro,
-                      loss=stats.loss, peak_stash=stats.peak_stash))
+                      loss=stats.loss, peak_stash=stats.peak_stash,
+                      events=ev_meta))
         self.store.append(rec)

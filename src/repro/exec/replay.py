@@ -81,7 +81,7 @@ def execute_pipeline(plan: StagePlan, true_topo: Topology, *,
                 "nominal_bw": nominal.nominal_bw(gi, gj),
                 "link": "p2p", "pair": f"{gi}-{gj}", "time": dur})
         stage_events.append({"kind": e.kind, "stage": e.stage,
-                             "mb": e.mb, "chunk": e.chunk,
+                             "mb": e.mb, "chunk": e.chunk, "src": e.src,
                              "start": e.start, "finish": e.start + dur})
 
     busy = {str(s.device_group): tl.stage_busy[i]

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -62,6 +63,25 @@ def resolve_pipeline(plan, mode: str):
 
 def _stage_key(s: int) -> str:
     return f"stage{s}"
+
+
+def _export_spans(args):
+    """Write the session's planner/search spans as a Chrome trace
+    (``--trace-dir``); no-op when tracing is off or nothing was
+    recorded."""
+    if not getattr(args, "trace_dir", ""):
+        return
+    from repro.obs import chrome_trace, write_chrome_trace
+    from repro.obs.spans import get_tracer
+    tracer = get_tracer()
+    if not tracer.spans():
+        return
+    path = write_chrome_trace(
+        os.path.join(args.trace_dir, "trace_spans.json"),
+        chrome_trace(tracer.to_chrome(process_name="train"),
+                     arch=args.arch, kind="spans"))
+    print(f"trace: wrote {path} ({len(tracer.spans())} spans)",
+          flush=True)
 
 
 def run_pipeline(args, cfg, stage_plan):
@@ -134,13 +154,17 @@ def run_pipeline(args, cfg, stage_plan):
         frontend_tokens=cfg.frontend_tokens if cfg.frontend != "none" else 0,
         d_model=cfg.d_model)
 
+    # tests drive run_pipeline with hand-built Namespaces: default, don't
+    # assume the full CLI surface
+    trace_dir = getattr(args, "trace_dir", None)
+    record_steps = store is not None or bool(trace_dir)
     losses = []
     t_start = time.time()
     for step in range(start_step, args.steps):
         batch = jax.tree.map(jnp.asarray, ds.batch(step))
         params_list, opt_state_list, metrics = step_fn(
             params_list, opt_state_list, jnp.asarray(step, jnp.int32),
-            batch, record=store is not None)
+            batch, record=record_steps)
         losses.append(metrics["loss"])
         if step % args.log_every == 0:
             chunks = f"x{n_chunks}v" if n_chunks > 1 else ""
@@ -166,6 +190,20 @@ def run_pipeline(args, cfg, stage_plan):
           f"({dt/n*1e3:.0f} ms/step, schedule={schedule}, "
           f"stages={stage_plan.n_stages}, n_micro={n_micro})"
           f"{tail}", flush=True)
+    if trace_dir and runner.last_stats is not None:
+        from repro.obs import (
+            chrome_trace, executed_trace_events, write_chrome_trace)
+        events = executed_trace_events(
+            runner.last_stats, pid=0,
+            process_name=f"executed [{schedule}]",
+            n_stages=stage_plan.n_stages)
+        path = write_chrome_trace(
+            os.path.join(trace_dir, "trace_executed.json"),
+            chrome_trace(events, arch=args.arch, schedule=schedule,
+                         n_micro=n_micro,
+                         n_stages=stage_plan.n_stages))
+        print(f"trace: wrote {path} "
+              f"({len(runner.last_stats.events)} events)", flush=True)
     return losses
 
 
@@ -203,7 +241,20 @@ def main(argv=None):
     ap.add_argument("--telemetry-dir", default="",
                     help="record per-step telemetry (runtime feedback "
                          "subsystem) to this measurement log")
+    ap.add_argument("--trace-dir", default="",
+                    help="export Chrome traces here: the executed "
+                         "pipeline timeline of the last step plus the "
+                         "planner/search span timeline")
+    ap.add_argument("--xla-profile", action="store_true",
+                    help="wrap one post-warmup step in a jax.profiler "
+                         "trace and record per-collective samples into "
+                         "the telemetry log (no-op if the profiler "
+                         "backend is unavailable)")
     args = ap.parse_args(argv)
+
+    if args.trace_dir:
+        from repro.obs.spans import Tracer, set_tracer
+        set_tracer(Tracer(enabled=True))
 
     cfg = get_reduced(args.arch) if args.smoke else get_config(args.arch)
     mesh = mesh_mod.make_host_mesh()
@@ -231,7 +282,9 @@ def main(argv=None):
               f"summary={json.dumps(plan.summary)}", flush=True)
         stage_plan = resolve_pipeline(plan, args.pipeline)
         if stage_plan is not None:
-            return run_pipeline(args, cfg, stage_plan)
+            losses = run_pipeline(args, cfg, stage_plan)
+            _export_spans(args)
+            return losses
 
     opt = AdamW(lr=args.lr)
     key = jax.random.PRNGKey(args.seed)
@@ -256,6 +309,7 @@ def main(argv=None):
     options = steps_mod.StepOptions(loss_chunk=args.loss_chunk)
     step_fn = jax.jit(steps_mod.make_train_step(cfg, opt, rules, options))
 
+    raw_step_fn = step_fn
     timer = None
     if args.telemetry_dir:
         from repro.runtime.telemetry import MeasurementStore, StepTimer
@@ -264,12 +318,33 @@ def main(argv=None):
                                 "seq": args.seq, "launcher": "train"})
         step_fn = steps_mod.instrument_step(step_fn, timer)
 
+    # profile one post-warmup step (the first is compile-dominated)
+    profile_at = -1
+    if args.xla_profile:
+        profile_at = min(start_step + 1, args.steps - 1)
+
     losses = []
     t_start = time.time()
     for step in range(start_step, args.steps):
         batch = jax.tree.map(jnp.asarray, ds.batch(step))
-        params, opt_state, metrics = step_fn(
-            params, opt_state, jnp.asarray(step, jnp.int32), batch)
+        if step == profile_at:
+            from repro.obs.xla_profiler import profile_step
+            log_dir = os.path.join(
+                args.trace_dir or args.telemetry_dir or ".",
+                "xla_profile")
+            t0 = time.perf_counter()
+            out, samples, pmeta = profile_step(
+                raw_step_fn, params, opt_state,
+                jnp.asarray(step, jnp.int32), batch, log_dir=log_dir)
+            wall = time.perf_counter() - t0
+            params, opt_state, metrics = out
+            print(f"xla-profile: {json.dumps(pmeta)} "
+                  f"({len(samples)} collective samples)", flush=True)
+            if timer is not None:
+                timer.record(wall, collectives=samples)
+        else:
+            params, opt_state, metrics = step_fn(
+                params, opt_state, jnp.asarray(step, jnp.int32), batch)
         loss = float(metrics["loss"])
         losses.append(loss)
         if step % args.log_every == 0:
@@ -287,6 +362,7 @@ def main(argv=None):
     if timer is not None:
         print(f"telemetry[{args.telemetry_dir}]: "
               f"{json.dumps(timer.summary())}", flush=True)
+    _export_spans(args)
     return losses
 
 

@@ -1,0 +1,42 @@
+"""Observability layer (``repro.obs``): tracing + metrics for the whole
+TAG pipeline.
+
+  * ``trace``        — Chrome/Perfetto trace export of predicted
+                       schedule ``Timeline``s and executed event
+                       streams, plus the per-(stage, mb, kind)
+                       predicted-vs-executed ``diff_report``;
+  * ``spans``        — low-overhead thread-safe span API (planner path:
+                       plan -> store lookup -> policy resolve -> MCTS
+                       playouts with expand/featurize/simulate
+                       sub-spans), exported in the same trace format;
+  * ``metrics``      — counters/gauges/histograms with Prometheus-text
+                       and JSON dumps (planner hit rates, plan-latency
+                       histograms, bubble fractions, drift state);
+  * ``xla_profiler`` — optional ``jax.profiler`` hook parsing real
+                       per-collective samples into
+                       ``StepRecord.collectives`` (graceful no-op when
+                       the profiler is unavailable).
+
+Every surface is consumed by ``repro-plan trace`` / ``repro-plan
+metrics`` and ``launch.train --trace-dir``.
+"""
+from repro.obs.metrics import (
+    Counter, Gauge, Histogram, Metric, MetricsRegistry)
+from repro.obs.spans import Span, Tracer, get_tracer, set_tracer, span
+from repro.obs.trace import (
+    chrome_trace, diff_report, executed_events_of, executed_trace_events,
+    format_diff, timeline_trace_events, validate_chrome_trace,
+    write_chrome_trace)
+from repro.obs.xla_profiler import (
+    attach_collectives, classify_op, find_trace_files,
+    parse_trace_collectives, profile_step, profiler_available)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Metric", "MetricsRegistry",
+    "Span", "Tracer", "get_tracer", "set_tracer", "span",
+    "chrome_trace", "diff_report", "executed_events_of",
+    "executed_trace_events", "format_diff", "timeline_trace_events",
+    "validate_chrome_trace", "write_chrome_trace",
+    "attach_collectives", "classify_op", "find_trace_files",
+    "parse_trace_collectives", "profile_step", "profiler_available",
+]

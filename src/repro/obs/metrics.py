@@ -1,0 +1,226 @@
+"""Metrics registry: counters / gauges / histograms with Prometheus-text
+and JSON dumps.
+
+The planner service is the primary producer (hit/warm/cold rates,
+plan-latency histograms, playouts-to-best, store size, drift-detector
+state); the calibration layer adds per-device-type and per-op-type
+utilization gauges. Everything is in-process and thread-safe — a metric
+is a named family, each (sorted) label set a separate series:
+
+    reg = MetricsRegistry()
+    reg.counter("planner_requests_total", "requests").inc(source="hit")
+    reg.histogram("planner_plan_latency_seconds", "latency").observe(0.2)
+    print(reg.to_prometheus())        # text exposition format
+    reg.to_dict()                     # JSON-able dump
+
+No server is bundled: ``repro-plan metrics`` prints either format, and a
+future planner front end can mount ``to_prometheus()`` on a /metrics
+route unchanged.
+"""
+from __future__ import annotations
+
+import threading
+
+# default histogram buckets: exponential, centered on plan/step latencies
+DEFAULT_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+                   0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
+
+
+def _labelkey(labels: dict) -> tuple:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _labelstr(key: tuple) -> str:
+    if not key:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in key)
+    return "{" + inner + "}"
+
+
+class Metric:
+    """Base: a named family of label-keyed series."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._lock = threading.Lock()
+        self._series: dict = {}
+
+    def _get(self, labels: dict, default):
+        key = _labelkey(labels)
+        with self._lock:
+            if key not in self._series:
+                self._series[key] = default()
+            return key, self._series[key]
+
+    def series(self) -> dict:
+        with self._lock:
+            return dict(self._series)
+
+
+class Counter(Metric):
+    """Monotonically increasing counter (per label set)."""
+
+    kind = "counter"
+
+    def inc(self, amount: float = 1.0, **labels):
+        if amount < 0:
+            raise ValueError("counters only go up")
+        key = _labelkey(labels)
+        with self._lock:
+            self._series[key] = self._series.get(key, 0.0) + amount
+
+    def value(self, **labels) -> float:
+        with self._lock:
+            return self._series.get(_labelkey(labels), 0.0)
+
+    def to_dict(self) -> dict:
+        return {_labelstr(k) or "": v for k, v in self.series().items()}
+
+    def to_prometheus(self) -> list:
+        return [f"{self.name}{_labelstr(k)} {v:.10g}"
+                for k, v in sorted(self.series().items())]
+
+
+class Gauge(Metric):
+    """Set-to-current-value gauge (per label set)."""
+
+    kind = "gauge"
+
+    def set(self, value: float, **labels):
+        key = _labelkey(labels)
+        with self._lock:
+            self._series[key] = float(value)
+
+    def inc(self, amount: float = 1.0, **labels):
+        key = _labelkey(labels)
+        with self._lock:
+            self._series[key] = self._series.get(key, 0.0) + amount
+
+    def value(self, **labels) -> float:
+        with self._lock:
+            return self._series.get(_labelkey(labels), 0.0)
+
+    to_dict = Counter.to_dict
+    to_prometheus = Counter.to_prometheus
+
+
+class _HistSeries:
+    __slots__ = ("counts", "total", "count", "vmin", "vmax")
+
+    def __init__(self, n_buckets: int):
+        self.counts = [0] * (n_buckets + 1)       # +inf bucket last
+        self.total = 0.0
+        self.count = 0
+        self.vmin = float("inf")
+        self.vmax = float("-inf")
+
+
+class Histogram(Metric):
+    """Cumulative-bucket histogram (Prometheus semantics)."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "", buckets=None):
+        super().__init__(name, help)
+        self.buckets = tuple(sorted(buckets or DEFAULT_BUCKETS))
+
+    def observe(self, value: float, **labels):
+        value = float(value)
+        key, s = self._get(labels, lambda: _HistSeries(len(self.buckets)))
+        with self._lock:
+            i = 0
+            while i < len(self.buckets) and value > self.buckets[i]:
+                i += 1
+            s.counts[i] += 1
+            s.total += value
+            s.count += 1
+            s.vmin = min(s.vmin, value)
+            s.vmax = max(s.vmax, value)
+
+    def snapshot(self, **labels) -> dict:
+        """count/sum/mean/min/max + per-bucket cumulative counts."""
+        with self._lock:
+            s = self._series.get(_labelkey(labels))
+            if s is None or s.count == 0:
+                return {"count": 0, "sum": 0.0}
+            cum, cumcounts = 0, []
+            for c in s.counts:
+                cum += c
+                cumcounts.append(cum)
+            return {"count": s.count, "sum": s.total,
+                    "mean": s.total / s.count, "min": s.vmin,
+                    "max": s.vmax,
+                    "buckets": {("+Inf" if i >= len(self.buckets)
+                                 else repr(self.buckets[i])): c
+                                for i, c in enumerate(cumcounts)}}
+
+    def to_dict(self) -> dict:
+        return {_labelstr(_labelkey(dict(k))) or "":
+                self.snapshot(**dict(k)) for k in self.series()}
+
+    def to_prometheus(self) -> list:
+        lines = []
+        for key in sorted(self.series()):
+            snap = self.snapshot(**dict(key))
+            base = dict(key)
+            for le, c in snap.get("buckets", {}).items():
+                lab = _labelstr(_labelkey(dict(base, le=le)))
+                lines.append(f"{self.name}_bucket{lab} {c}")
+            lab = _labelstr(key)
+            lines.append(f"{self.name}_sum{lab} {snap['sum']:.10g}")
+            lines.append(f"{self.name}_count{lab} {snap['count']}")
+        return lines
+
+
+class MetricsRegistry:
+    """Get-or-create metric families; re-registering a name with a
+    different kind raises."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: dict = {}
+
+    def _register(self, cls, name, help, **kw):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name, help, **kw)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise ValueError(
+                    f"metric {name!r} already registered as {m.kind}")
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._register(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._register(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets=None) -> Histogram:
+        return self._register(Histogram, name, help, buckets=buckets)
+
+    def get(self, name: str):
+        with self._lock:
+            return self._metrics.get(name)
+
+    def metrics(self) -> list:
+        with self._lock:
+            return sorted(self._metrics.values(), key=lambda m: m.name)
+
+    def to_dict(self) -> dict:
+        return {m.name: {"kind": m.kind, "help": m.help,
+                         "series": m.to_dict()} for m in self.metrics()}
+
+    def to_prometheus(self) -> str:
+        lines = []
+        for m in self.metrics():
+            if m.help:
+                lines.append(f"# HELP {m.name} {m.help}")
+            lines.append(f"# TYPE {m.name} {m.kind}")
+            lines.extend(m.to_prometheus())
+        return "\n".join(lines) + ("\n" if lines else "")

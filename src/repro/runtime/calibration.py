@@ -53,6 +53,15 @@ class CalibrationProfile:
     # transfers (repro.exec.replay / runtime.executor) tag their samples
     # with the pair key that feeds this tier.
     pairs: dict = field(default_factory=dict)
+    # per-op-type utilization buckets: "gpu_type/op" -> utilization, where
+    # ``op`` is the sample's op attribution — the pipeline event kind
+    # (F/B/W) from the exec engine/replay, or the dominant traced
+    # primitive ("dot_general", ...) from the task-graph executor. An
+    # observability tier on top of the per-device ``util`` the cost model
+    # applies: it shows WHICH phase/op family drags a device's achieved
+    # utilization down (surfaced by ``profile_metrics`` and
+    # ``repro-plan metrics``).
+    util_by_op: dict = field(default_factory=dict)
 
     def device_flops(self, gpu_type: str, default: float) -> float:
         u = self.util.get(gpu_type)
@@ -87,6 +96,7 @@ class CalibrationProfile:
     # ------------------------------------------------------ serialization
     def to_dict(self) -> dict:
         return {"version": PROFILE_VERSION, "util": self.util,
+                "util_by_op": self.util_by_op,
                 "links": {k: v.to_dict() for k, v in self.links.items()},
                 "pairs": {k: v.to_dict() for k, v in self.pairs.items()},
                 "latency": self.latency, "n_records": self.n_records,
@@ -98,6 +108,8 @@ class CalibrationProfile:
             raise ValueError(f"calibration profile schema "
                              f"{d.get('version')} != {PROFILE_VERSION}")
         return cls(util={k: float(v) for k, v in d.get("util", {}).items()},
+                   util_by_op={k: float(v)
+                               for k, v in d.get("util_by_op", {}).items()},
                    links={k: CommFit.from_dict(v)
                           for k, v in d.get("links", {}).items()},
                    pairs={k: CommFit.from_dict(v)
@@ -167,11 +179,16 @@ def fit_profile(records: list, topo: Topology, *,
     to the per-class fit.
     """
     by_type: dict = {}
+    by_op: dict = {}
     for r in records:
         for s in r.compute:
             if s.get("flops", 0.0) > 0 and s.get("time", 0.0) > 0:
-                by_type.setdefault(s["gpu_type"], []).append(
-                    (float(s["flops"]), float(s["time"])))
+                sample = (float(s["flops"]), float(s["time"]))
+                by_type.setdefault(s["gpu_type"], []).append(sample)
+                op = s.get("op") or s.get("kind")
+                if op:
+                    by_op.setdefault((s["gpu_type"], str(op)),
+                                     []).append(sample)
     util = {}
     for t, samples in by_type.items():
         if t not in GPU_PEAKS:
@@ -180,6 +197,14 @@ def fit_profile(records: list, topo: Topology, *,
         u = fit_utilization(fl, ti, peak_flops(t))
         if u is not None:              # degenerate fit: keep nominal
             util[t] = u
+    util_by_op = {}
+    for (t, op), samples in by_op.items():
+        if t not in GPU_PEAKS:
+            continue
+        fl, ti = zip(*samples)
+        u = fit_utilization(fl, ti, peak_flops(t))
+        if u is not None:
+            util_by_op[f"{t}/{op}"] = u
 
     by_class: dict = {}
     by_pair: dict = {}
@@ -216,10 +241,46 @@ def fit_profile(records: list, topo: Topology, *,
             pairs[pair] = fit
 
     return CalibrationProfile(
-        util=util, links=links, pairs=pairs,
+        util=util, util_by_op=util_by_op, links=links, pairs=pairs,
         latency=float(np.mean(alphas)) if alphas else None,
         n_records=len(records),
         meta={"topo": topo.name,
               "compute_samples": int(sum(len(v) for v in by_type.values())),
               "comm_samples": int(sum(len(v) for v in by_class.values())),
-              "pair_samples": {k: len(v) for k, v in by_pair.items()}})
+              "pair_samples": {k: len(v) for k, v in by_pair.items()},
+              "op_samples": {f"{t}/{op}": len(v)
+                             for (t, op), v in by_op.items()}})
+
+
+def profile_metrics(profile: CalibrationProfile, registry=None):
+    """Surface a ``CalibrationProfile`` as metrics gauges
+    (``repro.obs.metrics``): per-device-type and per-op-type utilization,
+    per-class and per-pair link efficiency, fitted latency. Returns the
+    registry (created when not given)."""
+    if registry is None:
+        from repro.obs.metrics import MetricsRegistry
+        registry = MetricsRegistry()
+    g_util = registry.gauge("calibration_utilization",
+                            "fitted compute utilization per device type")
+    for t, u in profile.util.items():
+        g_util.set(u, gpu_type=t)
+    g_op = registry.gauge(
+        "calibration_utilization_by_op",
+        "fitted compute utilization per (device type, op type) bucket")
+    for key, u in profile.util_by_op.items():
+        t, op = key.split("/", 1)
+        g_op.set(u, gpu_type=t, op=op)
+    g_eff = registry.gauge("calibration_link_efficiency",
+                           "fitted achieved fraction of nominal bandwidth")
+    for cls_name, fit in profile.links.items():
+        g_eff.set(fit.eff, link=cls_name)
+    for pair, fit in profile.pairs.items():
+        g_eff.set(fit.eff, link="pair", pair=pair)
+    if profile.latency is not None:
+        registry.gauge("calibration_latency_seconds",
+                       "fitted per-transfer latency alpha").set(
+            profile.latency)
+    registry.gauge("calibration_records",
+                   "step records the profile was fitted from").set(
+        profile.n_records)
+    return registry

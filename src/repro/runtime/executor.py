@@ -22,21 +22,42 @@ from repro.core.strategy import device_group_of
 from repro.runtime.telemetry import MeasurementStore, StepRecord
 
 
+def dominant_op(gg, group_id: int) -> str | None:
+    """Flops-dominant primitive name of an op group — the ``"op"`` tag
+    compute samples carry so calibration can bucket utilization per op
+    type, not just per device type."""
+    if gg is None or group_id is None or group_id >= len(gg.groups):
+        return None
+    by_op: dict = {}
+    for oid in gg.groups[group_id].op_ids:
+        node = gg.base.nodes.get(oid)
+        if node is not None:
+            by_op[node.op_type] = by_op.get(node.op_type, 0.0) + node.flops
+    if not by_op:
+        return None
+    return max(by_op.items(), key=lambda kv: kv[1])[0]
+
+
 def execute_plan(tg, true_topo: Topology, *,
                  nominal_topo: Topology | None = None,
                  graph_fp: str = "", topo_fp: str = "",
                  step: int = 0, noise: float = 0.0, seed: int = 0,
                  store: MeasurementStore | None = None,
-                 meta: dict | None = None) -> StepRecord:
+                 gg=None, meta: dict | None = None) -> StepRecord:
     """Execute one step of ``tg`` on ``true_topo`` and record telemetry.
 
     ``nominal_topo`` (default: ``true_topo``) supplies the spec-sheet
     bandwidths the samples are normalized against — on a live cluster the
     profiler knows the nominal link speed, not the achieved one.
     ``noise`` adds multiplicative jitter (relative std-dev) per sample.
+    ``gg`` (the GroupedGraph ``tg`` was compiled from, optional) lets
+    compute samples carry their group's dominant primitive as ``"op"``
+    for the per-op-type calibration tier.
     """
     nominal = nominal_topo or true_topo
     rng = np.random.default_rng(seed)
+    op_of = {g: dominant_op(gg, g)
+             for g in range(len(gg.groups))} if gg is not None else {}
 
     def jitter():
         return 1.0 + noise * float(rng.standard_normal()) if noise else 1.0
@@ -49,9 +70,13 @@ def execute_plan(tg, true_topo: Topology, *,
     for t in tg.tasks:
         dur = (res.task_finish[t.tid] - res.task_start[t.tid]) * jitter()
         if t.kind == "compute":
-            compute.append({
+            sample = {
                 "gpu_type": true_topo.groups[g_of[t.device]].gpu_type,
-                "flops": t.flops, "time": dur})
+                "flops": t.flops, "time": dur}
+            op = op_of.get(t.group)
+            if op:
+                sample["op"] = op
+            compute.append(sample)
         elif t.kind == "xfer":
             gi, gj = g_of[t.src], g_of[t.dst]
             collectives.append({

@@ -87,6 +87,9 @@ class MeasurementStore:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self.path = path
         self._mem: list = []
+        # incremental-reader cursor (``read_new``): byte offset of the
+        # first unconsumed line (memory mode: index into ``_mem``)
+        self._offset = 0
 
     def append(self, rec: StepRecord) -> StepRecord:
         if not rec.ts:
@@ -106,6 +109,32 @@ class MeasurementStore:
                     fcntl.flock(f, fcntl.LOCK_UN)
         return rec
 
+    @staticmethod
+    def _parse(line, graph_fp, topo_fp):
+        """StepRecord of a JSONL line passing the substring pre-filter and
+        the exact fingerprint match, else None."""
+        if isinstance(line, bytes):
+            try:
+                line = line.decode()
+            except UnicodeDecodeError:
+                return None
+        line = line.strip()
+        if not line:
+            return None
+        if graph_fp is not None and graph_fp not in line:
+            return None
+        if topo_fp is not None and topo_fp not in line:
+            return None
+        try:
+            rec = StepRecord.from_dict(json.loads(line))
+        except (ValueError, KeyError):
+            return None                   # torn/garbled line: skip
+        if graph_fp is not None and rec.graph_fp != graph_fp:
+            return None
+        if topo_fp is not None and rec.topo_fp != topo_fp:
+            return None
+        return rec
+
     def records(self, *, graph_fp: str | None = None,
                 topo_fp: str | None = None,
                 limit: int | None = None) -> list:
@@ -113,32 +142,99 @@ class MeasurementStore:
 
         Lines are pre-filtered by raw substring before JSON parsing, so
         fingerprint-keyed queries over a large log only pay full parse
-        cost for matching steps.
+        cost for matching steps. With ``limit`` the log is read BACKWARDS
+        in blocks (``tail``) — a long-running observe loop polling the
+        newest N records stays O(tail), not O(log).
         """
+        if self.path is not None and limit is not None:
+            return self.tail(limit, graph_fp=graph_fp, topo_fp=topo_fp)
         if self.path is None:
-            out = list(self._mem)
+            out = [r for r in self._mem
+                   if (graph_fp is None or r.graph_fp == graph_fp)
+                   and (topo_fp is None or r.topo_fp == topo_fp)]
         else:
             out = []
             if os.path.exists(self.path):
                 with open(self.path) as f:
                     for line in f:
-                        line = line.strip()
-                        if not line:
-                            continue
-                        if graph_fp is not None and graph_fp not in line:
-                            continue
-                        if topo_fp is not None and topo_fp not in line:
-                            continue
-                        try:
-                            out.append(StepRecord.from_dict(json.loads(line)))
-                        except (ValueError, KeyError):
-                            continue      # torn/garbled line: skip
-        if graph_fp is not None:
-            out = [r for r in out if r.graph_fp == graph_fp]
-        if topo_fp is not None:
-            out = [r for r in out if r.topo_fp == topo_fp]
+                        rec = self._parse(line, graph_fp, topo_fp)
+                        if rec is not None:
+                            out.append(rec)
         if limit is not None:
             out = out[-limit:]
+        return out
+
+    def tail(self, limit: int, *, graph_fp: str | None = None,
+             topo_fp: str | None = None,
+             block_size: int = 1 << 16) -> list:
+        """Newest ``limit`` matching records, oldest first, reading the
+        log backwards in ``block_size`` chunks — cost is proportional to
+        the tail, not the full log."""
+        if limit <= 0:
+            return []
+        if self.path is None:
+            out = [r for r in self._mem
+                   if (graph_fp is None or r.graph_fp == graph_fp)
+                   and (topo_fp is None or r.topo_fp == topo_fp)]
+            return out[-limit:]
+        if not os.path.exists(self.path):
+            return []
+        out = []
+        with open(self.path, "rb") as f:
+            f.seek(0, os.SEEK_END)
+            pos = f.tell()
+            buf = b""
+            while pos > 0 and len(out) < limit:
+                size = min(block_size, pos)
+                pos -= size
+                f.seek(pos)
+                buf = f.read(size) + buf
+                lines = buf.split(b"\n")
+                # lines[0] may be a partial line continuing into the
+                # previous (unread) block — keep it buffered
+                buf = lines[0] if pos > 0 else b""
+                start = 1 if pos > 0 else 0
+                for line in reversed(lines[start:]):
+                    rec = self._parse(line, graph_fp, topo_fp)
+                    if rec is not None:
+                        out.append(rec)
+                        if len(out) >= limit:
+                            break
+        out.reverse()
+        return out
+
+    def read_new(self, *, graph_fp: str | None = None,
+                 topo_fp: str | None = None) -> list:
+        """Records appended since the previous ``read_new`` call (oldest
+        first) — the O(new records) incremental reader for long-running
+        observe/feedback polls. Only COMPLETE lines are consumed: a
+        torn in-flight append stays buffered for the next poll. A
+        truncated/rotated log resets the cursor and replays from the
+        start."""
+        if self.path is None:
+            out = [r for r in self._mem[self._offset:]
+                   if (graph_fp is None or r.graph_fp == graph_fp)
+                   and (topo_fp is None or r.topo_fp == topo_fp)]
+            self._offset = len(self._mem)
+            return out
+        if not os.path.exists(self.path):
+            self._offset = 0
+            return []
+        size = os.path.getsize(self.path)
+        if size < self._offset:          # rotated/truncated underneath us
+            self._offset = 0
+        out = []
+        with open(self.path, "rb") as f:
+            f.seek(self._offset)
+            data = f.read()
+        end = data.rfind(b"\n")
+        if end < 0:
+            return []
+        for line in data[:end].split(b"\n"):
+            rec = self._parse(line, graph_fp, topo_fp)
+            if rec is not None:
+                out.append(rec)
+        self._offset += end + 1
         return out
 
     def __len__(self):

@@ -247,6 +247,112 @@ def cmd_drift(args) -> int:
     return 0
 
 
+SCHEDULES = ("gpipe", "1f1b", "interleaved", "zb")
+
+
+def cmd_trace(args) -> int:
+    """Export predicted + executed Chrome traces per schedule, plus the
+    per-(stage, mb, kind) diff report attributing step-time error."""
+    from repro.core.strategy import Action, Option, Strategy
+    from repro.exec.replay import execute_pipeline
+    from repro.exec.schedule import make_schedule, simulate_schedule
+    from repro.exec.stages import build_stage_plan
+    from repro.obs import (
+        chrome_trace, diff_report, executed_trace_events, format_diff,
+        timeline_trace_events, write_chrome_trace)
+    from repro.obs.metrics import MetricsRegistry
+
+    gg = _build_grouped(args)
+    topo = _build_topology(args.topo)
+    placement = tuple(range(topo.m))
+    strat = Strategy([
+        Action(placement, Option.PIPE) if i % 2 == 0
+        else Action(placement, Option.PS) for i in range(gg.n)])
+    plan = build_stage_plan(gg, strat, topo, n_micro=args.n_micro)
+    if plan is None or plan.n_stages < 2:
+        print(json.dumps(
+            {"error": "no multi-stage pipeline spine for this "
+                      "(model, topo)", "model": args.model,
+             "topo": args.topo}))
+        return 1
+    S = plan.n_stages
+    m = max(S, (args.n_micro // S) * S)   # interleaved needs m % S == 0
+    plan.n_micro = m
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    registry = MetricsRegistry()
+    g_bubble = registry.gauge(
+        "pipeline_bubble_fraction",
+        "executed idle fraction of the pipeline flush per schedule")
+    g_err = registry.gauge(
+        "pipeline_step_error_frac",
+        "(executed - predicted) / predicted step seconds per schedule")
+    out = {"model": args.model, "topo": args.topo, "n_stages": S,
+           "n_micro": m, "out_dir": args.out_dir, "schedules": {}}
+    for name in (args.schedules or SCHEDULES):
+        predicted = simulate_schedule(plan, topo,
+                                      make_schedule(name, S, m))
+        rec, tl = execute_pipeline(plan, topo, schedule=name,
+                                   noise=args.noise, seed=args.seed)
+        events = timeline_trace_events(
+            predicted, pid=0, process_name=f"predicted [{name}]")
+        events += executed_trace_events(
+            rec, pid=1, process_name=f"executed [{name}]", n_stages=S)
+        trace_path = write_chrome_trace(
+            os.path.join(args.out_dir, f"trace_{args.model}_{name}.json"),
+            chrome_trace(events, model=args.model, topo=args.topo,
+                         schedule=name, n_micro=m))
+        report = diff_report(predicted, rec,
+                             executed_wall=rec.wall_time)
+        diff_path = os.path.join(args.out_dir,
+                                 f"diff_{args.model}_{name}.json")
+        with open(diff_path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        g_bubble.set(tl.bubble_fraction(), schedule=name)
+        g_err.set(report["step_error_frac"], schedule=name)
+        out["schedules"][name] = {
+            "trace": trace_path, "diff": diff_path,
+            "predicted_step_s": report["predicted_step_s"],
+            "executed_step_s": report["executed_step_s"],
+            "step_error_frac": report["step_error_frac"],
+            "bubble_frac": tl.bubble_fraction(),
+            "events_matched": report["events_matched"]}
+        if args.verbose:
+            print(f"--- {name} ---")
+            print(format_diff(report))
+    metrics_path = os.path.join(args.out_dir, "trace_metrics.prom")
+    with open(metrics_path, "w") as f:
+        f.write(registry.to_prometheus())
+    out["metrics"] = metrics_path
+    print(json.dumps(out, indent=2))
+    return 0
+
+
+def cmd_metrics(args) -> int:
+    """Operational metrics snapshot: planner store gauges plus — given a
+    telemetry dir — the calibration fit (per-device-type AND per-op-type
+    utilization, link efficiencies) as gauges."""
+    svc = PlannerService(cache_dir=args.cache_dir)
+    registry = svc.metrics
+    svc.metrics.gauge("planner_store_size",
+                      "plans resident in the store").set(len(svc.store))
+    fitted = 0
+    if args.telemetry_dir:
+        from repro.runtime.calibration import fit_profile, profile_metrics
+        from repro.runtime.telemetry import MeasurementStore
+        recs = MeasurementStore(args.telemetry_dir).records()
+        if recs:
+            profile = fit_profile(recs, _build_topology(args.topo))
+            profile_metrics(profile, registry)
+            fitted = len(recs)
+    if args.format == "prometheus":
+        print(registry.to_prometheus())
+    else:
+        print(json.dumps({"stats": svc.stats(),
+                          "telemetry_records": fitted}, indent=2))
+    return 0
+
+
 def _add_model_args(p):
     p.add_argument("--model", choices=sorted(ZOO), required=True)
     p.add_argument("--topo", choices=sorted(TOPOLOGIES), default="testbed")
@@ -314,6 +420,36 @@ def main(argv=None) -> int:
     p.add_argument("--observed-time", type=float, required=True)
     p.add_argument("--threshold", type=float, default=0.25)
     p.set_defaults(fn=cmd_drift)
+
+    p = sub.add_parser("trace",
+                       help="export predicted + executed Chrome traces "
+                            "and the predicted-vs-executed diff report")
+    _add_model_args(p)
+    p.add_argument("--schedules", nargs="*", choices=SCHEDULES,
+                   default=None,
+                   help="schedules to trace (default: all four)")
+    p.add_argument("--n-micro", type=int, default=8,
+                   help="microbatches per step (rounded to a multiple "
+                        "of the stage count)")
+    p.add_argument("--noise", type=float, default=0.0,
+                   help="relative jitter on executed samples (makes the "
+                        "diff report non-trivial)")
+    p.add_argument("--out-dir", default="traces")
+    p.add_argument("--verbose", action="store_true",
+                   help="print the human diff per schedule")
+    p.set_defaults(fn=cmd_trace)
+
+    p = sub.add_parser("metrics",
+                       help="dump planner + calibration metrics "
+                            "(Prometheus text or JSON)")
+    p.add_argument("--cache-dir", default=".plans")
+    p.add_argument("--telemetry-dir", default=None,
+                   help="fit a calibration profile from this telemetry "
+                        "and surface it as gauges")
+    p.add_argument("--topo", choices=sorted(TOPOLOGIES), default="testbed")
+    p.add_argument("--format", choices=("prometheus", "json"),
+                   default="prometheus")
+    p.set_defaults(fn=cmd_metrics)
 
     p = sub.add_parser("policy",
                        help="train / list / pin registered GNN policies")

@@ -13,11 +13,14 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 import os
+import time
 
 from repro.core import tag as tag_mod
 from repro.core.device import Topology
 from repro.core.graph import GroupedGraph
 from repro.core.strategy import Strategy
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.spans import get_tracer
 from repro.service.fingerprint import (
     fingerprint_grouped_cached, fingerprint_topology,
     structural_features_cached, topology_structure_fingerprint)
@@ -90,6 +93,29 @@ class PlannerService:
                        "batch_dedup": 0, "iterations": 0,
                        "policy_guided": 0,
                        "observations": 0, "replans": 0}
+        # structured metrics mirror of _stats (+ latency/playout
+        # distributions), dumped by ``repro-plan metrics`` and merged
+        # into ``stats()``
+        self.metrics = MetricsRegistry()
+        self._m_requests = self.metrics.counter(
+            "planner_requests_total", "plan requests by provenance")
+        self._m_latency = self.metrics.histogram(
+            "planner_plan_seconds", "plan_graph wall seconds by provenance")
+        self._m_playouts = self.metrics.histogram(
+            "planner_playouts", "MCTS playouts spent per request",
+            buckets=[0, 5, 10, 20, 40, 80, 160, 320, 640])
+        self._m_playouts_to_best = self.metrics.histogram(
+            "planner_playouts_to_best",
+            "playouts until the search first beat the DP baseline",
+            buckets=[0, 5, 10, 20, 40, 80, 160, 320, 640])
+        self._m_store = self.metrics.gauge(
+            "planner_store_size", "plans resident in the store")
+        self._m_observe = self.metrics.counter(
+            "planner_observations_total",
+            "feedback observations by outcome")
+        self._m_drift = self.metrics.gauge(
+            "planner_drift_ratio",
+            "latest observed |ewma - simulated| / simulated")
         # runtime feedback loop (repro.runtime): created lazily so the
         # service stays import-light when feedback is unused
         self._drift_threshold = drift_threshold
@@ -121,75 +147,107 @@ class PlannerService:
         of measured telemetry routed into the GNN features in place of
         the simulated runtime feedback.
         """
-        graph_fp, topo_fp = fingerprints or (fingerprint_grouped_cached(gg),
-                                             fingerprint_topology(topo))
-        struct_fp = topology_structure_fingerprint(topo)
-        graph_feat = structural_features_cached(gg)
-        self._stats["requests"] += 1
+        t_plan = time.perf_counter()
+        tracer = get_tracer()
+        with tracer.span("plan", cat="planner", iterations=iterations):
+            with tracer.span("fingerprint", cat="planner"):
+                graph_fp, topo_fp = fingerprints or (
+                    fingerprint_grouped_cached(gg),
+                    fingerprint_topology(topo))
+                struct_fp = topology_structure_fingerprint(topo)
+                graph_feat = structural_features_cached(gg)
+            self._stats["requests"] += 1
 
-        if prior_strategy is not None:
-            kind, rec = "forced", None
-        elif self.warm_start:
-            kind, rec = find_prior(self.store, graph_fp, topo_fp, struct_fp,
-                                   graph_features=graph_feat)
-        else:
-            rec = self.store.get(graph_fp, topo_fp)
-            kind = "hit" if rec is not None else "miss"
-        if kind == "hit" and not (
-                rec.meta.get("enable_sfb", True) == enable_sfb
-                and rec.meta.get("iterations", 0) >= iterations):
-            # cached under a smaller budget or different SFB setting: don't
-            # let it shadow the request — re-search, seeded from it
-            kind = "stale_hit"
-        if kind == "hit":
-            self._stats["hits"] += 1
+            with tracer.span("store_lookup", cat="planner"):
+                if prior_strategy is not None:
+                    kind, rec = "forced", None
+                elif self.warm_start:
+                    kind, rec = find_prior(self.store, graph_fp, topo_fp,
+                                           struct_fp,
+                                           graph_features=graph_feat)
+                else:
+                    rec = self.store.get(graph_fp, topo_fp)
+                    kind = "hit" if rec is not None else "miss"
+            if kind == "hit" and not (
+                    rec.meta.get("enable_sfb", True) == enable_sfb
+                    and rec.meta.get("iterations", 0) >= iterations):
+                # cached under a smaller budget or different SFB setting:
+                # don't let it shadow the request — re-search, seeded
+                # from it
+                kind = "stale_hit"
+            if kind == "hit":
+                self._stats["hits"] += 1
+                self._finish_metrics("hit", t_plan, playouts=0)
+                return PlanResponse(
+                    strategy=rec.strategy_obj(), sfb_plans=rec.sfb_objs(),
+                    time=rec.time, baseline_time=rec.baseline_time,
+                    source="hit", iterations_run=0,
+                    graph_fp=graph_fp, topo_fp=topo_fp,
+                    best_reward=float(rec.meta.get("best_reward", 0.0)))
+
+            prior = None
+            if kind == "forced":
+                prior = prior_strategy
+                self._stats["warm"] += 1
+            elif kind in ("warm_topo", "warm_graph", "warm_struct",
+                          "stale_hit"):
+                prior = adapt_strategy(rec.strategy_obj(), gg.n, topo)
+                self._stats["warm"] += 1
+            else:
+                self._stats["cold"] += 1
+
+            with tracer.span("policy_resolve", cat="planner"):
+                policy_name, policy = self._resolve_policy(graph_fp,
+                                                           graph_feat)
+            with tracer.span("search", cat="planner",
+                             iterations=iterations):
+                res = tag_mod.optimize(
+                    None, None, None, topo, gg=gg, policy=policy,
+                    iterations=iterations, seed=seed,
+                    enable_sfb=enable_sfb,
+                    prior_strategy=prior, prior_weight=self.prior_weight,
+                    stop_reward=stop_reward,
+                    observed_feedback=observed_feedback)
+            self._stats["iterations"] += res.search.iterations_run
+            with tracer.span("store_put", cat="planner"):
+                self.store.put(PlanRecord(
+                    graph_fp=graph_fp, topo_fp=topo_fp,
+                    topo_struct_fp=struct_fp,
+                    n_groups=gg.n, topo_m=topo.m,
+                    strategy=res.strategy.to_dict(),
+                    sfb_plans={str(g): p.to_dict()
+                               for g, p in res.sfb_plans.items()},
+                    time=res.time, baseline_time=res.baseline_time,
+                    graph_features=graph_feat,
+                    meta={"iterations": iterations, "seed": seed,
+                          "enable_sfb": enable_sfb,
+                          "iterations_run": res.search.iterations_run,
+                          "best_reward": res.search.best_reward,
+                          "policy": policy_name,
+                          "source": "warm" if prior is not None
+                          else "cold"}))
+            source = "warm" if prior is not None else "cold"
+            self._finish_metrics(
+                source, t_plan, playouts=res.search.iterations_run,
+                to_best=res.search.iters_to_beat_baseline)
             return PlanResponse(
-                strategy=rec.strategy_obj(), sfb_plans=rec.sfb_objs(),
-                time=rec.time, baseline_time=rec.baseline_time,
-                source="hit", iterations_run=0,
+                strategy=res.strategy, sfb_plans=res.sfb_plans,
+                time=res.time, baseline_time=res.baseline_time,
+                source=source,
+                iterations_run=res.search.iterations_run,
                 graph_fp=graph_fp, topo_fp=topo_fp,
-                best_reward=float(rec.meta.get("best_reward", 0.0)))
+                best_reward=res.search.best_reward,
+                policy=policy_name)
 
-        prior = None
-        if kind == "forced":
-            prior = prior_strategy
-            self._stats["warm"] += 1
-        elif kind in ("warm_topo", "warm_graph", "warm_struct",
-                      "stale_hit"):
-            prior = adapt_strategy(rec.strategy_obj(), gg.n, topo)
-            self._stats["warm"] += 1
-        else:
-            self._stats["cold"] += 1
-
-        policy_name, policy = self._resolve_policy(graph_fp, graph_feat)
-        res = tag_mod.optimize(
-            None, None, None, topo, gg=gg, policy=policy,
-            iterations=iterations, seed=seed, enable_sfb=enable_sfb,
-            prior_strategy=prior, prior_weight=self.prior_weight,
-            stop_reward=stop_reward, observed_feedback=observed_feedback)
-        self._stats["iterations"] += res.search.iterations_run
-        self.store.put(PlanRecord(
-            graph_fp=graph_fp, topo_fp=topo_fp, topo_struct_fp=struct_fp,
-            n_groups=gg.n, topo_m=topo.m,
-            strategy=res.strategy.to_dict(),
-            sfb_plans={str(g): p.to_dict()
-                       for g, p in res.sfb_plans.items()},
-            time=res.time, baseline_time=res.baseline_time,
-            graph_features=graph_feat,
-            meta={"iterations": iterations, "seed": seed,
-                  "enable_sfb": enable_sfb,
-                  "iterations_run": res.search.iterations_run,
-                  "best_reward": res.search.best_reward,
-                  "policy": policy_name,
-                  "source": "warm" if prior is not None else "cold"}))
-        return PlanResponse(
-            strategy=res.strategy, sfb_plans=res.sfb_plans,
-            time=res.time, baseline_time=res.baseline_time,
-            source="warm" if prior is not None else "cold",
-            iterations_run=res.search.iterations_run,
-            graph_fp=graph_fp, topo_fp=topo_fp,
-            best_reward=res.search.best_reward,
-            policy=policy_name)
+    def _finish_metrics(self, source: str, t_start: float, *,
+                        playouts: int, to_best: int | None = None):
+        self._m_requests.inc(source=source)
+        self._m_latency.observe(time.perf_counter() - t_start,
+                                source=source)
+        self._m_playouts.observe(playouts, source=source)
+        if to_best is not None and to_best >= 0:
+            self._m_playouts_to_best.observe(to_best)
+        self._m_store.set(len(self.store))
 
     def _resolve_policy(self, graph_fp: str, graph_feat):
         """Trained priors for a search: an explicit ``policy=`` callable
@@ -251,16 +309,23 @@ class PlannerService:
         drift threshold this only logs telemetry; past it, the cached plan
         is invalidated and re-searched warm under a recalibrated cost
         model. Returns a ``repro.runtime.feedback.FeedbackResult``."""
-        res = self.feedback_loop().observe(
-            gg, topo, observation, iterations=iterations, seed=seed,
-            enable_sfb=enable_sfb)
+        with get_tracer().span("observe", cat="planner"):
+            res = self.feedback_loop().observe(
+                gg, topo, observation, iterations=iterations, seed=seed,
+                enable_sfb=enable_sfb)
         self._stats["observations"] += 1
         if res.kind == "replanned":
             self._stats["replans"] += 1
+        self._m_observe.inc(outcome=res.kind)
+        if res.report is not None:
+            self._m_drift.set(res.report.drift,
+                              graph=res.report.graph_fp[:8],
+                              topo=res.report.topo_fp[:8])
         return res
 
     def stats(self) -> dict:
         s = dict(self._stats)
         s["store_size"] = len(self.store)
         s["hit_rate"] = s["hits"] / s["requests"] if s["requests"] else 0.0
+        s["metrics"] = self.metrics.to_dict()
         return s

@@ -226,7 +226,8 @@ def test_store_concurrent_writers_share_disk_tier(tmp_path):
 def test_store_rejects_stale_schema(tmp_path):
     store = PlanStore(path=str(tmp_path))
     store.put(_dummy_record())
-    fn = os.listdir(tmp_path)[0]
+    # pick the record, not e.g. the store's .lock file
+    fn = next(f for f in os.listdir(tmp_path) if f.endswith(".json"))
     d = json.load(open(tmp_path / fn))
     d["version"] = SCHEMA_VERSION + 1
     json.dump(d, open(tmp_path / fn, "w"))
