@@ -57,6 +57,12 @@ METRICS = {
         # wall-clock latencies themselves are runner-dependent; the gate
         # is the boolean "<5% observability tax" acceptance criterion
         ("overhead_under_5pct", "true", 0.0),
+        # live-observability smoke (benchmarks.serve_smoke merges these
+        # into the same document): endpoints served + parsed, spool
+        # round-trip lossless, per-event emission tax bounded
+        ("serve.ok", "true", 0.0),
+        ("collector.roundtrip_ok", "true", 0.0),
+        ("collector.emit_under_50us_per_event", "true", 0.0),
     ],
     "BENCH_policy.json": [
         ("tiny_win_count", "higher", 0.0),

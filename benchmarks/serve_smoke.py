@@ -1,0 +1,223 @@
+"""CI smoke for the live observability plane (obs.server/obs.collector).
+
+Two sections, merged into ``results/BENCH_overhead.json`` (run AFTER
+``fig8_overhead --overhead``, which writes that file) and gated by
+``check_regression.py``:
+
+  * ``serve``     — launches the real ``repro-plan serve-metrics``
+    subprocess on an ephemeral port, scrapes ``/metrics`` (validated
+    through ``parse_prometheus_text`` — HELP/TYPE lines, label escaping,
+    histogram series), ``/healthz``, ``/plans`` and the merged
+    ``/traces/<run_id>`` (schema-validated Chrome trace), then tears it
+    down with SIGINT and requires a clean exit;
+  * ``collector`` — replays a pipelined step with and without spool
+    emission (interleaved repeats, min-compared) to measure the
+    collector tax, and round-trips the spooled shards through the
+    incremental merge, asserting the span count and trace schema.
+
+Gated metrics are booleans (serve.ok, collector.roundtrip_ok,
+collector.emit_under_50us_per_event) — raw wall-clock numbers are
+recorded for the artifact but runner-dependent, so not gated. The
+emission tax is gated per event, not relative to the replay base: the
+simulated replay costs ~µs/step, so any fixed I/O cost looks huge as a
+percentage while being negligible against a real training step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+import urllib.request
+
+from benchmarks.common import fmt_row
+from repro.core.device import testbed
+from repro.core.graph import CompGraph, OpNode, group_graph
+from repro.core.strategy import Action, Option, Strategy
+from repro.exec.replay import execute_pipeline
+from repro.exec.stages import build_stage_plan
+from repro.obs.collector import SpoolWriter, TraceCollector
+from repro.obs.metrics import parse_prometheus_text
+from repro.obs.trace import validate_chrome_trace
+
+RESULTS = os.path.join("results", "BENCH_overhead.json")
+
+
+def _get(url: str, timeout: float = 30.0) -> bytes:
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.read()
+
+
+# ------------------------------------------------------------------ serve
+
+def run_serve_smoke() -> dict:
+    """Start the real serve-metrics CLI, scrape every endpoint, SIGINT."""
+    tmp = tempfile.mkdtemp(prefix="serve_smoke_")
+    spool_dir = os.path.join(tmp, "spool")
+    # pre-spool a shard so /traces/<run_id> has something to merge
+    w = SpoolWriter(spool_dir, run_id="smoke", name="seed")
+    t0 = time.perf_counter()
+    w.emit_track(0, "seed track")
+    w.emit_span("warmup", t0, t0 + 0.01, tid=0, cat="smoke")
+
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.service.cli", "serve-metrics",
+         "--port", "0", "--cache-dir", os.path.join(tmp, "plans"),
+         "--telemetry-dir", os.path.join(tmp, "telemetry"),
+         "--spool-dir", spool_dir, "--run-id", "smoke",
+         "--no-recalibrate"],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+    out = {"ok": False}
+    try:
+        # startup banner is a pretty-printed JSON object on stdout
+        buf, deadline = "", time.time() + 120
+        banner = None
+        while time.time() < deadline:
+            line = proc.stdout.readline()
+            if not line and proc.poll() is not None:
+                raise RuntimeError(
+                    f"server exited early: {proc.stderr.read()[-2000:]}")
+            buf += line
+            try:
+                banner = json.loads(buf)
+                break
+            except ValueError:
+                continue
+        assert banner is not None, "no startup banner within 120s"
+        url = banner["url"]
+
+        text = _get(url + "/metrics").decode()
+        families = parse_prometheus_text(text)
+        assert "planner_requests_total" in families, sorted(families)
+        assert "tracer_dropped_spans_total" in families
+        assert "collector_spool_shards" in families
+
+        health = json.loads(_get(url + "/healthz"))
+        assert health["status"] == "ok", health
+        assert health["collector"]["shards"] >= 1, health
+
+        plans = json.loads(_get(url + "/plans"))
+        assert "store_size" in plans, plans
+
+        trace = json.loads(_get(url + "/traces/smoke"))
+        validate_chrome_trace(trace)
+        n_spans = sum(1 for e in trace["traceEvents"] if e["ph"] == "X")
+        assert n_spans >= 1, trace
+
+        proc.send_signal(signal.SIGINT)        # clean-teardown path
+        rc = proc.wait(timeout=30)
+        out.update(ok=(rc == 0), exit_code=rc, url=url,
+                   metric_families=len(families),
+                   served_trace_spans=n_spans)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=10)
+    return out
+
+
+# -------------------------------------------------------------- collector
+
+def _chain_plan():
+    g = CompGraph(name="chain")
+    n_ops, n_groups = 12, 6
+    for i in range(n_ops):
+        g.add_node(OpNode(i, f"op{i}", "dot_general",
+                          flops=1e9 * (1 + i % 3), bytes_out=1e6,
+                          param_bytes=4e5, grad_bytes=4e5,
+                          is_grad_producer=True))
+        if i:
+            g.add_edge(i - 1, i, 1e6)
+    gg = group_graph(g, {i: i * n_groups // n_ops for i in range(n_ops)})
+    strat = Strategy([Action((0, 1, 5), Option.PIPE) if i % 2 == 0
+                      else Action((0, 1, 5), Option.PS)
+                      for i in range(gg.n)])
+    plan = build_stage_plan(gg, strat, testbed(), n_micro=8)
+    assert plan is not None and plan.n_stages >= 2
+    return plan
+
+
+def run_collector_overhead(repeats: int = 7, steps: int = 5) -> dict:
+    """Replay-executor tax of spool emission + merge round-trip."""
+    plan = _chain_plan()
+    topo = testbed()
+    tmp = tempfile.mkdtemp(prefix="collector_bench_")
+
+    def replay(spool, base_step):
+        t0 = time.perf_counter()
+        for k in range(steps):
+            execute_pipeline(plan, topo, schedule="1f1b", seed=k,
+                             step=base_step + k, spool=spool)
+        return time.perf_counter() - t0
+
+    writer = SpoolWriter(tmp, run_id="bench", name="replay")
+    replay(None, 0)                            # warm caches off the clock
+    times = {"off": [], "on": []}
+    for r in range(repeats):
+        times["off"].append(replay(None, 0))
+        times["on"].append(replay(writer, (r + 1) * steps))
+    base, instrumented = min(times["off"]), min(times["on"])
+
+    n_events = sum(1 for _ in execute_pipeline(plan, topo, schedule="1f1b",
+                                               seed=0)[1].events)
+    emit_us = (instrumented - base) / (steps * n_events) * 1e6
+    expected = repeats * steps * n_events      # only "on" rounds spooled
+    collector = TraceCollector(tmp)
+    t0 = time.perf_counter()
+    collector.poll()
+    doc = collector.chrome("bench")
+    merge_s = time.perf_counter() - t0
+    validate_chrome_trace(doc)
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    ts = [e["ts"] for e in spans]
+    roundtrip_ok = (len(spans) == expected and ts == sorted(ts))
+    return {
+        "repeats": repeats, "steps_per_repeat": steps,
+        "events_per_step": n_events,
+        "spooled_spans": len(spans), "expected_spans": expected,
+        "replay_base_s": base, "replay_spooled_s": instrumented,
+        "emit_us_per_event": emit_us,
+        "emit_under_50us_per_event": bool(emit_us < 50.0),
+        "merge_s": merge_s,
+        "merge_us_per_span": merge_s / max(len(spans), 1) * 1e6,
+        "roundtrip_ok": bool(roundtrip_ok),
+    }
+
+
+def main() -> dict:
+    serve = run_serve_smoke()
+    collector = run_collector_overhead()
+
+    # merge into the overhead results fig8 --overhead wrote earlier — this
+    # benchmark runs after it in CI, so read-modify-write, never clobber
+    doc = {}
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            doc = json.load(f)
+    doc["serve"] = serve
+    doc["collector"] = collector
+    os.makedirs("results", exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+
+    print("serve_smoke,section,metric,value")
+    print(fmt_row("serve_smoke", "serve_ok", serve["ok"]))
+    print(fmt_row("serve_smoke", "metric_families",
+                  serve.get("metric_families")))
+    print(fmt_row("serve_smoke", "emit_us_per_event",
+                  f"{collector['emit_us_per_event']:.2f}"))
+    print(fmt_row("serve_smoke", "merge_us_per_span",
+                  f"{collector['merge_us_per_span']:.1f}"))
+    print(fmt_row("serve_smoke", "roundtrip_ok",
+                  collector["roundtrip_ok"]))
+    assert serve["ok"], serve
+    assert collector["roundtrip_ok"], collector
+    assert collector["emit_under_50us_per_event"], collector
+    return doc
+
+
+if __name__ == "__main__":
+    main()

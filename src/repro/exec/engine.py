@@ -119,7 +119,7 @@ class PipelineRunner:
                  schedule: str = "1f1b", n_micro: int | None = None,
                  n_chunks: int = 1, mb_keys=None, tied_ref=None,
                  store=None, graph_fp: str = "", topo_fp: str = "",
-                 meta: dict | None = None):
+                 meta: dict | None = None, spool=None):
         self.fns = list(stage_fns)
         self.plan = plan
         self.S = len(device_sets)
@@ -139,6 +139,11 @@ class PipelineRunner:
         self.mb_keys = mb_keys
         self.tied_ref = tied_ref
         self.store = store
+        # live-observability spool (obs.collector.SpoolWriter): recorded
+        # step events stream into this process's shard for the
+        # cross-process trace collector
+        self.spool = spool
+        self._spool_tracks_done = False
         self.graph_fp, self.topo_fp = graph_fp, topo_fp
         self.meta = dict(meta or {})
         self.syncs = [plan.stages[s].sync if s < len(plan.stages)
@@ -305,6 +310,7 @@ class PipelineRunner:
         already folded back into the stage-0 embedding).
         """
         t_start = time.perf_counter()
+        record = record or self.spool is not None   # spooling needs events
         mbs = split_microbatches(batch, self.n_micro)
         S, U, M = self.S, self.U, self.n_micro
 
@@ -417,6 +423,8 @@ class PipelineRunner:
         #                                 export (obs.trace)
         if self.store is not None:
             self._record_telemetry(stats)
+        if self.spool is not None:
+            self._spool_events(stats, t_start)
         return grads, stats
 
     # -------------------------------------------------------- telemetry
@@ -452,3 +460,26 @@ class PipelineRunner:
                       loss=stats.loss, peak_stash=stats.peak_stash,
                       events=ev_meta))
         self.store.append(rec)
+
+    def _spool_events(self, stats: StepStats, t_start: float):
+        """Stream this step's events to the cross-process spool — one
+        batched append (single lock/write) per step; event times are
+        re-based from step-relative to this process's monotonic clock so
+        the collector's anchor alignment applies unchanged."""
+        from repro.obs.trace import KIND_LABEL, event_name
+        recs = []
+        if not self._spool_tracks_done:
+            self._spool_tracks_done = True
+            recs += [{"type": "track", "tid": s, "name": f"stage {s}"}
+                     for s in range(self.S)]
+        for e in stats.events:
+            kind, s, m, dur, chunk = e[:5]
+            start = float(e[5]) if len(e) > 5 else 0.0
+            recs.append({
+                "type": "span", "name": event_name(kind, s, m, chunk),
+                "cat": "pipeline", "tid": int(s),
+                "t0": t_start + start, "t1": t_start + start + float(dur),
+                "args": {"kind": KIND_LABEL.get(kind, kind), "stage": s,
+                         "mb": m, "chunk": chunk,
+                         "schedule": self.schedule}})
+        self.spool.emit_many(recs)

@@ -38,11 +38,16 @@ def execute_pipeline(plan: StagePlan, true_topo: Topology, *,
                      graph_fp: str = "", topo_fp: str = "",
                      step: int = 0, noise: float = 0.0, seed: int = 0,
                      store: MeasurementStore | None = None,
-                     meta: dict | None = None) -> tuple:
+                     meta: dict | None = None, spool=None) -> tuple:
     """Execute one pipelined step on ``true_topo``; returns
     ``(StepRecord, Timeline)``. ``noise`` adds multiplicative jitter
     (relative std-dev) per recorded sample. ``n_chunks`` only applies to
-    the interleaved schedule (virtual chunks per stage)."""
+    the interleaved schedule (virtual chunks per stage).
+
+    ``spool`` (an ``obs.collector.SpoolWriter``) streams the executed
+    events into the cross-process trace spool: simulated seconds are
+    re-based onto this process's monotonic clock at emission time, so
+    the merged trace shows the replay where it actually ran."""
     nominal = nominal_topo or true_topo
     rng = np.random.default_rng(seed)
 
@@ -97,4 +102,34 @@ def execute_pipeline(plan: StagePlan, true_topo: Topology, *,
                   true_topo=true_topo.name, events=stage_events))
     if store is not None:
         store.append(rec)
+    if spool is not None:
+        _spool_replay(spool, stage_events, plan.n_stages, schedule, step)
     return rec, tl
+
+
+def _spool_replay(spool, stage_events: list, n_stages: int,
+                  schedule: str, step: int):
+    import time
+
+    from repro.obs.trace import KIND_LABEL, event_name
+
+    t0 = time.perf_counter()
+    recs = [{"type": "track", "tid": s, "name": f"stage {s}"}
+            for s in range(n_stages)]
+    recs += [{"type": "track", "tid": n_stages + s,
+              "name": f"stage {s} transfers in"}
+             for s in sorted({e["stage"] for e in stage_events
+                              if e["kind"] == "X"})]
+    for e in stage_events:
+        tid = e["stage"] if e["kind"] != "X" else n_stages + e["stage"]
+        recs.append({
+            "type": "span",
+            "name": event_name(e["kind"], e["stage"], e["mb"], e["chunk"],
+                               e["src"]),
+            "cat": "pipeline", "tid": tid,
+            "t0": t0 + e["start"], "t1": t0 + e["finish"],
+            "args": {"kind": KIND_LABEL.get(e["kind"], e["kind"]),
+                     "stage": e["stage"], "mb": e["mb"],
+                     "chunk": e["chunk"], "schedule": schedule,
+                     "step": step}})
+    spool.emit_many(recs)

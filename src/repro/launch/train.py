@@ -84,6 +84,31 @@ def _export_spans(args):
           flush=True)
 
 
+def _make_spool(args):
+    """``--spool-dir``: a ``SpoolWriter`` shard for this training
+    process, feeding the cross-process trace collector (``repro-plan
+    serve-metrics --spool-dir`` on the other end). None when unset —
+    tests drive these entry points with hand-built Namespaces."""
+    spool_dir = getattr(args, "spool_dir", "")
+    if not spool_dir:
+        return None
+    from repro.obs.collector import SpoolWriter
+    run_id = getattr(args, "run_id", "") or f"train-{args.arch}"
+    return SpoolWriter(spool_dir, run_id=run_id, name="train",
+                       meta={"arch": args.arch})
+
+
+def _drain_tracer_to_spool(spool):
+    """Ship this process's recorded planner/search spans (if any) into
+    its spool shard alongside the step/stage events."""
+    if spool is None:
+        return
+    from repro.obs.spans import get_tracer
+    tracer = get_tracer()
+    if tracer.spans():
+        spool.emit_tracer(tracer)
+
+
 def run_pipeline(args, cfg, stage_plan):
     """Train via the pipeline execution engine (repro.exec)."""
     from repro.exec import PipelineRunner, split_model
@@ -119,9 +144,11 @@ def run_pipeline(args, cfg, stage_plan):
     if args.telemetry_dir:
         from repro.runtime.telemetry import MeasurementStore
         store = MeasurementStore(args.telemetry_dir)
+    spool = _make_spool(args)
     runner = PipelineRunner(
         fns, stage_plan, device_sets, schedule=schedule, n_micro=n_micro,
         n_chunks=n_chunks, mb_keys=mb_keys, tied_ref=tied, store=store,
+        spool=spool,
         meta={"arch": args.arch, "batch": args.batch, "seq": args.seq,
               "launcher": "train"})
 
@@ -204,6 +231,7 @@ def run_pipeline(args, cfg, stage_plan):
                          n_stages=stage_plan.n_stages))
         print(f"trace: wrote {path} "
               f"({len(runner.last_stats.events)} events)", flush=True)
+    _drain_tracer_to_spool(spool)
     return losses
 
 
@@ -245,6 +273,16 @@ def main(argv=None):
                     help="export Chrome traces here: the executed "
                          "pipeline timeline of the last step plus the "
                          "planner/search span timeline")
+    ap.add_argument("--spool-dir", default="",
+                    help="append this process's step/stage events and "
+                         "spans to a shard in this live-observability "
+                         "spool directory (merged across processes by "
+                         "the trace collector / served by repro-plan "
+                         "serve-metrics)")
+    ap.add_argument("--run-id", default="",
+                    help="run id grouping this job's spool shard with "
+                         "other processes' shards in /traces/<run_id> "
+                         "(default: train-<arch>)")
     ap.add_argument("--xla-profile", action="store_true",
                     help="wrap one post-warmup step in a jax.profiler "
                          "trace and record per-collective samples into "
@@ -323,9 +361,11 @@ def main(argv=None):
     if args.xla_profile:
         profile_at = min(start_step + 1, args.steps - 1)
 
+    spool = _make_spool(args)
     losses = []
     t_start = time.time()
     for step in range(start_step, args.steps):
+        t_step = time.perf_counter()
         batch = jax.tree.map(jnp.asarray, ds.batch(step))
         if step == profile_at:
             from repro.obs.xla_profiler import profile_step
@@ -346,6 +386,10 @@ def main(argv=None):
             params, opt_state, metrics = step_fn(
                 params, opt_state, jnp.asarray(step, jnp.int32), batch)
         loss = float(metrics["loss"])
+        if spool is not None:
+            spool.emit_span(f"step {step}", t_step, time.perf_counter(),
+                            tid=0, cat="train",
+                            args={"step": step, "loss": loss})
         losses.append(loss)
         if step % args.log_every == 0:
             print(f"step {step:5d} loss={loss:.4f} "
@@ -362,6 +406,7 @@ def main(argv=None):
     if timer is not None:
         print(f"telemetry[{args.telemetry_dir}]: "
               f"{json.dumps(timer.summary())}", flush=True)
+    _drain_tracer_to_spool(spool)
     _export_spans(args)
     return losses
 

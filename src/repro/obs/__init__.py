@@ -17,24 +17,41 @@ TAG pipeline.
                        ``StepRecord.collectives`` (graceful no-op when
                        the profiler is unavailable).
 
+The live plane (PR 7) crosses process boundaries:
+
+  * ``collector``    — cross-process span/event spool (fcntl-locked
+                       JSONL shards with wall<->monotonic anchors) and
+                       the incremental merge into one Chrome trace;
+  * ``server``       — stdlib HTTP daemon serving /metrics (Prometheus
+                       text), /healthz, /traces/<run_id>, /plans.
+
 Every surface is consumed by ``repro-plan trace`` / ``repro-plan
-metrics`` and ``launch.train --trace-dir``.
+metrics`` / ``repro-plan serve-metrics`` and ``launch.train
+--trace-dir`` / ``--spool-dir``.
 """
+from repro.obs.collector import SpoolWriter, TraceCollector, shard_path
 from repro.obs.metrics import (
-    Counter, Gauge, Histogram, Metric, MetricsRegistry)
-from repro.obs.spans import Span, Tracer, get_tracer, set_tracer, span
+    Counter, Gauge, Histogram, Metric, MetricsRegistry,
+    escape_label_value, parse_prometheus_text)
+from repro.obs.server import PROM_CONTENT_TYPE, ObsServer
+from repro.obs.spans import (
+    Span, Tracer, export_tracer_metrics, get_tracer, set_tracer, span)
 from repro.obs.trace import (
-    chrome_trace, diff_report, executed_events_of, executed_trace_events,
-    format_diff, timeline_trace_events, validate_chrome_trace,
-    write_chrome_trace)
+    chrome_trace, diff_report, event_name, executed_events_of,
+    executed_trace_events, format_diff, timeline_trace_events,
+    validate_chrome_trace, write_chrome_trace)
 from repro.obs.xla_profiler import (
     attach_collectives, classify_op, find_trace_files,
     parse_trace_collectives, profile_step, profiler_available)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "Metric", "MetricsRegistry",
-    "Span", "Tracer", "get_tracer", "set_tracer", "span",
-    "chrome_trace", "diff_report", "executed_events_of",
+    "escape_label_value", "parse_prometheus_text",
+    "Span", "Tracer", "export_tracer_metrics", "get_tracer",
+    "set_tracer", "span",
+    "SpoolWriter", "TraceCollector", "shard_path",
+    "ObsServer", "PROM_CONTENT_TYPE",
+    "chrome_trace", "diff_report", "event_name", "executed_events_of",
     "executed_trace_events", "format_diff", "timeline_trace_events",
     "validate_chrome_trace", "write_chrome_trace",
     "attach_collectives", "classify_op", "find_trace_files",

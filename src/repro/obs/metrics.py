@@ -19,6 +19,7 @@ route unchanged.
 """
 from __future__ import annotations
 
+import re
 import threading
 
 # default histogram buckets: exponential, centered on plan/step latencies
@@ -30,10 +31,17 @@ def _labelkey(labels: dict) -> tuple:
     return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
 
 
+def escape_label_value(v: str) -> str:
+    """Prometheus text-exposition escaping for label values: backslash,
+    double-quote, and newline must be escaped inside the quotes."""
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def _labelstr(key: tuple) -> str:
     if not key:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in key)
+    inner = ",".join(f'{k}="{escape_label_value(v)}"' for k, v in key)
     return "{" + inner + "}"
 
 
@@ -220,7 +228,157 @@ class MetricsRegistry:
         lines = []
         for m in self.metrics():
             if m.help:
-                lines.append(f"# HELP {m.name} {m.help}")
+                esc = m.help.replace("\\", "\\\\").replace("\n", "\\n")
+                lines.append(f"# HELP {m.name} {esc}")
             lines.append(f"# TYPE {m.name} {m.kind}")
             lines.extend(m.to_prometheus())
         return "\n".join(lines) + ("\n" if lines else "")
+
+
+# --------------------------------------------------------------------------
+# text exposition parser — the validating half of the format contract.
+# The CI smoke step and `repro-plan metrics --url` run every scrape through
+# this, so a registry that emits malformed HELP/TYPE lines, label escaping,
+# or histogram series fails loudly instead of at Prometheus ingest time.
+
+_METRIC_NAME = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_NAME = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+_TYPES = ("counter", "gauge", "histogram", "summary", "untyped")
+
+
+def _parse_labels(s: str, lineno: int) -> dict:
+    """Parse ``{k="v",...}`` with escape handling; raises ValueError."""
+    labels: dict = {}
+    i = 1                                  # past '{'
+    while True:
+        if i >= len(s):
+            raise ValueError(f"line {lineno}: unterminated label set")
+        if s[i] == "}":
+            return labels
+        j = s.find("=", i)
+        if j < 0:
+            raise ValueError(f"line {lineno}: label without '='")
+        name = s[i:j].strip()
+        if not _LABEL_NAME.match(name):
+            raise ValueError(f"line {lineno}: bad label name {name!r}")
+        i = j + 1
+        if i >= len(s) or s[i] != '"':
+            raise ValueError(f"line {lineno}: label value not quoted")
+        i += 1
+        out = []
+        while i < len(s) and s[i] != '"':
+            c = s[i]
+            if c == "\\":
+                if i + 1 >= len(s):
+                    raise ValueError(f"line {lineno}: dangling escape")
+                nxt = s[i + 1]
+                if nxt == "n":
+                    out.append("\n")
+                elif nxt in ('"', "\\"):
+                    out.append(nxt)
+                else:
+                    raise ValueError(
+                        f"line {lineno}: bad escape \\{nxt!r}")
+                i += 2
+            elif c == "\n":
+                raise ValueError(f"line {lineno}: raw newline in value")
+            else:
+                out.append(c)
+                i += 1
+        if i >= len(s):
+            raise ValueError(f"line {lineno}: unterminated label value")
+        labels[name] = "".join(out)
+        i += 1                             # past closing '"'
+        if i < len(s) and s[i] == ",":
+            i += 1
+
+
+def parse_prometheus_text(text: str) -> dict:
+    """Strict parser for the Prometheus text exposition format.
+
+    Returns ``{family: {"kind", "help", "samples": [(name, labels,
+    value), ...]}}`` — histogram ``_bucket``/``_sum``/``_count`` series
+    fold into their declared base family. Raises ``ValueError`` on any
+    format violation: bad metric/label names, broken quoting/escaping,
+    unparseable values, duplicate or unknown TYPE declarations, or a
+    histogram family missing its ``le``-labelled buckets.
+    """
+    families: dict = {}
+
+    def fam(name: str) -> dict:
+        return families.setdefault(
+            name, {"kind": None, "help": None, "samples": []})
+
+    def base_family(name: str) -> str:
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix):
+                base = name[:-len(suffix)]
+                if families.get(base, {}).get("kind") in ("histogram",
+                                                          "summary"):
+                    return base
+        return name
+
+    for lineno, raw in enumerate(text.split("\n"), 1):
+        line = raw.rstrip("\r")
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            parts = line[len("# HELP "):].split(" ", 1)
+            name = parts[0]
+            if not _METRIC_NAME.match(name):
+                raise ValueError(f"line {lineno}: bad HELP name {name!r}")
+            fam(name)["help"] = (parts[1] if len(parts) > 1 else "")
+        elif line.startswith("# TYPE "):
+            parts = line[len("# TYPE "):].split()
+            if len(parts) != 2:
+                raise ValueError(f"line {lineno}: malformed TYPE line")
+            name, kind = parts
+            if not _METRIC_NAME.match(name):
+                raise ValueError(f"line {lineno}: bad TYPE name {name!r}")
+            if kind not in _TYPES:
+                raise ValueError(f"line {lineno}: unknown type {kind!r}")
+            f = fam(name)
+            if f["kind"] is not None:
+                raise ValueError(f"line {lineno}: duplicate TYPE {name}")
+            f["kind"] = kind
+        elif line.startswith("#"):
+            continue                       # free-form comment
+        else:
+            brace = line.find("{")
+            if brace >= 0:
+                name = line[:brace]
+                close = line.rfind("}")
+                if close < brace:
+                    raise ValueError(f"line {lineno}: unbalanced braces")
+                labels = _parse_labels(line[brace:close + 1], lineno)
+                rest = line[close + 1:].strip()
+            else:
+                name, _, rest = line.partition(" ")
+                labels, rest = {}, rest.strip()
+            if not _METRIC_NAME.match(name):
+                raise ValueError(f"line {lineno}: bad metric name {name!r}")
+            fields = rest.split()
+            if not fields:
+                raise ValueError(f"line {lineno}: sample missing value")
+            tok = fields[0]
+            try:
+                value = float("inf" if tok == "+Inf" else
+                              "-inf" if tok == "-Inf" else tok)
+            except ValueError:
+                raise ValueError(
+                    f"line {lineno}: bad sample value {tok!r}") from None
+            fam(base_family(name))["samples"].append((name, labels, value))
+
+    for name, f in families.items():
+        if f["kind"] is None:
+            f["kind"] = "untyped"
+        if f["kind"] == "histogram" and f["samples"]:
+            series = {s for s, _, _ in f["samples"]}
+            if f"{name}_bucket" not in series:
+                raise ValueError(f"histogram {name} has no _bucket series")
+            if f"{name}_count" not in series or f"{name}_sum" not in series:
+                raise ValueError(f"histogram {name} missing _sum/_count")
+            if not all(lbl.get("le") for s, lbl, _ in f["samples"]
+                       if s == f"{name}_bucket"):
+                raise ValueError(f"histogram {name} bucket missing 'le'")
+    return families

@@ -1,0 +1,207 @@
+"""Served observability plane: /metrics, /healthz, /traces, /plans.
+
+A stdlib ``http.server`` daemon that turns the in-process observability
+surfaces into live endpoints — no third-party dependency, safe to embed
+in the planner service or run standalone via ``repro-plan
+serve-metrics``:
+
+  * ``GET /metrics``        — Prometheus text exposition from the live
+                              ``MetricsRegistry`` (planner counters,
+                              calibration gauges, tracer drop counter,
+                              collector spool gauges);
+  * ``GET /healthz``        — liveness JSON (uptime, scrape count,
+                              collector/recalibration state);
+  * ``GET /traces``         — JSON list of spooled run ids;
+  * ``GET /traces/<run_id>``— the merged, clock-aligned Chrome trace
+                              for one run (all runs via ``/traces/all``);
+  * ``GET /plans``          — plan-store stats JSON.
+
+The server binds before ``start()`` returns (port 0 picks a free port,
+so tests never race on a fixed one), handles requests on daemon threads,
+and refreshes per-scrape state inside the request: each ``/metrics``
+scrape re-exports tracer drop counts, drains this process's tracer into
+the spool (when one is attached), polls the collector, and re-reads the
+plan-store size — a scrape always reflects *now*, not server start.
+"""
+from __future__ import annotations
+
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+import json
+import threading
+import time
+from urllib.parse import urlparse
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.spans import export_tracer_metrics, get_tracer
+
+PROM_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+class ObsServer:
+    """HTTP front end over a registry + optional service/collector/loop.
+
+    Every collaborator is optional and duck-typed: ``service`` needs
+    ``.metrics``/``.store``/``.stats()`` (a ``PlannerService``),
+    ``collector`` is a ``TraceCollector``, ``spool`` a ``SpoolWriter``
+    this process drains its own tracer into, ``recalib`` a
+    ``RecalibrationLoop`` whose lifecycle the server adopts on
+    ``start()``/``stop()``.
+    """
+
+    def __init__(self, *, registry: MetricsRegistry | None = None,
+                 service=None, collector=None, spool=None, recalib=None,
+                 host: str = "127.0.0.1", port: int = 0):
+        if registry is None:
+            registry = service.metrics if service is not None \
+                else MetricsRegistry()
+        self.registry = registry
+        self.service = service
+        self.collector = collector
+        self.spool = spool
+        self.recalib = recalib
+        self._t0 = time.time()
+        self._scrapes = registry.counter(
+            "obs_http_requests_total", "requests served by the obs plane")
+        self._httpd = ThreadingHTTPServer((host, port), self._handler())
+        self._httpd.daemon_threads = True
+        self.host, self.port = self._httpd.server_address[:2]
+        self._thread: threading.Thread | None = None
+
+    # ----------------------------------------------------------- lifecycle
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "ObsServer":
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, kwargs={"poll_interval": 0.1},
+            name="obs-server", daemon=True)
+        self._thread.start()
+        if self.recalib is not None:
+            self.recalib.start()
+        return self
+
+    def stop(self):
+        if self.recalib is not None:
+            self.recalib.stop()
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+        return False
+
+    # ------------------------------------------------------------- routes
+    def render_metrics(self) -> str:
+        """The /metrics body; refreshes live state before rendering."""
+        export_tracer_metrics(self.registry)
+        if self.spool is not None:
+            try:
+                self.spool.emit_tracer(get_tracer())
+            except OSError:
+                pass
+        if self.service is not None:
+            self.registry.gauge(
+                "planner_store_size",
+                "plans resident in the store").set(len(self.service.store))
+        if self.collector is not None:
+            self.collector.poll()
+            c = self.collector.counts()
+            g = self.registry.gauge
+            g("collector_spool_shards",
+              "spool shard files seen by the collector").set(c["shards"])
+            g("collector_spool_spans",
+              "span records merged from the spool").set(c["spans"])
+            g("collector_spool_bad_lines",
+              "malformed spool lines skipped").set(c["bad_lines"])
+            g("collector_spool_runs",
+              "distinct run ids in the spool").set(c["runs"])
+        return self.registry.to_prometheus()
+
+    def _healthz(self) -> dict:
+        body = {"status": "ok", "uptime_s": time.time() - self._t0,
+                "requests": self._scrapes.value(path="/metrics")}
+        if self.collector is not None:
+            body["collector"] = self.collector.counts()
+        if self.recalib is not None:
+            body["recalibration"] = self.recalib.stats()
+        if self.service is not None:
+            body["store_size"] = len(self.service.store)
+        return body
+
+    def _route(self, path: str):
+        """Returns (status, content_type, body_str)."""
+        def as_json(obj, status=200):
+            return status, "application/json", json.dumps(
+                obj, indent=2, sort_keys=True, default=str) + "\n"
+
+        if path in ("/metrics", "/metrics/"):
+            self._scrapes.inc(path="/metrics")
+            return 200, PROM_CONTENT_TYPE, self.render_metrics()
+        if path in ("/healthz", "/healthz/", "/health"):
+            self._scrapes.inc(path="/healthz")
+            return as_json(self._healthz())
+        if path in ("/plans", "/plans/"):
+            self._scrapes.inc(path="/plans")
+            if self.service is None:
+                return as_json({"error": "no planner service attached"},
+                               404)
+            return as_json(self.service.stats())
+        if path in ("/traces", "/traces/"):
+            self._scrapes.inc(path="/traces")
+            if self.collector is None:
+                return as_json({"error": "no trace collector attached"},
+                               404)
+            self.collector.poll()
+            return as_json({"runs": self.collector.run_ids()})
+        if path.startswith("/traces/"):
+            self._scrapes.inc(path="/traces/<run_id>")
+            if self.collector is None:
+                return as_json({"error": "no trace collector attached"},
+                               404)
+            run_id = path[len("/traces/"):].strip("/")
+            self.collector.poll()
+            try:
+                doc = self.collector.chrome(
+                    None if run_id in ("all", "*") else run_id)
+            except KeyError as e:
+                return as_json({"error": str(e),
+                                "runs": self.collector.run_ids()}, 404)
+            return as_json(doc)
+        if path in ("", "/"):
+            return as_json({"endpoints": ["/metrics", "/healthz",
+                                          "/plans", "/traces",
+                                          "/traces/<run_id>"]})
+        return as_json({"error": f"no route {path!r}"}, 404)
+
+    # ------------------------------------------------------------ handler
+    def _handler(self):
+        server = self
+
+        class Handler(BaseHTTPRequestHandler):
+            protocol_version = "HTTP/1.1"
+
+            def log_message(self, *args):      # keep stdout clean
+                pass
+
+            def do_GET(self):
+                try:
+                    status, ctype, body = server._route(
+                        urlparse(self.path).path)
+                except Exception as e:         # a broken route must not
+                    status, ctype = 500, "text/plain; charset=utf-8"
+                    body = f"internal error: {e}\n"   # kill the daemon
+                data = body.encode("utf-8")
+                self.send_response(status)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(data)))
+                self.end_headers()
+                self.wfile.write(data)
+
+        return Handler

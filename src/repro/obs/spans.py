@@ -99,6 +99,12 @@ class Tracer:
         self._tids: dict = {}              # thread ident -> dense tid
         self.dropped = 0
 
+    @property
+    def epoch(self) -> float:
+        """``time.perf_counter()`` reading that span-relative times are
+        measured from (lets exporters recover monotonic timestamps)."""
+        return self._epoch
+
     # ------------------------------------------------------------- control
     def enable(self):
         self.enabled = True
@@ -208,3 +214,30 @@ def set_tracer(tracer: Tracer) -> Tracer:
 def span(name: str, cat: str = "planner", **args):
     """``get_tracer().span(...)`` shorthand for instrumented call sites."""
     return _GLOBAL.span(name, cat, **args)
+
+
+def export_tracer_metrics(registry, tracer: Tracer | None = None):
+    """Mirror a tracer's drop/buffer state into a metrics registry.
+
+    ``tracer_dropped_spans_total`` counts spans silently discarded at
+    the ``max_spans`` cap — the one failure mode of the span layer that
+    is otherwise invisible. The counter is advanced by the delta since
+    the last export (a swapped/cleared tracer resets its ``dropped``;
+    the registry counter stays monotonic, as counters must). Also sets
+    ``tracer_buffered_spans`` and ``tracer_enabled`` gauges. Returns the
+    counter.
+    """
+    tr = tracer if tracer is not None else _GLOBAL
+    c = registry.counter(
+        "tracer_dropped_spans_total",
+        "spans dropped at the tracer max_spans cap")
+    delta = tr.dropped - c.value()
+    if delta > 0:
+        c.inc(delta)
+    registry.gauge(
+        "tracer_buffered_spans",
+        "finished spans buffered in the tracer").set(float(len(tr)))
+    registry.gauge(
+        "tracer_enabled",
+        "1 when the span tracer records").set(1.0 if tr.enabled else 0.0)
+    return c

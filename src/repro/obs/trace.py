@@ -38,12 +38,17 @@ def _meta_event(name: str, pid: int, tid: int, value: str) -> dict:
             "args": {"name": value}}
 
 
-def _event_name(kind: str, stage: int, mb: int, chunk: int,
-                src: int = -1) -> str:
+def event_name(kind: str, stage: int, mb: int, chunk: int,
+               src: int = -1) -> str:
+    """Canonical event label: ``F0.1`` / ``B2c1.0`` / ``X0->1.3`` —
+    shared by timeline export, executed traces, and spool producers."""
     c = f"c{chunk}" if chunk else ""
     if kind == "X":
         return f"X{src}->{stage}.{mb}"
     return f"{kind}{stage}{c}.{mb}"
+
+
+_event_name = event_name
 
 
 def timeline_trace_events(tl, *, pid: int = 0,

@@ -21,6 +21,8 @@ is compared against the stale plan re-simulated under the same model, so
 from __future__ import annotations
 
 from dataclasses import dataclass
+import threading
+import time
 
 from repro.core import tag as tag_mod
 from repro.core.device import Topology
@@ -67,11 +69,17 @@ class FeedbackLoop:
 
     def observe(self, gg: GroupedGraph, topo: Topology, observation,
                 *, iterations: int = 20, seed: int = 0,
-                enable_sfb: bool = True) -> FeedbackResult:
+                enable_sfb: bool = True,
+                append: bool = True) -> FeedbackResult:
         """Feed one observed step back into the planner.
 
         ``observation`` is a ``StepRecord`` (preferred — its samples feed
         calibration) or a bare observed step time in seconds.
+
+        ``append=False`` skips writing the record to the measurement
+        store — for callers (the ``RecalibrationLoop`` poller) whose
+        observation was *read from* that same store and must not be
+        duplicated back into it.
         """
         from repro.service.fingerprint import (
             fingerprint_grouped, fingerprint_topology)
@@ -85,7 +93,8 @@ class FeedbackLoop:
         else:
             rec = StepRecord(graph_fp=graph_fp, topo_fp=topo_fp,
                              wall_time=float(observation))
-        self.measurements.append(rec)
+        if append:
+            self.measurements.append(rec)
 
         cached = self.service.store.get(graph_fp, topo_fp)
         if cached is None:
@@ -148,3 +157,150 @@ class FeedbackLoop:
             kind="replanned", report=report, profile=profile,
             response=resp, stale_time=stale_time,
             observed=rec.wall_time)
+
+
+class RecalibrationLoop:
+    """Continuous, unattended plan -> execute -> observe -> replan.
+
+    A background thread polls the service's ``MeasurementStore`` via
+    ``read_new()`` (the incremental, complete-lines-only cursor), so any
+    process appending ``StepRecord``s to the shared telemetry dir —
+    ``launch.train --telemetry-dir``, the replay executor, the real
+    engine — feeds the drift detector with no manual ``observe`` call.
+
+    Records only carry fingerprints; replanning needs the (graph,
+    topology) objects, so workloads are registered with ``watch(gg,
+    topo)``. Records for unwatched fingerprints are counted
+    (``recalib_records_total{outcome="unwatched"}``) and skipped. Every
+    processed record goes through ``service.observe(..., append=False)``
+    — ``append=False`` because the record was *read from* the same store
+    observe would write it back to. After each batch the calibration
+    profile is refit from the watched workload's accumulated telemetry
+    and published as gauges (``profile_metrics``), so /metrics always
+    shows the currently-fitted cluster state.
+    """
+
+    def __init__(self, service, *, interval_s: float = 5.0,
+                 iterations: int = 20, seed: int = 0,
+                 enable_sfb: bool = True, max_batch: int = 256):
+        self.service = service
+        self.interval_s = float(interval_s)
+        self.iterations = int(iterations)
+        self.seed = int(seed)
+        self.enable_sfb = bool(enable_sfb)
+        self.max_batch = int(max_batch)
+        self._watched: dict = {}            # (graph_fp, topo_fp) -> (gg, t)
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()       # one poll at a time
+        reg = service.metrics
+        self._m_polls = reg.counter(
+            "recalib_polls_total", "recalibration store polls")
+        self._m_records = reg.counter(
+            "recalib_records_total",
+            "telemetry records consumed by the recalibration loop, "
+            "by outcome")
+        self._m_last = reg.gauge(
+            "recalib_last_poll_unixtime", "wall time of the latest poll")
+        self._m_running = reg.gauge(
+            "recalib_running", "1 while the recalibration thread runs")
+        self._m_watched = reg.gauge(
+            "recalib_watched_workloads",
+            "(graph, topology) pairs registered for replanning")
+
+    # ------------------------------------------------------------- control
+    def watch(self, gg, topo) -> tuple:
+        """Register a workload; returns its (graph_fp, topo_fp) key."""
+        from repro.service.fingerprint import (
+            fingerprint_grouped, fingerprint_topology)
+        key = (fingerprint_grouped(gg), fingerprint_topology(topo))
+        self._watched[key] = (gg, topo)
+        self._m_watched.set(len(self._watched))
+        return key
+
+    def start(self) -> "RecalibrationLoop":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run,
+                                        name="recalibration", daemon=True)
+        self._thread.start()
+        self._m_running.set(1)
+        return self
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+        self._m_running.set(0)
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def _run(self):
+        while not self._stop.wait(self.interval_s):
+            try:
+                self.poll_once()
+            except Exception:               # a bad poll must not kill the
+                self._m_records.inc(outcome="error")      # daemon thread
+        self._m_running.set(0)
+
+    # ------------------------------------------------------------ polling
+    def poll_once(self) -> list:
+        """Drain newly appended records once; returns the
+        ``FeedbackResult``s of processed (watched) records."""
+        with self._lock:
+            store = self.service.measurements
+            recs = store.read_new()
+            self._m_polls.inc()
+            self._m_last.set(time.time())
+            results = []
+            touched: set = set()
+            if len(recs) > self.max_batch:   # never replay an unbounded
+                self._m_records.inc(len(recs) - self.max_batch,
+                                    outcome="dropped")    # backlog silently
+            for rec in recs[-self.max_batch:]:
+                pair = self._watched.get((rec.graph_fp, rec.topo_fp))
+                if pair is None:
+                    self._m_records.inc(outcome="unwatched")
+                    continue
+                gg, topo = pair
+                try:
+                    res = self.service.observe(
+                        gg, topo, rec, iterations=self.iterations,
+                        seed=self.seed, enable_sfb=self.enable_sfb,
+                        append=False)
+                except Exception:
+                    self._m_records.inc(outcome="error")
+                    continue
+                self._m_records.inc(outcome=res.kind)
+                touched.add((rec.graph_fp, rec.topo_fp))
+                results.append(res)
+            for key in touched:
+                self._publish_calibration(key, store)
+            return results
+
+    def _publish_calibration(self, key: tuple, store: MeasurementStore):
+        """Refit + publish calibration gauges for one watched workload."""
+        _, topo = self._watched[key]
+        history = store.records(graph_fp=key[0], topo_fp=key[1], limit=256)
+        if not history:
+            return
+        from repro.runtime.calibration import profile_metrics
+        profile = fit_profile(history, topo)
+        if not profile.util and not profile.links:
+            profile = uniform_profile(topo, 1.0, n_records=len(history))
+        profile_metrics(profile, self.service.metrics)
+
+    def stats(self) -> dict:
+        return {"running": self.running,
+                "interval_s": self.interval_s,
+                "watched": len(self._watched),
+                "polls": self._m_polls.value(),
+                "records": {
+                    k: self._m_records.value(outcome=k)
+                    for k in ("ok", "replanned", "no_plan", "unwatched",
+                              "error")},
+                "last_poll_unixtime": self._m_last.value()}

@@ -328,14 +328,30 @@ def cmd_trace(args) -> int:
     return 0
 
 
-def cmd_metrics(args) -> int:
-    """Operational metrics snapshot: planner store gauges plus — given a
-    telemetry dir — the calibration fit (per-device-type AND per-op-type
-    utilization, link efficiencies) as gauges."""
+def _metrics_once(args) -> None:
+    """One metrics dump: from a running server (``--url``, validated
+    through the exposition parser so the served text can't silently
+    diverge from the format contract) or assembled locally."""
+    if args.url:
+        import urllib.request
+
+        from repro.obs.metrics import parse_prometheus_text
+        base = args.url.rstrip("/")
+        with urllib.request.urlopen(base + "/metrics", timeout=30) as r:
+            text = r.read().decode("utf-8")
+        parse_prometheus_text(text)
+        if args.format == "prometheus":
+            print(text, end="" if text.endswith("\n") else "\n")
+        else:
+            with urllib.request.urlopen(base + "/plans", timeout=30) as r:
+                print(r.read().decode("utf-8"), end="")
+        return
+    from repro.obs.spans import export_tracer_metrics
     svc = PlannerService(cache_dir=args.cache_dir)
     registry = svc.metrics
-    svc.metrics.gauge("planner_store_size",
-                      "plans resident in the store").set(len(svc.store))
+    registry.gauge("planner_store_size",
+                   "plans resident in the store").set(len(svc.store))
+    export_tracer_metrics(registry)
     fitted = 0
     if args.telemetry_dir:
         from repro.runtime.calibration import fit_profile, profile_metrics
@@ -350,6 +366,78 @@ def cmd_metrics(args) -> int:
     else:
         print(json.dumps({"stats": svc.stats(),
                           "telemetry_records": fitted}, indent=2))
+
+
+def cmd_metrics(args) -> int:
+    """Operational metrics snapshot: planner store gauges plus — given a
+    telemetry dir — the calibration fit (per-device-type AND per-op-type
+    utilization, link efficiencies) as gauges. ``--watch S`` re-dumps
+    every S seconds; ``--url`` reads a running ``serve-metrics`` server
+    instead of assembling metrics locally."""
+    import time as time_mod
+    n = 0
+    while True:
+        _metrics_once(args)
+        n += 1
+        if not args.watch or (args.watch_count and n >= args.watch_count):
+            return 0
+        time_mod.sleep(args.watch)
+
+
+def cmd_serve_metrics(args) -> int:
+    """Run the live observability plane: /metrics, /healthz,
+    /traces/<run_id>, /plans — plus (unless ``--no-recalibrate``) the
+    background recalibration loop polling the telemetry dir and
+    replanning watched workloads on drift."""
+    import time as time_mod
+
+    from repro.obs.collector import SpoolWriter, TraceCollector
+    from repro.obs.server import ObsServer
+
+    svc = PlannerService(cache_dir=args.cache_dir,
+                         telemetry_dir=args.telemetry_dir or None,
+                         drift_threshold=args.threshold)
+    spool = collector = loop = None
+    if args.spool_dir:
+        spool = SpoolWriter(args.spool_dir, run_id=args.run_id,
+                            name="planner")
+        collector = TraceCollector(args.spool_dir)
+        # serving a spool implies the planner's own spans are wanted in
+        # the merged trace
+        from repro.obs.spans import get_tracer
+        get_tracer().enable()
+    watched = None
+    if not args.no_recalibrate:
+        from repro.runtime.feedback import RecalibrationLoop
+        loop = RecalibrationLoop(svc, interval_s=args.interval,
+                                 iterations=args.iterations)
+        if args.model:
+            watched = loop.watch(_build_grouped(args),
+                                 _build_topology(args.topo))
+    server = ObsServer(registry=svc.metrics, service=svc,
+                       collector=collector, spool=spool, recalib=loop,
+                       host=args.host, port=args.port)
+    server.start()
+    print(json.dumps({
+        "url": server.url,
+        "endpoints": ["/metrics", "/healthz", "/plans", "/traces",
+                      "/traces/<run_id>"],
+        "cache_dir": args.cache_dir,
+        "telemetry_dir": args.telemetry_dir or None,
+        "spool_dir": args.spool_dir or None,
+        "recalibrate": loop is not None,
+        "watched": list(watched) if watched else None,
+    }, indent=2), flush=True)
+    try:
+        if args.duration > 0:
+            time_mod.sleep(args.duration)
+        else:
+            while True:
+                time_mod.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.stop()
     return 0
 
 
@@ -449,7 +537,51 @@ def main(argv=None) -> int:
     p.add_argument("--topo", choices=sorted(TOPOLOGIES), default="testbed")
     p.add_argument("--format", choices=("prometheus", "json"),
                    default="prometheus")
+    p.add_argument("--watch", type=float, default=0.0, metavar="SECONDS",
+                   help="re-dump every SECONDS (0: once)")
+    p.add_argument("--watch-count", type=int, default=0,
+                   help="with --watch: stop after N dumps (0: forever)")
+    p.add_argument("--url", default="",
+                   help="read /metrics from a running serve-metrics "
+                        "server (validated through the exposition "
+                        "parser) instead of assembling locally")
     p.set_defaults(fn=cmd_metrics)
+
+    p = sub.add_parser("serve-metrics",
+                       help="serve /metrics, /healthz, /traces/<run_id>, "
+                            "/plans; optionally run the continuous "
+                            "recalibration loop")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=9464,
+                   help="bind port (0: pick a free one; printed as JSON "
+                        "on startup)")
+    p.add_argument("--cache-dir", default=".plans")
+    p.add_argument("--telemetry-dir", default=".telemetry",
+                   help="measurement log the recalibration loop polls "
+                        "via read_new()")
+    p.add_argument("--spool-dir", default="",
+                   help="cross-process trace spool to collect and serve "
+                        "under /traces/<run_id>")
+    p.add_argument("--run-id", default="planner",
+                   help="run id for this process's own spool shard")
+    p.add_argument("--interval", type=float, default=5.0,
+                   help="recalibration poll interval (s)")
+    p.add_argument("--iterations", type=int, default=20,
+                   help="re-search budget when drift trips")
+    p.add_argument("--threshold", type=float, default=0.25,
+                   help="EWMA drift threshold")
+    p.add_argument("--no-recalibrate", action="store_true",
+                   help="serve only; no background feedback loop")
+    p.add_argument("--model", choices=sorted(ZOO), default=None,
+                   help="watch this zoo model for unattended replanning "
+                        "(with --topo/--n-groups/--batch)")
+    p.add_argument("--topo", choices=sorted(TOPOLOGIES), default="testbed")
+    p.add_argument("--n-groups", type=int, default=30)
+    p.add_argument("--batch", type=int, default=None)
+    p.add_argument("--duration", type=float, default=0.0,
+                   help="serve for SECONDS then exit (0: until "
+                        "interrupted) — CI smoke uses this")
+    p.set_defaults(fn=cmd_serve_metrics)
 
     p = sub.add_parser("policy",
                        help="train / list / pin registered GNN policies")

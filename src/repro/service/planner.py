@@ -303,16 +303,20 @@ class PlannerService:
 
     def observe(self, gg: GroupedGraph, topo: Topology, observation, *,
                 iterations: int = 20, seed: int = 0,
-                enable_sfb: bool = True):
+                enable_sfb: bool = True, append: bool = True):
         """Feed an observed step (a ``repro.runtime.telemetry.StepRecord``
         or a bare step time in seconds) back into the planner: below the
         drift threshold this only logs telemetry; past it, the cached plan
         is invalidated and re-searched warm under a recalibrated cost
-        model. Returns a ``repro.runtime.feedback.FeedbackResult``."""
+        model. Returns a ``repro.runtime.feedback.FeedbackResult``.
+
+        ``append=False`` when the observation was itself read from this
+        service's measurement store (the recalibration poller), so it is
+        not written back as a duplicate."""
         with get_tracer().span("observe", cat="planner"):
             res = self.feedback_loop().observe(
                 gg, topo, observation, iterations=iterations, seed=seed,
-                enable_sfb=enable_sfb)
+                enable_sfb=enable_sfb, append=append)
         self._stats["observations"] += 1
         if res.kind == "replanned":
             self._stats["replans"] += 1
@@ -329,3 +333,35 @@ class PlannerService:
         s["hit_rate"] = s["hits"] / s["requests"] if s["requests"] else 0.0
         s["metrics"] = self.metrics.to_dict()
         return s
+
+    # ------------------------------------------------- served observability
+    def serve_metrics(self, *, host: str = "127.0.0.1", port: int = 0,
+                      spool_dir: str | None = None,
+                      run_id: str = "planner", recalibrate: bool = True,
+                      interval_s: float = 5.0, iterations: int = 20,
+                      start: bool = True):
+        """Embed the live observability plane in this service.
+
+        Returns a started ``repro.obs.server.ObsServer`` exposing this
+        service's registry on /metrics, store stats on /plans, and — when
+        ``spool_dir`` is given — the cross-process trace collector on
+        /traces/<run_id>, with this process's planner spans drained into
+        its own spool shard on every scrape. ``recalibrate=True`` also
+        attaches a ``RecalibrationLoop`` (its lifecycle follows the
+        server's); register workloads for unattended replanning via
+        ``server.recalib.watch(gg, topo)``.
+        """
+        from repro.obs.collector import SpoolWriter, TraceCollector
+        from repro.obs.server import ObsServer
+        spool = collector = loop = None
+        if spool_dir:
+            spool = SpoolWriter(spool_dir, run_id=run_id, name="planner")
+            collector = TraceCollector(spool_dir)
+        if recalibrate:
+            from repro.runtime.feedback import RecalibrationLoop
+            loop = RecalibrationLoop(self, interval_s=interval_s,
+                                     iterations=iterations)
+        server = ObsServer(registry=self.metrics, service=self,
+                           collector=collector, spool=spool, recalib=loop,
+                           host=host, port=port)
+        return server.start() if start else server

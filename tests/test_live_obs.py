@@ -1,0 +1,536 @@
+"""Live observability plane tests (repro.obs.collector / repro.obs.server
+/ repro.runtime.feedback.RecalibrationLoop).
+
+Cross-process span spool + incremental collector merge (including the
+two-subprocess skewed-monotonic-clock alignment test), the served
+/metrics / /healthz / /plans / /traces endpoints, the strict Prometheus
+text-exposition parser, tracer drop-counter export, the `repro-plan
+metrics --url/--watch` paths, the unattended recalibration loop, and the
+end-to-end acceptance run: a planner request and a pipelined training
+job in separate processes feeding one spool + telemetry dir, with the
+serving process detecting drift and replanning with no manual observe.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.core.device import testbed as make_testbed
+from repro.core.graph import CompGraph, OpNode, group_graph
+from repro.obs import (
+    MetricsRegistry, ObsServer, SpoolWriter, TraceCollector, Tracer,
+    escape_label_value, export_tracer_metrics, parse_prometheus_text,
+    set_tracer, shard_path, validate_chrome_trace)
+from repro.runtime.feedback import RecalibrationLoop
+from repro.runtime.telemetry import MeasurementStore, StepRecord
+from repro.service.planner import PlannerService
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_subprocess(code: str) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def _chain_gg(n_ops: int = 12, n_groups: int = 6):
+    g = CompGraph(name="chain")
+    for i in range(n_ops):
+        g.add_node(OpNode(i, f"op{i}", "dot_general",
+                          flops=1e9 * (1 + i % 3), bytes_out=1e6,
+                          param_bytes=4e5, grad_bytes=4e5,
+                          is_grad_producer=True))
+        if i:
+            g.add_edge(i - 1, i, 1e6)
+    assign = {i: i * n_groups // n_ops for i in range(n_ops)}
+    return group_graph(g, assign)
+
+
+_CHAIN_GG_SRC = '''
+def _chain_gg(n_ops=12, n_groups=6):
+    from repro.core.graph import CompGraph, OpNode, group_graph
+    g = CompGraph(name="chain")
+    for i in range(n_ops):
+        g.add_node(OpNode(i, f"op{i}", "dot_general",
+                          flops=1e9 * (1 + i % 3), bytes_out=1e6,
+                          param_bytes=4e5, grad_bytes=4e5,
+                          is_grad_producer=True))
+        if i:
+            g.add_edge(i - 1, i, 1e6)
+    return group_graph(g, {i: i * n_groups // n_ops for i in range(n_ops)})
+'''
+
+
+def _get(url: str, timeout: float = 30.0) -> bytes:
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.read()
+
+
+# ------------------------------------------------------- spool + collector
+
+def test_spool_shard_naming_and_anchor_guard(tmp_path):
+    spool = str(tmp_path)
+    w = SpoolWriter(spool, run_id="r/1", name="train worker", pid=42)
+    assert w.path == shard_path(spool, "r/1", "train worker", 42)
+    assert os.path.basename(w.path) == "r_1--train_worker-42.jsonl"
+    # a second writer on the same (run_id, name, pid) must NOT write a
+    # second anchor line into the existing shard
+    SpoolWriter(spool, run_id="r/1", name="train worker", pid=42,
+                anchor=(999.0, 999.0))
+    lines = [json.loads(s) for s in
+             open(w.path).read().splitlines() if s.strip()]
+    assert [r["type"] for r in lines] == ["anchor"]
+    assert lines[0]["wall"] != 999.0
+
+
+def test_collector_incremental_poll_truncation_and_bad_lines(tmp_path):
+    spool = str(tmp_path)
+    w = SpoolWriter(spool, run_id="run", name="p", anchor=(100.0, 0.0))
+    w.emit_track(0, "main")
+    w.emit_span("a", 1.0, 2.0)
+    c = TraceCollector(spool)
+    assert c.poll() == 3                       # anchor + track + span
+    assert c.poll() == 0                       # nothing new
+    w.emit_span("b", 2.0, 3.0)
+    # a torn (incomplete) trailing line stays buffered until completed
+    with open(w.path, "a") as f:
+        f.write('{"type": "span", "name": "torn"')
+    assert c.poll() == 1                       # only the complete "b"
+    with open(w.path, "a") as f:
+        f.write(', "t0": 3.0, "t1": 4.0, "tid": 0, "cat": "s"}\n')
+        f.write("not json at all\n")
+        f.write('{"type": "mystery", "x": 1}\n')
+    assert c.poll() == 1                       # completed "torn" span only
+    assert c.counts() == {"shards": 1, "spans": 3, "bad_lines": 2,
+                          "runs": 1}
+    # truncation resets the cursor and replays the shard from scratch
+    with open(w.path, "w") as f:
+        f.write(json.dumps({"type": "anchor", "run_id": "run",
+                            "process": "p", "pid": w.pid,
+                            "wall": 100.0, "mono": 0.0}) + "\n")
+        f.write(json.dumps({"type": "span", "name": "fresh", "cat": "s",
+                            "tid": 0, "t0": 0.5, "t1": 0.75,
+                            "args": {}}) + "\n")
+    assert c.poll() == 2
+    assert c.counts()["spans"] == 1
+    assert [s["name"] for sh in c.shards("run") for s in sh.spans] \
+        == ["fresh"]
+
+
+def test_collector_skew_alignment_deterministic(tmp_path):
+    """Two shards whose monotonic clocks disagree by 1000s but whose
+    wall clocks are 0.5s apart merge in true wall order."""
+    spool = str(tmp_path)
+    a = SpoolWriter(spool, run_id="r", name="procA", pid=11,
+                    anchor=(100.0, 0.0))
+    b = SpoolWriter(spool, run_id="r", name="procB", pid=22,
+                    anchor=(100.5, 1000.0))
+    a.emit_track(0, "stage 0")
+    a.emit_span("early", 0.0, 0.1, tid=0)
+    b.emit_span("late", 1000.0, 1000.2, tid=0)  # wall 100.5: 0.5s later
+    c = TraceCollector(spool)
+    c.poll()
+    doc = c.chrome("r")
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert [e["name"] for e in spans] == ["early", "late"]
+    assert spans[0]["ts"] == 0.0
+    assert spans[1]["ts"] == pytest.approx(0.5e6)      # µs, wall-aligned
+    metas = {(e["name"], e["pid"]): e["args"]["name"]
+             for e in doc["traceEvents"] if e["ph"] == "M"}
+    assert metas[("process_name", 0)] == "procA (pid 11)"
+    assert metas[("process_name", 1)] == "procB (pid 22)"
+    assert metas[("thread_name", 0)] == "stage 0"      # named track
+    assert metas[("thread_name", 1)] == "track 0"      # default name
+
+
+def test_two_subprocess_skewed_shards_merge(tmp_path):
+    """Satellite: shards written by two real OS processes with injected
+    skewed monotonic clocks merge into one schema-valid Chrome trace
+    with correct cross-process ordering and pid/tid metadata."""
+    spool = str(tmp_path / "spool")
+    writer = """
+        import sys
+        from repro.obs.collector import SpoolWriter
+        spool, name, pid, wall, mono = sys.argv[1:6]
+        w = SpoolWriter(spool, run_id="e2e", name=name, pid=int(pid),
+                        anchor=(float(wall), float(mono)))
+        w.emit_track(0, name + " work")
+        for i in range(3):
+            t0 = float(mono) + 0.1 * i
+            w.emit_span(f"{name}-{i}", t0, t0 + 0.05, tid=0, cat="smoke")
+        print("WROTE", w.path)
+    """
+    env = dict(os.environ, PYTHONPATH=SRC)
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", textwrap.dedent(writer), spool,
+         name, pid, wall, mono],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=env)
+        for name, pid, wall, mono in (
+            ("alpha", "101", "5000.0", "0.0"),
+            # beta's monotonic clock is 7000s AHEAD, but its events start
+            # 0.05s of wall time after alpha's i=0 span
+            ("beta", "202", "5000.05", "7000.0"))]
+    for p in procs:
+        out, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err[-2000:]
+        assert "WROTE" in out
+    c = TraceCollector(spool)
+    assert c.poll() == 2 * (1 + 1 + 3)
+    doc = c.chrome("e2e")
+    validate_chrome_trace(doc)
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    # true wall order interleaves the two processes despite the skew
+    assert [e["name"] for e in spans] == [
+        "alpha-0", "beta-0", "alpha-1", "beta-1", "alpha-2", "beta-2"]
+    assert spans[1]["ts"] == pytest.approx(0.05e6, abs=1.0)
+    by_pid = {e["args"]["name"]: e["pid"] for e in doc["traceEvents"]
+              if e["ph"] == "M" and e["name"] == "process_name"}
+    assert by_pid == {"alpha (pid 101)": 0, "beta (pid 202)": 1}
+    thread_names = {(e["pid"], e["args"]["name"])
+                    for e in doc["traceEvents"]
+                    if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert thread_names == {(0, "alpha work"), (1, "beta work")}
+
+
+def test_emit_tracer_incremental(tmp_path):
+    tr = Tracer(enabled=True)
+    with tr.span("s1", cat="c"):
+        pass
+    w = SpoolWriter(str(tmp_path), run_id="t", name="tr")
+    assert w.emit_tracer(tr) == 1
+    assert w.emit_tracer(tr) == 0              # nothing new
+    with tr.span("s2", cat="c"):
+        pass
+    assert w.emit_tracer(tr) == 1
+    c = TraceCollector(str(tmp_path))
+    c.poll()
+    names = [s["name"] for sh in c.shards("t") for s in sh.spans]
+    assert names == ["s1", "s2"]
+
+
+# --------------------------------------------- prometheus text exposition
+
+def test_prometheus_label_escaping_roundtrip():
+    reg = MetricsRegistry()
+    weird = 'we"ird\\x\nnewline'
+    reg.counter("odd_total", 'help with \\ and\nnewline').inc(3, tag=weird)
+    text = reg.to_prometheus()
+    fams = parse_prometheus_text(text)
+    assert fams["odd_total"]["kind"] == "counter"
+    [(name, labels, value)] = fams["odd_total"]["samples"]
+    assert labels == {"tag": weird}            # exact round-trip
+    assert value == 3.0
+    assert escape_label_value(weird) == 'we\\"ird\\\\x\\nnewline'
+
+
+def test_prometheus_parser_histogram_folding_and_infinities():
+    text = textwrap.dedent("""\
+        # HELP lat_seconds latency
+        # TYPE lat_seconds histogram
+        lat_seconds_bucket{le="0.1"} 1
+        lat_seconds_bucket{le="+Inf"} 2
+        lat_seconds_sum 0.3
+        lat_seconds_count 2
+        # TYPE bare untyped
+        bare 4
+    """)
+    fams = parse_prometheus_text(text)
+    assert fams["lat_seconds"]["kind"] == "histogram"
+    names = {s[0] for s in fams["lat_seconds"]["samples"]}
+    assert names == {"lat_seconds_bucket", "lat_seconds_sum",
+                     "lat_seconds_count"}
+    inf_sample = [s for s in fams["lat_seconds"]["samples"]
+                  if s[1].get("le") == "+Inf"]
+    assert inf_sample and inf_sample[0][2] == 2.0
+
+
+@pytest.mark.parametrize("bad", [
+    "# TYPE x flavor\nx 1\n",                  # unknown TYPE
+    "metric{9bad=\"v\"} 1\n",                  # invalid label name
+    "metric{a=\"v} 1\n",                       # unterminated quote
+    "metric{a=\"v\\\"} 1\n",                   # dangling escape
+    "metric oops\n",                           # non-numeric value
+    "# TYPE x counter\n# TYPE x gauge\nx 1\n",  # duplicate TYPE
+    "# TYPE h histogram\nh_sum 1\nh_count 1\n",  # histogram w/o buckets
+    "9metric 1\n",                             # invalid metric name
+])
+def test_prometheus_parser_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_prometheus_text(bad)
+
+
+def test_tracer_dropped_exported_as_counter():
+    reg = MetricsRegistry()
+    tr = Tracer(enabled=True, max_spans=2)
+    for i in range(5):
+        with tr.span(f"s{i}"):
+            pass
+    assert tr.dropped == 3
+    c = export_tracer_metrics(reg, tr)
+    assert c.value() == 3.0
+    export_tracer_metrics(reg, tr)             # idempotent: no delta
+    assert c.value() == 3.0
+    with tr.span("s5"):
+        pass
+    export_tracer_metrics(reg, tr)
+    assert c.value() == 4.0
+    fams = parse_prometheus_text(reg.to_prometheus())
+    assert fams["tracer_dropped_spans_total"]["kind"] == "counter"
+    assert fams["tracer_buffered_spans"]["samples"][0][2] == 2.0
+
+
+# ------------------------------------------------------------ HTTP server
+
+def test_obs_server_endpoints(tmp_path):
+    spool_dir = str(tmp_path / "spool")
+    svc = PlannerService(cache_dir=str(tmp_path / "plans"))
+    spool = SpoolWriter(spool_dir, run_id="srv", name="test")
+    spool.emit_span("hello", 1.0, 2.0, tid=0)
+    with ObsServer(service=svc, collector=TraceCollector(spool_dir),
+                   spool=spool) as server:
+        text = _get(server.url + "/metrics").decode()
+        fams = parse_prometheus_text(text)
+        assert "planner_requests_total" in fams
+        assert "planner_store_size" in fams
+        assert "collector_spool_shards" in fams
+        assert "tracer_dropped_spans_total" in fams
+
+        health = json.loads(_get(server.url + "/healthz"))
+        assert health["status"] == "ok"
+        assert health["collector"]["spans"] >= 1
+        assert health["requests"] >= 1
+
+        plans = json.loads(_get(server.url + "/plans"))
+        assert plans["store_size"] == 0
+
+        runs = json.loads(_get(server.url + "/traces"))
+        assert "srv" in runs["runs"]
+        doc = json.loads(_get(server.url + "/traces/srv"))
+        validate_chrome_trace(doc)
+        assert any(e["ph"] == "X" and e["name"] == "hello"
+                   for e in doc["traceEvents"])
+
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(server.url + "/traces/nope")
+        assert ei.value.code == 404
+        assert "srv" in json.loads(ei.value.read())["runs"]
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(server.url + "/bogus")
+        assert ei.value.code == 404
+        index = json.loads(_get(server.url + "/"))
+        assert "/metrics" in index["endpoints"]
+    # port released after stop(): a request must now fail to connect
+    with pytest.raises(OSError):
+        _get(server.url + "/healthz", timeout=2)
+
+
+def test_cli_metrics_url_and_watch(tmp_path, capsys):
+    from repro.service.cli import main
+    svc = PlannerService(cache_dir=str(tmp_path / "plans"))
+    with ObsServer(service=svc) as server:
+        rc = main(["metrics", "--url", server.url])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "# TYPE planner_store_size gauge" in out
+        parse_prometheus_text(out)
+        rc = main(["metrics", "--url", server.url, "--format", "json"])
+        assert rc == 0
+        assert "store_size" in json.loads(capsys.readouterr().out)
+    rc = main(["metrics", "--cache-dir", str(tmp_path / "plans"),
+               "--watch", "0.01", "--watch-count", "3"])
+    assert rc == 0
+    dumps = capsys.readouterr().out.count("planner_store_size 0")
+    assert dumps == 3
+
+
+# ----------------------------------------------------- recalibration loop
+
+def test_recalibration_loop_poll_once_detects_drift(tmp_path):
+    tele = str(tmp_path / "telemetry")
+    svc = PlannerService(cache_dir=str(tmp_path / "plans"),
+                         telemetry_dir=tele)
+    gg, topo = _chain_gg(), make_testbed()
+    res = svc.plan_graph(gg, topo, iterations=8, seed=0)
+    loop = RecalibrationLoop(svc, interval_s=60.0, iterations=8)
+    key = loop.watch(gg, topo)
+
+    # an EXTERNAL writer appends a drifted step to the shared telemetry
+    # dir — 3x the planned time, far past the 0.25 drift threshold
+    ext = MeasurementStore(tele)
+    ext.append(StepRecord(graph_fp=key[0], topo_fp=key[1], step=0,
+                          wall_time=res.time * 3.0))
+    before = len(svc.measurements.records())
+    assert [r.kind for r in loop.poll_once()] == ["replanned"]
+    # append=False: the polled record must not be written back
+    assert len(svc.measurements.records()) == before
+    assert loop.poll_once() == []              # read_new cursor advanced
+    # unwatched fingerprints are counted, not observed
+    ext.append(StepRecord(graph_fp="other", topo_fp="other",
+                          wall_time=1.0))
+    assert loop.poll_once() == []
+    st = loop.stats()
+    assert st["records"]["replanned"] == 1
+    assert st["records"]["unwatched"] == 1
+    assert st["polls"] == 3 and not st["running"]
+    # calibration gauges published from the refit profile
+    fams = parse_prometheus_text(svc.metrics.to_prometheus())
+    assert "recalib_records_total" in fams
+    assert "calibration_utilization" in fams
+
+
+def test_recalibration_background_thread(tmp_path):
+    tele = str(tmp_path / "telemetry")
+    svc = PlannerService(cache_dir=str(tmp_path / "plans"),
+                         telemetry_dir=tele)
+    gg, topo = _chain_gg(), make_testbed()
+    res = svc.plan_graph(gg, topo, iterations=8, seed=0)
+    loop = RecalibrationLoop(svc, interval_s=0.05, iterations=8)
+    key = loop.watch(gg, topo)
+    loop.start()
+    try:
+        assert loop.running
+        MeasurementStore(tele).append(StepRecord(
+            graph_fp=key[0], topo_fp=key[1], wall_time=res.time * 3.0))
+        deadline = time.time() + 30
+        while time.time() < deadline:
+            if loop.stats()["records"].get("replanned", 0) >= 1:
+                break
+            time.sleep(0.05)
+        assert loop.stats()["records"]["replanned"] >= 1
+    finally:
+        loop.stop()
+    assert not loop.running
+
+
+# ------------------------------------------------------------- end-to-end
+
+def test_live_obs_e2e_cross_process(tmp_path):
+    """Acceptance: a planner request and a pipelined training job run in
+    SEPARATE processes against one spool + telemetry + plan-cache dir.
+    The serving process exposes live planner/calibration/span-drop
+    series on /metrics, merges both processes' events into one aligned
+    /traces document, and its recalibration loop — fed only by
+    ``read_new()`` polling — detects the injected drift and replans
+    without any manual ``observe`` call."""
+    cache = str(tmp_path / "plans")
+    tele = str(tmp_path / "telemetry")
+    spool_dir = str(tmp_path / "spool")
+
+    # process 1: plans via a PlannerService against the shared cache and
+    # spools its tracer spans
+    _run_subprocess(_CHAIN_GG_SRC + textwrap.dedent(f"""
+        from repro.obs import SpoolWriter, get_tracer
+        from repro.core.device import testbed
+        from repro.service.planner import PlannerService
+
+        get_tracer().enable()
+        svc = PlannerService(cache_dir={cache!r})
+        res = svc.plan_graph(_chain_gg(), testbed(), iterations=8, seed=0)
+        w = SpoolWriter({spool_dir!r}, run_id="e2e", name="planner")
+        assert w.emit_tracer(get_tracer()) > 0
+        print("PLANNED", res.time)
+    """))
+
+    # process 2: executes the planned pipeline (replay engine), streams
+    # its stage events into the same spool, and appends a DRIFTED step
+    # record (3x the planned time) to the shared telemetry dir
+    _run_subprocess(_CHAIN_GG_SRC + textwrap.dedent(f"""
+        from repro.core.device import testbed
+        from repro.core.strategy import Action, Option, Strategy
+        from repro.exec.replay import execute_pipeline
+        from repro.exec.stages import build_stage_plan
+        from repro.obs import SpoolWriter
+        from repro.runtime.telemetry import MeasurementStore
+        from repro.service.planner import PlannerService
+        from repro.service.fingerprint import (
+            fingerprint_grouped_cached, fingerprint_topology)
+
+        gg, topo = _chain_gg(), testbed()
+        svc = PlannerService(cache_dir={cache!r})
+        res = svc.plan_graph(gg, topo, iterations=8, seed=0)
+        assert svc.stats()["hits"] >= 1        # read process 1's plan
+        strat = Strategy([Action((0, 1, 5), Option.PIPE) if i % 2 == 0
+                          else Action((0, 1, 5), Option.PS)
+                          for i in range(gg.n)])
+        plan = build_stage_plan(gg, strat, topo, n_micro=8)
+        spool = SpoolWriter({spool_dir!r}, run_id="e2e", name="train")
+        rec, _ = execute_pipeline(
+            plan, topo, schedule="1f1b", step=0, spool=spool,
+            graph_fp=fingerprint_grouped_cached(gg),
+            topo_fp=fingerprint_topology(topo))
+        rec.wall_time = res.time * 3.0         # inject drift
+        MeasurementStore({tele!r}).append(rec)
+        print("TRAINED")
+    """))
+
+    # serving process: same cache (plan visible via the store's disk
+    # fallthrough), same telemetry dir, recalibration poller + server
+    svc = PlannerService(cache_dir=cache, telemetry_dir=tele)
+    gg, topo = _chain_gg(), make_testbed()
+    tr = Tracer(enabled=True, max_spans=1)
+    set_tracer(tr)
+    try:
+        with tr.span("a"):
+            pass
+        with tr.span("b"):                     # overflow -> dropped > 0
+            pass
+        loop = RecalibrationLoop(svc, interval_s=0.1, iterations=8)
+        loop.watch(gg, topo)
+        with ObsServer(service=svc, collector=TraceCollector(spool_dir),
+                       recalib=loop) as server:
+            deadline = time.time() + 60
+            fams = {}
+            while time.time() < deadline:
+                fams = parse_prometheus_text(
+                    _get(server.url + "/metrics").decode())
+                obs = {s[1].get("outcome"): s[2] for s in
+                       fams.get("planner_observations_total",
+                                {"samples": []})["samples"]}
+                if obs.get("replanned", 0) >= 1:
+                    break
+                time.sleep(0.1)
+            assert obs.get("replanned", 0) >= 1, dict(fams)
+
+            # live planner + recalibration + calibration + drop series
+            assert "planner_requests_total" in fams
+            assert "planner_drift_ratio" in fams
+            assert "recalib_records_total" in fams
+            assert "calibration_utilization" in fams
+            assert fams["tracer_dropped_spans_total"]["samples"][0][2] \
+                >= 1.0
+            assert fams["collector_spool_shards"]["samples"][0][2] == 2.0
+
+            doc = json.loads(_get(server.url + "/traces/e2e"))
+            validate_chrome_trace(doc)
+            procs = {e["args"]["name"] for e in doc["traceEvents"]
+                     if e["ph"] == "M" and e["name"] == "process_name"}
+            assert len(procs) == 2 and \
+                {p.split(" ")[0] for p in procs} == {"planner", "train"}
+            spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+            by_proc = {}
+            for e in spans:
+                by_proc.setdefault(e["args"]["process"], []).append(e)
+            assert by_proc.keys() == {"planner", "train"}
+            assert all(e["ts"] >= 0 for e in spans)
+            ts = [e["ts"] for e in spans]
+            assert ts == sorted(ts)            # aligned, merged order
+            # pipeline events carry their schedule-position names
+            assert any(e["name"].startswith("F0.") for e in
+                       by_proc["train"])
+        assert loop.stats()["records"]["replanned"] >= 1
+        assert not loop.running                # server.stop stopped it
+    finally:
+        set_tracer(Tracer())
