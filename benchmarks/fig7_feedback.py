@@ -144,7 +144,8 @@ def main():
     r = run()
     print("fig7,step,loss_with_feedback,loss_without_feedback")
     for i, (a, b) in enumerate(zip(r["with_feedback"],
-                                   r["without_feedback"])):
+                                   r["without_feedback"],
+                                   strict=True)):
         print(fmt_row("fig7", i, f"{a:.4f}", f"{b:.4f}"))
     wa = float(np.mean(r["with_feedback"][-3:]))
     wb = float(np.mean(r["without_feedback"][-3:]))

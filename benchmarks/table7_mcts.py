@@ -43,7 +43,7 @@ def run(models=None, budget=60, train_steps=10):
     state = trained_policy(graphs, steps=train_steps)
     policy = make_policy(state.cfg, state.params)
     rows = []
-    for name, gg in zip(models, graphs):
+    for name, gg in zip(models, graphs, strict=True):
         pure = iters_to_beat(gg, topo, None, budget=budget)
         guided = iters_to_beat(gg, topo, policy, budget=budget)
         rows.append({"model": name, "pure_mcts": pure, "tag": guided})

@@ -33,17 +33,20 @@ def main():
     for sync in ("allreduce", "ps", "sfb"):
         params = [jnp.asarray(rng.standard_normal((a, b)) * 0.05,
                               jnp.float32)
-                  for a, b in zip(widths[:-1], widths[1:])]
+                  for a, b in zip(widths[:-1], widths[1:],
+                                  strict=True)]
         rng = np.random.default_rng(0)  # same init for every mode
         params = [jnp.asarray(rng.standard_normal((a, b)) * 0.05,
                               jnp.float32)
-                  for a, b in zip(widths[:-1], widths[1:])]
+                  for a, b in zip(widths[:-1], widths[1:],
+                                  strict=True)]
         fn = dp_mlp_loss(mesh, "data", sync, widths)
         vg = jax.jit(jax.value_and_grad(fn))
         losses = []
-        for step in range(20):
+        for _step in range(20):
             l, g = vg(params, x, y)
-            params = [p - 0.05 * gi for p, gi in zip(params, g)]
+            params = [p - 0.05 * gi
+                      for p, gi in zip(params, g, strict=True)]
             losses.append(float(l))
         print(f"{sync:10s} loss: {losses[0]:.6f} -> {losses[-1]:.6f}")
 

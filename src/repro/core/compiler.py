@@ -75,7 +75,7 @@ def _replica_plan(topo: Topology, action: Action, proportional: bool):
         from repro.core.strategy import device_group_of
         speeds = [topo.groups[device_group_of(topo, d)].flops for d in devs]
         tot = sum(speeds)
-        return [(d, s / tot) for d, s in zip(devs, speeds)]
+        return [(d, s / tot) for d, s in zip(devs, speeds, strict=True)]
     return [(d, 1.0 / len(devs)) for d in devs]
 
 
@@ -147,7 +147,7 @@ def compile_strategy(gg: GroupedGraph, strat: Strategy, topo: Topology,
         if action.option == Option.MP and n > 1:
             # sequential stages with boundary transfers
             stage_bytes = grp.bytes_out / max(n, 1)
-            for a, b in zip(reps[:-1], reps[1:]):
+            for a, b in zip(reps[:-1], reps[1:], strict=True):
                 if a.device == b.device:
                     tg.tasks[b.task].deps.append(a.task)
                     continue

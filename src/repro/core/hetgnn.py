@@ -96,7 +96,7 @@ def gnn_forward(cfg: GNNConfig, p: dict, g: HetGraph):
     od_e = jnp.asarray(g.od_e)
     do_e = jnp.swapaxes(od_e, 0, 1)
     for layer in range(cfg.layers):
-        def msg(et, hd_, hs_, e_, m_):
+        def msg(et, hd_, hs_, e_, m_, layer=layer):
             return _gat_message(cfg, p[f"W_{layer}_{et}"],
                                 p[f"b_{layer}_{et}"], p[f"a_{layer}_{et}"],
                                 hd_, hs_, e_, m_)

@@ -121,14 +121,17 @@ class _Exporter:
 
             if sub is not None:
                 # connect: map outer invars into sub invars
-                for iv, sv in zip(eqn.invars, sub.invars):
+                # cond eqns carry the predicate as an extra invar, so
+                # the zip truncating is the point
+                for iv, sv in zip(eqn.invars, sub.invars, strict=False):
                     if hasattr(iv, "aval") and not isinstance(iv, Literal):
                         self.var_src[sv] = self.var_src.get(iv)
                         self.var_batch[sv] = self.var_batch.get(iv, False)
                     else:
                         self.var_batch[sv] = False
                 self.walk(sub, scale * mult, prefix)
-                for ov, sv in zip(eqn.outvars, sub.outvars):
+                for ov, sv in zip(eqn.outvars, sub.outvars,
+                                  strict=False):
                     self.var_src[ov] = self.var_src.get(sv)
                     self.var_batch[ov] = self.var_batch.get(sv, False)
                 continue

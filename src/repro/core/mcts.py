@@ -32,10 +32,10 @@ from repro.obs.spans import get_tracer
 class Vertex:
     strategy: Strategy
     depth: int                       # number of decided groups
-    actions: list = None             # candidates for the next group
-    prior: np.ndarray = None
-    N: np.ndarray = None
-    Q: np.ndarray = None
+    actions: list | None = None      # candidates for the next group
+    prior: np.ndarray | None = None
+    N: np.ndarray | None = None
+    Q: np.ndarray | None = None
     children: dict = field(default_factory=dict)
     reward: float = 0.0
     feedback: object = None          # SimResult of the filled strategy

@@ -99,7 +99,7 @@ def simulate(tg: TaskGraph, topo: Topology, profile=None) -> SimResult:
             link_free[key] = s + dur
             link_busy[(gi, gj)] = link_busy.get((gi, gj), 0.0) + dur
         elif t.kind == "allreduce":
-            s = max([rt] + [dev_free.get(d, 0.0) for d in t.devices])
+            s = max([rt, *(dev_free.get(d, 0.0) for d in t.devices)])
             gids = [g_of[d] for d in t.devices]
             tau = topo.bottleneck_bw(gids)
             dur = allreduce_time(t.nbytes, len(t.devices), tau, topo.latency)
@@ -185,7 +185,7 @@ def device_group_stats(res: SimResult, topo: Topology):
     """Aggregate per-device-group feedback (GNN features part 3)."""
     stats = []
     base = 0
-    for g, dg in enumerate(topo.groups):
+    for dg in topo.groups:
         devs = range(base, base + dg.num_gpus)
         base += dg.num_gpus
         peak = max((res.peak_mem.get(d, 0.0) for d in devs), default=0.0)

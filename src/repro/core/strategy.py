@@ -144,7 +144,7 @@ def candidate_actions(topo: Topology, *, has_grad: bool,
     by_type: dict = {}
     for g, dg in enumerate(topo.groups):
         by_type.setdefault(dg.gpu_type, []).append(g)
-    for t, gs in by_type.items():
+    for gs in by_type.values():
         if len(gs) > 1:
             placements.append(tuple(sorted(gs)))
     order = sorted(range(m), key=lambda g: -(topo.groups[g].flops

@@ -94,7 +94,7 @@ def resnet101(batch: int = 96):
     def loss_fn(p, b):
         x = jax.nn.relu(_conv(b["image"], p["stem"], stride=2))
         x = _pool(x)
-        for s, (c, blocks) in enumerate(_RESNET_STAGES):
+        for s, (_c, blocks) in enumerate(_RESNET_STAGES):
             for blk in range(blocks):
                 pfx = f"s{s}b{blk}"
                 stride = 2 if (blk == 0 and s > 0) else 1
@@ -137,7 +137,7 @@ def inception_v3(batch: int = 96):
         x = jax.nn.relu(_conv(x, p["stem2"]))
         x = jax.nn.relu(_conv(x, p["stem3"]))
         x = _pool(x)
-        for i, w in enumerate(widths):
+        for i, _w in enumerate(widths):
             t1 = jax.nn.relu(_conv(x, p[f"m{i}t1"]))
             t2 = jax.nn.relu(_conv(jax.nn.relu(_conv(x, p[f"m{i}t2a"])),
                                    p[f"m{i}t2b"]))

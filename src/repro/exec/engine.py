@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.exec.schedule import flatten_schedule, make_schedule
 from repro.parallel.sfb_dense import tree_grad_sync
+from repro.verify.diagnostics import PlanVerificationError
 
 
 def _batch_spec(x, ndev: int):
@@ -153,6 +154,23 @@ class PipelineRunner:
             for devs in self.device_sets]
         order = make_schedule(schedule, self.S, self.n_micro,
                               n_chunks=self.V)
+        # static preflight: prove the event lists deadlock/race-free and
+        # the plan's collectives well-formed for the device sets we were
+        # actually handed, before any compile or transfer happens (lazy
+        # import: repro.verify.verifier imports repro.exec.schedule)
+        from repro.verify.verifier import (
+            verify_preflight, verify_schedule)
+        if getattr(plan, "n_stages", None) == self.S:
+            pre = verify_preflight(
+                plan, order, self.n_micro, n_chunks=self.V,
+                device_counts=[len(d) for d in self.device_sets])
+        else:
+            pre = verify_schedule(order, self.S, self.n_micro,
+                                  n_chunks=self.V)
+        if pre.errors():
+            raise PlanVerificationError(
+                pre, context=f"pipeline preflight ({schedule}, "
+                             f"S={self.S}, n_micro={self.n_micro})")
         self.flat = flatten_schedule(order, self.S, self.n_micro)
         self.has_w = any(e.kind == "W" for e in self.flat)
         self._fwd = [None] * self.U

@@ -99,7 +99,8 @@ def split_model(cfg: ModelConfig, params, n_stages: int,
     tied = cfg.tie_embeddings
     stage_params, stage_fns, mb_keys = [], [], []
     for s, (lo, hi) in enumerate(splits):
-        p = {"blocks": jax.tree.map(lambda a: a[lo:hi], params["blocks"])}
+        p = {"blocks": jax.tree.map(lambda a, lo=lo, hi=hi: a[lo:hi],
+                                    params["blocks"])}
         keys: list = []
         if s == 0:
             p["embed"] = params["embed"]

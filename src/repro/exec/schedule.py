@@ -41,10 +41,16 @@ the bubble-fraction source for the pipeline benchmark, and — via
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Sequence
 
 from repro.core.device import Topology
 from repro.core.profiler import (
     allreduce_time, compute_time, ps_round_time, transfer_time)
+
+if TYPE_CHECKING:
+    from repro.core.graph import GroupedGraph
+    from repro.core.simulator import SimResult
+    from repro.exec.stages import StagePlan
 
 SCHEDULES = ("gpipe", "1f1b", "interleaved", "zb")
 
@@ -73,14 +79,14 @@ class Event:
     mb: int
     chunk: int = 0            # virtual chunk (interleaved); 0 otherwise
 
-    def __repr__(self):
+    def __repr__(self) -> str:
         c = f"c{self.chunk}" if self.chunk else ""
         return f"{self.kind}{self.stage}{c}.{self.mb}"
 
 
-def gpipe_schedule(n_stages: int, n_micro: int) -> list:
+def gpipe_schedule(n_stages: int, n_micro: int) -> list[list[Event]]:
     """Per-stage issue order: F(0..M-1) then B(M-1..0)."""
-    out = []
+    out: list[list[Event]] = []
     for s in range(n_stages):
         evs = [Event("F", s, m) for m in range(n_micro)]
         evs += [Event("B", s, m) for m in reversed(range(n_micro))]
@@ -88,9 +94,10 @@ def gpipe_schedule(n_stages: int, n_micro: int) -> list:
     return out
 
 
-def one_f_one_b_schedule(n_stages: int, n_micro: int) -> list:
+def one_f_one_b_schedule(n_stages: int,
+                         n_micro: int) -> list[list[Event]]:
     """Per-stage issue order with warm-up ``min(S - s, M)`` forwards."""
-    out = []
+    out: list[list[Event]] = []
     for s in range(n_stages):
         warm = min(n_stages - s, n_micro)
         evs = [Event("F", s, m) for m in range(warm)]
@@ -105,8 +112,9 @@ def one_f_one_b_schedule(n_stages: int, n_micro: int) -> list:
     return out
 
 
-def interleaved_1f1b_schedule(n_stages: int, n_micro: int,
-                              n_chunks: int = DEFAULT_CHUNKS) -> list:
+def interleaved_1f1b_schedule(
+        n_stages: int, n_micro: int,
+        n_chunks: int = DEFAULT_CHUNKS) -> list[list[Event]]:
     """Megatron-style interleaved 1F1B over ``n_chunks`` virtual stages
     per physical stage.
 
@@ -127,16 +135,16 @@ def interleaved_1f1b_schedule(n_stages: int, n_micro: int,
             f"(got M={M}, S={S})")
     total = M * V
 
-    def chunk_mb(k: int, forward: bool) -> tuple:
+    def chunk_mb(k: int, forward: bool) -> tuple[int, int]:
         c = (k % (S * V)) // S
         if not forward:
             c = V - 1 - c
         return c, (k // (S * V)) * S + k % S
 
-    out = []
+    out: list[list[Event]] = []
     for s in range(S):
         warm = min(2 * (S - s - 1) + (V - 1) * S, total)
-        evs = []
+        evs: list[Event] = []
         for k in range(warm):
             c, mb = chunk_mb(k, True)
             evs.append(Event("F", s, mb, c))
@@ -156,7 +164,8 @@ def interleaved_1f1b_schedule(n_stages: int, n_micro: int,
     return out
 
 
-def zero_bubble_schedule(n_stages: int, n_micro: int) -> list:
+def zero_bubble_schedule(n_stages: int,
+                         n_micro: int) -> list[list[Event]]:
     """ZB-H1-style split-backward schedule: the 1F1B skeleton with each
     backward split into ``B`` (activation grad, cross-stage dependency)
     and ``W`` (weight grad, stage-local). ``W(m)`` is issued promptly
@@ -166,7 +175,7 @@ def zero_bubble_schedule(n_stages: int, n_micro: int) -> list:
     while the stage waits for the next downstream ``B``.
     """
     S, M = n_stages, n_micro
-    out = []
+    out: list[list[Event]] = []
     for s in range(S):
         warm = min(S - s, M)
         evs = [Event("F", s, m) for m in range(warm)]
@@ -184,7 +193,7 @@ def zero_bubble_schedule(n_stages: int, n_micro: int) -> list:
 
 
 def make_schedule(name: str, n_stages: int, n_micro: int, *,
-                  n_chunks: int = DEFAULT_CHUNKS) -> list:
+                  n_chunks: int = DEFAULT_CHUNKS) -> list[list[Event]]:
     if name == "gpipe":
         return gpipe_schedule(n_stages, n_micro)
     if name == "1f1b":
@@ -196,7 +205,7 @@ def make_schedule(name: str, n_stages: int, n_micro: int, *,
     raise ValueError(f"unknown schedule {name!r} (use one of {SCHEDULES})")
 
 
-def n_chunks_of(order: list) -> int:
+def n_chunks_of(order: Sequence[Sequence[Event]]) -> int:
     """Virtual-chunk count of a schedule (1 for plain schedules)."""
     return max((e.chunk for evs in order for e in evs), default=0) + 1
 
@@ -221,7 +230,8 @@ def _dep_of(e: Event, n_stages: int, n_chunks: int) -> Event | None:
     return Event("B", e.stage, e.mb, e.chunk)       # "W"
 
 
-def validate_schedule(order: list, n_stages: int, n_micro: int) -> None:
+def validate_schedule(order: list[list[Event]], n_stages: int,
+                      n_micro: int) -> None:
     """Schedule invariants; raises ``ValueError`` on violation:
 
       * every stage issues F and B of every (chunk, microbatch) exactly
@@ -243,7 +253,8 @@ def validate_schedule(order: list, n_stages: int, n_micro: int) -> None:
             cms = sorted((e.chunk, e.mb) for e in evs if e.kind == kind)
             if cms != want:
                 raise ValueError(f"stage {s}: {kind} covers {cms}")
-        seen: dict = {"F": set(), "B": set()}
+        seen: dict[str, set[tuple[int, int]]] = {"F": set(),
+                                                 "B": set()}
         for e in evs:
             if e.kind == "F":
                 seen["F"].add((e.chunk, e.mb))
@@ -259,14 +270,15 @@ def validate_schedule(order: list, n_stages: int, n_micro: int) -> None:
     flatten_schedule(order, n_stages, n_micro)   # raises on deadlock
 
 
-def flatten_schedule(order: list, n_stages: int, n_micro: int) -> list:
+def flatten_schedule(order: list[list[Event]], n_stages: int,
+                     n_micro: int) -> list[Event]:
     """A single dependency-consistent global issue order (the eager
     engine executes events in this order). Raises on deadlock."""
     del n_micro
     V = n_chunks_of(order)
     ptr = [0] * n_stages
-    done: set = set()
-    out = []
+    done: set[Event] = set()
+    out: list[Event] = []
     total = sum(len(evs) for evs in order)
     while len(out) < total:
         progressed = False
@@ -287,13 +299,14 @@ def flatten_schedule(order: list, n_stages: int, n_micro: int) -> list:
     return out
 
 
-def peak_stash(order: list) -> list:
+def peak_stash(order: "Sequence[Sequence[Event | TimedEvent]]"
+               ) -> list[int]:
     """Per-stage peak number of in-flight forward activations (stash) —
     the pipeline's activation-memory driver: GPipe peaks at n_micro,
     1F1B at min(S - s, M). A stash is released by the event that last
     consumes the stage input: ``W`` when the stage splits its backward
     (zero-bubble), else ``B``."""
-    peaks = []
+    peaks: list[int] = []
     for evs in order:
         release = "W" if any(e.kind == "W" for e in evs) else "B"
         cur = peak = 0
@@ -307,8 +320,10 @@ def peak_stash(order: list) -> list:
     return peaks
 
 
-def max_feasible_micro(plan, schedule: str, *, mb_act_bytes,
-                       mem_budget, cap: int = 64,
+def max_feasible_micro(plan: "StagePlan", schedule: str, *,
+                       mb_act_bytes: float | Sequence[float],
+                       mem_budget: float | Sequence[float],
+                       cap: int = 64,
                        n_chunks: int = DEFAULT_CHUNKS) -> int:
     """Largest microbatch count whose peak activation stash fits the
     memory budget per stage at a FIXED microbatch size. ``mb_act_bytes``
@@ -319,10 +334,10 @@ def max_feasible_micro(plan, schedule: str, *, mb_act_bytes,
     M must also be a multiple of the stage count — other M are skipped
     as infeasible)."""
     S = plan.n_stages
-    acts = list(mb_act_bytes) if hasattr(mb_act_bytes, "__len__") \
-        else [mb_act_bytes] * S
-    buds = list(mem_budget) if hasattr(mem_budget, "__len__") \
-        else [mem_budget] * S
+    acts = list(mb_act_bytes) if isinstance(mb_act_bytes, Sequence) \
+        else [float(mb_act_bytes)] * S
+    buds = list(mem_budget) if isinstance(mem_budget, Sequence) \
+        else [float(mem_budget)] * S
     best = 0
     for m in range(1, cap + 1):
         try:
@@ -350,19 +365,19 @@ class TimedEvent:
     nbytes: float = 0.0       # transfers: bytes on the wire
 
     @property
-    def dur(self):
+    def dur(self) -> float:
         return self.finish - self.start
 
 
 @dataclass
 class Timeline:
-    events: list                         # list[TimedEvent]
+    events: list[TimedEvent]
     makespan: float
-    stage_busy: list                     # compute seconds per stage
+    stage_busy: list[float]              # compute seconds per stage
     n_stages: int
     n_micro: int
     n_chunks: int = 1
-    meta: dict = field(default_factory=dict)
+    meta: dict[str, object] = field(default_factory=dict)
 
     def bubble_fraction(self) -> float:
         """1 - busy/(S * makespan): the idle share of stage-seconds."""
@@ -379,12 +394,13 @@ class Timeline:
         raise KeyError((kind, stage, mb, chunk))
 
 
-def _stage_speed(plan, topo: Topology, s: int) -> float:
+def _stage_speed(plan: "StagePlan", topo: Topology, s: int) -> float:
     dg = topo.groups[plan.stages[s].device_group]
     return dg.flops * max(dg.num_gpus, 1)
 
 
-def boundary_bytes(plan, u_lo: int, n_micro: int) -> float:
+def boundary_bytes(plan: "StagePlan", u_lo: int,
+                   n_micro: int) -> float:
     """Per-direction, per-microbatch bytes crossing the virtual boundary
     (u_lo, u_lo + 1). Interior boundaries carry the traced stage-crossing
     activation; chunk-wrap boundaries (last physical stage back to the
@@ -402,8 +418,9 @@ def boundary_bytes(plan, u_lo: int, n_micro: int) -> float:
     return nb * BOUNDARY_DIR_FRAC / max(n_micro, 1)
 
 
-def simulate_schedule(plan, topo: Topology, order: list,
-                      *, fwd_frac: float = FWD_FRAC) -> Timeline:
+def simulate_schedule(plan: "StagePlan", topo: Topology,
+                      order: list[list[Event]], *,
+                      fwd_frac: float = FWD_FRAC) -> Timeline:
     """Dependency-driven timeline of a schedule on a topology.
 
     Per-stage compute is serial in the stage's issue order; forward of
@@ -421,7 +438,8 @@ def simulate_schedule(plan, topo: Topology, order: list,
     U = S * V
     M = max((e.mb for evs in order for e in evs), default=-1) + 1
     has_w = any(e.kind == "W" for evs in order for e in evs)
-    fwd_t, bwd_t = [], []
+    fwd_t: list[float] = []
+    bwd_t: list[float] = []
     for s in range(S):
         flops_m = plan.stages[s].flops / max(M, 1)
         speed = _stage_speed(plan, topo, s)
@@ -435,7 +453,8 @@ def simulate_schedule(plan, topo: Topology, order: list,
             return bwd_t[e.stage] / V * (1.0 - ZB_DGRAD_FRAC)
         return bwd_t[e.stage] / V * (ZB_DGRAD_FRAC if has_w else 1.0)
 
-    def xfer_t(u_lo: int, src_stage: int, dst_stage: int) -> tuple:
+    def xfer_t(u_lo: int, src_stage: int,
+               dst_stage: int) -> tuple[float, float]:
         gi = plan.stages[src_stage].device_group
         gj = plan.stages[dst_stage].device_group
         nb = boundary_bytes(plan, u_lo, M)
@@ -443,14 +462,15 @@ def simulate_schedule(plan, topo: Topology, order: list,
             return 0.0, 0.0
         return transfer_time(nb, topo.bw(gi, gj), topo.latency), nb
 
-    finish: dict = {}          # (kind, stage, mb, chunk) -> finish time
+    # (kind, stage, mb, chunk) -> finish time
+    finish: dict[tuple[str, int, int, int], float] = {}
     stage_free = [0.0] * S
-    link_free: dict = {}               # (src_g, dst_g) -> free time
+    link_free: dict[tuple[int, int], float] = {}   # (src_g, dst_g) -> t
     busy = [0.0] * S
-    events: list = []
+    events: list[TimedEvent] = []
     ptr = [0] * S
 
-    def ready(e: Event):
+    def ready(e: Event) -> tuple[float | None, TimedEvent | None]:
         """(ready time, transfer TimedEvent|None) for event e."""
         u = e.chunk * S + e.stage
         if e.kind == "F":
@@ -516,7 +536,7 @@ def simulate_schedule(plan, topo: Topology, order: list,
 
 # ------------------------------------------------ search-facing costing
 
-def stage_sync_time(plan, topo: Topology) -> float:
+def stage_sync_time(plan: "StagePlan", topo: Topology) -> float:
     """Worst per-stage gradient-sync time (intra-group collective after
     the flush). Stages sync on disjoint device groups, so they overlap —
     the slowest one bounds the step. SFB stages broadcast sufficient
@@ -536,11 +556,13 @@ def stage_sync_time(plan, topo: Topology) -> float:
     return worst
 
 
-def schedule_step_cost(plan, topo: Topology, schedule: str, *,
-                       global_micro: int = 16,
+def schedule_step_cost(plan: "StagePlan", topo: Topology,
+                       schedule: str, *, global_micro: int = 16,
                        n_chunks: int = DEFAULT_CHUNKS,
-                       mb_act_bytes=None, mem_budget=None,
-                       include_sync: bool = True) -> dict | None:
+                       mb_act_bytes: Sequence[float] | None = None,
+                       mem_budget: Sequence[float] | None = None,
+                       include_sync: bool = True
+                       ) -> dict[str, object] | None:
     """Memory-capped effective per-global-batch cost of one schedule.
 
     The schedule runs at its largest feasible microbatch depth under the
@@ -582,8 +604,11 @@ def schedule_step_cost(plan, topo: Topology, schedule: str, *,
             "sync_time_s": sync, "timeline": tl}
 
 
-def timeline_to_simresult(plan, tl: Timeline, topo: Topology, gg=None, *,
-                          flushes: int = 1, sync_time: float = 0.0):
+def timeline_to_simresult(plan: "StagePlan", tl: Timeline,
+                          topo: Topology,
+                          gg: "GroupedGraph | None" = None, *,
+                          flushes: int = 1,
+                          sync_time: float = 0.0) -> "SimResult":
     """Project a schedule ``Timeline`` into the ``SimResult`` shape the
     GNN featurization consumes (runtime-feedback features part 3), so
     schedule-aware MCTS evaluations feed the policy the same way FIFO
@@ -593,10 +618,10 @@ def timeline_to_simresult(plan, tl: Timeline, topo: Topology, gg=None, *,
     from repro.core.simulator import SimResult
 
     step = flushes * tl.makespan + sync_time
-    dev_busy: dict = {}
-    peak_mem: dict = {}
-    link_busy: dict = {}
-    order: list = [[] for _ in range(tl.n_stages)]
+    dev_busy: dict[int, float] = {}
+    peak_mem: dict[int, float] = {}
+    link_busy: dict[tuple[int, int], float] = {}
+    order: list[list[TimedEvent]] = [[] for _ in range(tl.n_stages)]
     for e in tl.events:
         if e.kind == "X":
             gi = plan.stages[e.src].device_group
@@ -621,7 +646,7 @@ def timeline_to_simresult(plan, tl: Timeline, topo: Topology, gg=None, *,
                     task_finish=[], device_busy=dev_busy,
                     peak_mem=peak_mem, link_busy=link_busy)
     if gg is not None:
-        span = {}
+        span: dict[int, tuple[float, float]] = {}
         for e in tl.events:
             if e.kind == "X":
                 continue

@@ -266,7 +266,7 @@ def _refine_cuts(spans: list, order: list, gg: GroupedGraph, caps: list,
                    == stage_of(pos_of[gi], cuts_) + 1)
 
     def feasible(cuts_) -> bool:
-        bounds = [0] + list(cuts_) + [len(order)]
+        bounds = [0, *cuts_, len(order)]
         for k in range(S):
             lo, hi = bounds[k], bounds[k + 1]
             if hi <= lo:
@@ -298,7 +298,7 @@ def _refine_cuts(spans: list, order: list, gg: GroupedGraph, caps: list,
                     best, cuts, improved = b, cand, True
         if not improved:
             break
-    bounds = [0] + cuts + [len(order)]
+    bounds = [0, *cuts, len(order)]
     return [order[bounds[k]:bounds[k + 1]] for k in range(S)]
 
 

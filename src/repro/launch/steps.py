@@ -92,7 +92,9 @@ class StepOptions:
 
 
 def make_train_step(cfg: ModelConfig, opt: AdamW, rules: AxisRules,
-                    options: StepOptions = StepOptions()):
+                    options: StepOptions | None = None):
+    options = options if options is not None else StepOptions()
+
     def train_step(params, opt_state, step, batch):
         with axis_rules(rules):
             def loss(p):
@@ -110,7 +112,7 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, rules: AxisRules,
 
 
 def make_pipeline_train_step(opt: AdamW, runner,
-                             options: StepOptions = StepOptions()):
+                             options: StepOptions | None = None):
     """Train-step builder for the pipeline execution engine.
 
     ``runner`` is a ``repro.exec.engine.PipelineRunner``; params/opt
@@ -124,6 +126,7 @@ def make_pipeline_train_step(opt: AdamW, runner,
     import jax.numpy as jnp
     from repro.optim.adam import global_norm
 
+    options = options if options is not None else StepOptions()
     sq = jax.jit(lambda g: global_norm(g) ** 2)
 
     upd = jax.jit(
@@ -140,7 +143,8 @@ def make_pipeline_train_step(opt: AdamW, runner,
         scale = jnp.asarray(min(1.0, options.clip_norm / max(gnorm, 1e-9)),
                             jnp.float32)
         new_p, new_s = [], []
-        for p, s, g in zip(params_list, opt_state_list, grads):
+        for p, s, g in zip(params_list, opt_state_list, grads,
+                           strict=True):
             p2, s2 = upd(p, s, g, step, scale)
             new_p.append(p2)
             new_s.append(s2)
@@ -168,7 +172,9 @@ def make_serve_step(cfg: ModelConfig, rules: AxisRules):
     return serve
 
 
-def jit_train_step(cfg, opt, rules, shape, options=StepOptions()):
+def jit_train_step(cfg, opt, rules, shape,
+                   options: StepOptions | None = None):
+    options = options if options is not None else StepOptions()
     ps = param_shardings(cfg, rules)
     bs = batch_shardings(cfg, shape, rules)
     os_ = jax.tree.map(lambda s: s, ps)  # opt moments follow params

@@ -135,6 +135,25 @@ def run_pipeline(args, cfg, stage_plan):
                  if schedule == "interleaved" else "") + ")", flush=True)
 
     device_sets = mesh_mod.stage_device_sets(stage_plan)
+
+    # static preflight before any parameter gets allocated: the resolved
+    # (schedule, n_micro, n_chunks) triple and the actual device sets,
+    # verified device-free — errors abort here, warnings print
+    from repro.exec.schedule import make_schedule
+    from repro.verify import PlanVerificationError, verify_preflight
+    pre = verify_preflight(
+        stage_plan,
+        make_schedule(schedule, stage_plan.n_stages, n_micro,
+                      n_chunks=n_chunks),
+        n_micro, n_chunks=n_chunks,
+        device_counts=[len(d) for d in device_sets])
+    if pre.errors():
+        raise PlanVerificationError(
+            pre, context=f"launch preflight ({schedule}, "
+                         f"S={stage_plan.n_stages}, n_micro={n_micro})")
+    for d in pre.warnings():
+        print(f"preflight: {d.format()}", flush=True)
+
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
     splits = stage_plan.layer_splits(cfg.num_periods, n_chunks=n_chunks)
     stage_params, fns, mb_keys, tied = split_model(

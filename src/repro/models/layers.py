@@ -39,7 +39,7 @@ def init_tree(defs, key, dtype):
     flat, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
     keys = jax.random.split(key, len(flat))
     return jax.tree.unflatten(
-        treedef, [_materialize(d, k, dtype) for d, k in zip(flat, keys)])
+        treedef, [_materialize(d, k, dtype) for d, k in zip(flat, keys, strict=True)])
 
 
 def abstract_tree(defs, dtype):

@@ -252,6 +252,65 @@ class TraceCollector:
         sh.offset += end + 1
         return n
 
+    # --------------------------------------------------------- retention
+    def gc(self, max_age_s: float | None = None,
+           max_bytes: int | None = None) -> dict:
+        """Delete fully-drained spool shard files past a retention
+        budget; the long-lived-spool half of plan-store eviction.
+
+        A shard file is deletable only when the collector has consumed
+        every byte of it (``offset == size`` — a torn trailing line
+        means undrained, the file survives). ``max_age_s`` drops drained
+        shards whose file mtime is older; ``max_bytes`` then drops
+        oldest-mtime-first until the spool directory's total drained
+        footprint fits. In-memory spans are kept, so already-collected
+        traces keep rendering after their shard files are gone.
+
+        Returns ``{"deleted", "kept", "bytes_freed"}``.
+        """
+        self.poll()       # drain appends first so fresh bytes never die
+        deleted, freed = 0, 0
+        with self._lock:
+            stats: list[tuple[float, int, str]] = []   # (mtime, size, p)
+            kept = 0
+            for path, sh in self._shards.items():
+                try:
+                    st = os.stat(path)
+                except OSError:
+                    continue              # already gone underneath us
+                if sh.offset < st.st_size:
+                    kept += 1             # undrained: never delete
+                    continue
+                stats.append((st.st_mtime, st.st_size, path))
+            doomed: set = set()
+            if max_age_s is not None:
+                cutoff = time.time() - float(max_age_s)
+                doomed |= {p for mt, _, p in stats if mt < cutoff}
+            if max_bytes is not None:
+                total = sum(sz for _, sz, p in stats if p not in doomed)
+                for _mt, sz, p in sorted(stats):
+                    if total <= int(max_bytes):
+                        break
+                    if p in doomed:
+                        continue
+                    doomed.add(p)
+                    total -= sz
+            for _mt, sz, p in stats:
+                if p not in doomed:
+                    kept += 1
+                    continue
+                try:
+                    os.remove(p)
+                except OSError:
+                    kept += 1
+                    continue
+                deleted += 1
+                freed += sz
+                # the _Shard entry (and its spans) stays: collected
+                # traces keep rendering, and a recreated file replays
+                # through the size < offset truncation path
+        return {"deleted": deleted, "kept": kept, "bytes_freed": freed}
+
     # ----------------------------------------------------------- queries
     def shards(self, run_id: str | None = None) -> list:
         with self._lock:

@@ -50,7 +50,9 @@ class ObsServer:
 
     def __init__(self, *, registry: MetricsRegistry | None = None,
                  service=None, collector=None, spool=None, recalib=None,
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0,
+                 spool_max_age_s: float | None = None,
+                 spool_max_bytes: int | None = None):
         if registry is None:
             registry = service.metrics if service is not None \
                 else MetricsRegistry()
@@ -59,6 +61,10 @@ class ObsServer:
         self.collector = collector
         self.spool = spool
         self.recalib = recalib
+        # shard retention budgets: each /metrics scrape GCs drained
+        # spool shards past these (None = keep forever)
+        self.spool_max_age_s = spool_max_age_s
+        self.spool_max_bytes = spool_max_bytes
         self._t0 = time.time()
         self._scrapes = registry.counter(
             "obs_http_requests_total", "requests served by the obs plane")
@@ -112,6 +118,19 @@ class ObsServer:
                 "plans resident in the store").set(len(self.service.store))
         if self.collector is not None:
             self.collector.poll()
+            if self.spool_max_age_s is not None \
+                    or self.spool_max_bytes is not None:
+                res = self.collector.gc(max_age_s=self.spool_max_age_s,
+                                        max_bytes=self.spool_max_bytes)
+                if res["deleted"]:
+                    self.registry.counter(
+                        "collector_spool_gc_deleted_total",
+                        "drained spool shard files removed by retention "
+                        "GC").inc(res["deleted"])
+                    self.registry.counter(
+                        "collector_spool_gc_bytes_total",
+                        "spool bytes reclaimed by retention GC").inc(
+                        res["bytes_freed"])
             c = self.collector.counts()
             g = self.registry.gauge
             g("collector_spool_shards",

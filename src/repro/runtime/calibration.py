@@ -193,7 +193,7 @@ def fit_profile(records: list, topo: Topology, *,
     for t, samples in by_type.items():
         if t not in GPU_PEAKS:
             continue
-        fl, ti = zip(*samples)
+        fl, ti = zip(*samples, strict=True)
         u = fit_utilization(fl, ti, peak_flops(t))
         if u is not None:              # degenerate fit: keep nominal
             util[t] = u
@@ -201,7 +201,7 @@ def fit_profile(records: list, topo: Topology, *,
     for (t, op), samples in by_op.items():
         if t not in GPU_PEAKS:
             continue
-        fl, ti = zip(*samples)
+        fl, ti = zip(*samples, strict=True)
         u = fit_utilization(fl, ti, peak_flops(t))
         if u is not None:
             util_by_op[f"{t}/{op}"] = u
@@ -225,7 +225,7 @@ def fit_profile(records: list, topo: Topology, *,
     links = {}
     alphas = []
     for cls_name, samples in by_class.items():
-        s, m, y = (list(x) for x in zip(*samples))
+        s, m, y = (list(x) for x in zip(*samples, strict=True))
         fit = fit_comm(s, m, y, prior_alpha=topo.latency)
         if fit is None:                # degenerate fit: keep nominal
             continue
@@ -235,7 +235,7 @@ def fit_profile(records: list, topo: Topology, *,
     for pair, samples in by_pair.items():
         if len(samples) < min_pair_samples:
             continue                   # sparse pair: class fit covers it
-        s, m, y = (list(x) for x in zip(*samples))
+        s, m, y = (list(x) for x in zip(*samples, strict=True))
         fit = fit_comm(s, m, y, prior_alpha=topo.latency)
         if fit is not None:
             pairs[pair] = fit

@@ -60,7 +60,7 @@ def cmd_plan(args) -> int:
         "iterations_run": resp.iterations_run,
         "time_s": resp.time, "baseline_s": resp.baseline_time,
         "speedup": round(resp.speedup, 4),
-        "policy": resp.policy,
+        "policy": resp.policy, "verify": resp.verify,
         "graph_fp": resp.graph_fp[:16], "topo_fp": resp.topo_fp[:16],
         "stats": svc.stats(),
     }, indent=2))
@@ -328,6 +328,45 @@ def cmd_trace(args) -> int:
     return 0
 
 
+def cmd_verify(args) -> int:
+    """Static plan verification. ``--selftest`` runs the mutation
+    harness (every injected violation class must be caught — the CI
+    soundness gate); otherwise searches (or loads) a plan for
+    (model, topo) and renders its diagnostics, exit 1 on errors."""
+    from repro.verify import run_selftest, verify_deployment
+
+    if args.selftest:
+        res = run_selftest()
+        print(json.dumps(res, indent=2))
+        return 0 if res["ok"] else 1
+    if not args.model:
+        print(json.dumps({"error": "verify needs --model (or "
+                                   "--selftest)"}))
+        return 2
+    gg = _build_grouped(args)
+    topo = _build_topology(args.topo)
+    # verify="off": this command IS the verification — run it once,
+    # below, with the full report instead of the cached summary
+    svc = PlannerService(cache_dir=args.cache_dir, verify="off")
+    resp = svc.plan_graph(gg, topo, iterations=args.iterations,
+                          seed=args.seed, enable_sfb=not args.no_sfb)
+    rep = verify_deployment(gg, resp.strategy, topo,
+                            n_micro=args.n_micro)
+    if args.json:
+        print(json.dumps({
+            "model": args.model, "topo": args.topo,
+            "source": resp.source, "verdict": rep.verdict,
+            "summary": rep.summary(), "diagnostics": rep.to_dict(),
+        }, indent=2))
+    else:
+        print(f"{args.model} on {args.topo} "
+              f"(plan source: {resp.source}): {rep.verdict}")
+        text = rep.format()
+        if text:
+            print(text)
+    return 1 if rep.errors() else 0
+
+
 def _metrics_once(args) -> None:
     """One metrics dump: from a running server (``--url``, validated
     through the exposition parser so the served text can't silently
@@ -416,7 +455,9 @@ def cmd_serve_metrics(args) -> int:
                                  _build_topology(args.topo))
     server = ObsServer(registry=svc.metrics, service=svc,
                        collector=collector, spool=spool, recalib=loop,
-                       host=args.host, port=args.port)
+                       host=args.host, port=args.port,
+                       spool_max_age_s=args.spool_max_age,
+                       spool_max_bytes=args.spool_max_bytes)
     server.start()
     print(json.dumps({
         "url": server.url,
@@ -527,6 +568,29 @@ def main(argv=None) -> int:
                    help="print the human diff per schedule")
     p.set_defaults(fn=cmd_trace)
 
+    p = sub.add_parser("verify",
+                       help="static plan verification: lint a searched "
+                            "deployment (or --selftest the verifier's "
+                            "mutation harness)")
+    p.add_argument("--selftest", action="store_true",
+                   help="run the mutation self-test across all four "
+                        "schedule families; exit 1 on any miss")
+    p.add_argument("--model", choices=sorted(ZOO), default=None)
+    p.add_argument("--topo", choices=sorted(TOPOLOGIES), default="testbed")
+    p.add_argument("--n-groups", type=int, default=30)
+    p.add_argument("--batch", type=int, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--cache-dir", default=".plans")
+    p.add_argument("--iterations", type=int, default=40,
+                   help="search budget when the plan is not cached")
+    p.add_argument("--n-micro", type=int, default=None,
+                   help="verify at this microbatch count (default: the "
+                        "plan's own)")
+    p.add_argument("--no-sfb", action="store_true")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable diagnostics")
+    p.set_defaults(fn=cmd_verify)
+
     p = sub.add_parser("metrics",
                        help="dump planner + calibration metrics "
                             "(Prometheus text or JSON)")
@@ -564,6 +628,13 @@ def main(argv=None) -> int:
                         "under /traces/<run_id>")
     p.add_argument("--run-id", default="planner",
                    help="run id for this process's own spool shard")
+    p.add_argument("--spool-max-age", type=float, default=None,
+                   metavar="SECONDS",
+                   help="retention GC: delete fully-drained spool "
+                        "shards older than SECONDS on each scrape")
+    p.add_argument("--spool-max-bytes", type=int, default=None,
+                   help="retention GC: shrink drained spool shards to "
+                        "this many bytes (oldest deleted first)")
     p.add_argument("--interval", type=float, default=5.0,
                    help="recalibration poll interval (s)")
     p.add_argument("--iterations", type=int, default=20,

@@ -27,8 +27,11 @@ from repro.service.fingerprint import (
 from repro.service.registry import PolicyRegistry
 from repro.service.store import PlanRecord, PlanStore
 from repro.service.warmstart import adapt_strategy, find_prior
+from repro.verify import PlanVerificationError, verify_deployment
 
 POLICY_SUBDIR = "policies"
+
+VERIFY_MODES = ("off", "warn", "reject")
 
 
 @dataclass
@@ -56,6 +59,9 @@ class PlanResponse:
                                      # stop_reward targets compare to this
     policy: str | None = None        # registry checkpoint that guided the
                                      # search (None: unguided / cache hit)
+    verify: dict | None = None       # static-verifier verdict summary
+                                     # (repro.verify Report.summary());
+                                     # None when verification is off
 
     @property
     def speedup(self):
@@ -73,7 +79,8 @@ class PlannerService:
                  measurements=None, drift_threshold: float = 0.25,
                  drift_min_samples: int = 1,
                  drift_ewma_alpha: float = 0.5,
-                 telemetry_dir: str | None = None):
+                 telemetry_dir: str | None = None,
+                 verify: str = "warn"):
         self.store = store if store is not None \
             else PlanStore(capacity=capacity, path=cache_dir)
         self.policy = policy
@@ -89,10 +96,20 @@ class PlannerService:
         self.registry = registry if use_registry else None
         self.warm_start = warm_start
         self.prior_weight = prior_weight
+        # static plan verification (repro.verify) of every fresh search
+        # result: "off" skips it, "warn" annotates the response and
+        # refuses to cache error-carrying plans, "reject" additionally
+        # raises PlanVerificationError instead of returning them
+        if verify not in VERIFY_MODES:
+            raise ValueError(f"verify={verify!r} (use one of "
+                             f"{VERIFY_MODES})")
+        self.verify_mode = verify
         self._stats = {"requests": 0, "hits": 0, "warm": 0, "cold": 0,
                        "batch_dedup": 0, "iterations": 0,
                        "policy_guided": 0,
-                       "observations": 0, "replans": 0}
+                       "observations": 0, "replans": 0,
+                       "verify_clean": 0, "verify_warn": 0,
+                       "verify_error": 0}
         # structured metrics mirror of _stats (+ latency/playout
         # distributions), dumped by ``repro-plan metrics`` and merged
         # into ``stats()``
@@ -110,6 +127,16 @@ class PlannerService:
             buckets=[0, 5, 10, 20, 40, 80, 160, 320, 640])
         self._m_store = self.metrics.gauge(
             "planner_store_size", "plans resident in the store")
+        self._m_verify = self.metrics.counter(
+            "planner_verify_total",
+            "static plan verifications by verdict")
+        self._m_verify_rejected = self.metrics.counter(
+            "planner_verify_rejected_total",
+            "plans refused store entry over error diagnostics")
+        self._m_verify_seconds = self.metrics.histogram(
+            "planner_verify_seconds",
+            "static verification wall seconds",
+            buckets=[0.001, 0.005, 0.02, 0.1, 0.5, 2.0])
         self._m_observe = self.metrics.counter(
             "planner_observations_total",
             "feedback observations by outcome")
@@ -183,7 +210,8 @@ class PlannerService:
                     time=rec.time, baseline_time=rec.baseline_time,
                     source="hit", iterations_run=0,
                     graph_fp=graph_fp, topo_fp=topo_fp,
-                    best_reward=float(rec.meta.get("best_reward", 0.0)))
+                    best_reward=float(rec.meta.get("best_reward", 0.0)),
+                    verify=rec.meta.get("verify"))
 
             prior = None
             if kind == "forced":
@@ -209,23 +237,47 @@ class PlannerService:
                     stop_reward=stop_reward,
                     observed_feedback=observed_feedback)
             self._stats["iterations"] += res.search.iterations_run
-            with tracer.span("store_put", cat="planner"):
-                self.store.put(PlanRecord(
-                    graph_fp=graph_fp, topo_fp=topo_fp,
-                    topo_struct_fp=struct_fp,
-                    n_groups=gg.n, topo_m=topo.m,
-                    strategy=res.strategy.to_dict(),
-                    sfb_plans={str(g): p.to_dict()
-                               for g, p in res.sfb_plans.items()},
-                    time=res.time, baseline_time=res.baseline_time,
-                    graph_features=graph_feat,
-                    meta={"iterations": iterations, "seed": seed,
-                          "enable_sfb": enable_sfb,
-                          "iterations_run": res.search.iterations_run,
-                          "best_reward": res.search.best_reward,
-                          "policy": policy_name,
-                          "source": "warm" if prior is not None
-                          else "cold"}))
+
+            verify_summary = None
+            verify_ok = True
+            if self.verify_mode != "off":
+                t_verify = time.perf_counter()
+                with tracer.span("verify", cat="planner"):
+                    report = verify_deployment(gg, res.strategy, topo)
+                self._m_verify_seconds.observe(
+                    time.perf_counter() - t_verify)
+                verify_summary = report.summary()
+                verify_ok = report.ok
+                self._m_verify.inc(verdict=report.verdict)
+                self._stats["verify_" + report.verdict] += 1
+                if not verify_ok:
+                    # an error-carrying plan is never cached: a bad plan
+                    # served from the store would be a fleet incident,
+                    # not a local traceback
+                    self._m_verify_rejected.inc()
+                    if self.verify_mode == "reject":
+                        raise PlanVerificationError(
+                            report, context=f"graph {graph_fp[:12]} on "
+                                            f"topo {topo_fp[:12]}")
+            if verify_ok:
+                with tracer.span("store_put", cat="planner"):
+                    self.store.put(PlanRecord(
+                        graph_fp=graph_fp, topo_fp=topo_fp,
+                        topo_struct_fp=struct_fp,
+                        n_groups=gg.n, topo_m=topo.m,
+                        strategy=res.strategy.to_dict(),
+                        sfb_plans={str(g): p.to_dict()
+                                   for g, p in res.sfb_plans.items()},
+                        time=res.time, baseline_time=res.baseline_time,
+                        graph_features=graph_feat,
+                        meta={"iterations": iterations, "seed": seed,
+                              "enable_sfb": enable_sfb,
+                              "iterations_run": res.search.iterations_run,
+                              "best_reward": res.search.best_reward,
+                              "policy": policy_name,
+                              "verify": verify_summary,
+                              "source": "warm" if prior is not None
+                              else "cold"}))
             source = "warm" if prior is not None else "cold"
             self._finish_metrics(
                 source, t_plan, playouts=res.search.iterations_run,
@@ -237,7 +289,7 @@ class PlannerService:
                 iterations_run=res.search.iterations_run,
                 graph_fp=graph_fp, topo_fp=topo_fp,
                 best_reward=res.search.best_reward,
-                policy=policy_name)
+                policy=policy_name, verify=verify_summary)
 
     def _finish_metrics(self, source: str, t_start: float, *,
                         playouts: int, to_best: int | None = None):
@@ -339,6 +391,8 @@ class PlannerService:
                       spool_dir: str | None = None,
                       run_id: str = "planner", recalibrate: bool = True,
                       interval_s: float = 5.0, iterations: int = 20,
+                      spool_max_age_s: float | None = None,
+                      spool_max_bytes: int | None = None,
                       start: bool = True):
         """Embed the live observability plane in this service.
 
@@ -363,5 +417,7 @@ class PlannerService:
                                      iterations=iterations)
         server = ObsServer(registry=self.metrics, service=self,
                            collector=collector, spool=spool, recalib=loop,
-                           host=host, port=port)
+                           host=host, port=port,
+                           spool_max_age_s=spool_max_age_s,
+                           spool_max_bytes=spool_max_bytes)
         return server.start() if start else server

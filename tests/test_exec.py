@@ -219,7 +219,8 @@ def test_timeline_respects_dependencies():
                 per_stage.setdefault(e.stage, []).append((e.start, e.finish))
         for evs in per_stage.values():
             evs.sort()
-            for (s0, f0), (s1, f1) in zip(evs, evs[1:]):
+            for (_s0, f0), (s1, _f1) in zip(evs, evs[1:],
+                                            strict=False):
                 assert s1 >= f0 - 1e-12          # serial per stage
         assert 0.0 < tl.bubble_fraction() < 1.0
 
@@ -425,7 +426,7 @@ def test_replay_matches_predicted_timeline(name):
         plan, topo, make_schedule(name, plan.n_stages, plan.n_micro))
     assert abs(executed.makespan - predicted.makespan) < 1e-12
     assert len(executed.events) == len(predicted.events)
-    for a, b in zip(executed.events, predicted.events):
+    for a, b in zip(executed.events, predicted.events, strict=True):
         assert (a.kind, a.stage, a.mb, a.chunk) == \
             (b.kind, b.stage, b.mb, b.chunk)
         assert abs(a.start - b.start) < 1e-12

@@ -221,6 +221,98 @@ def test_emit_tracer_incremental(tmp_path):
     assert names == ["s1", "s2"]
 
 
+# ------------------------------------------------- spool shard retention
+
+def test_spool_gc_never_deletes_undrained_shard(tmp_path):
+    """Satellite invariant: GC deletes a shard file only after the
+    collector has consumed every byte of it — a torn trailing line
+    means undrained, so the file survives any retention budget."""
+    spool = str(tmp_path)
+    a = SpoolWriter(spool, run_id="r", name="drained", pid=1,
+                    anchor=(100.0, 0.0))
+    a.emit_span("done-a", 0.0, 1.0)
+    b = SpoolWriter(spool, run_id="r", name="torn", pid=2,
+                    anchor=(100.0, 0.0))
+    b.emit_span("done-b", 0.0, 1.0)
+    with open(b.path, "a") as f:
+        f.write('{"type": "span", "name": "tail"')     # torn: no newline
+    c = TraceCollector(spool)
+    c.poll()
+    old = time.time() - 3600
+    for p in (a.path, b.path):
+        os.utime(p, (old, old))
+    res = c.gc(max_age_s=60)
+    assert res["deleted"] == 1
+    assert not os.path.exists(a.path)                  # drained: deleted
+    assert os.path.exists(b.path)                      # undrained: kept
+    # even the harshest budgets never touch an undrained shard
+    res = c.gc(max_age_s=0, max_bytes=0)
+    assert res["deleted"] == 0 and os.path.exists(b.path)
+    # collected spans keep rendering after their shard file is gone
+    assert c.counts()["spans"] == 2
+    names = sorted(s["name"] for sh in c.shards("r") for s in sh.spans)
+    assert names == ["done-a", "done-b"]
+    # completing the torn line drains the shard and makes it deletable
+    with open(b.path, "a") as f:
+        f.write(', "t0": 1.0, "t1": 2.0, "tid": 0, "cat": "s"}\n')
+    os.utime(b.path, (old, old))
+    res = c.gc(max_age_s=60)
+    assert res["deleted"] == 1 and not os.path.exists(b.path)
+    assert c.counts()["spans"] == 3                    # "tail" collected
+
+
+def test_spool_gc_byte_budget_drops_oldest_first(tmp_path):
+    spool = str(tmp_path)
+    writers = []
+    now = time.time()
+    for i in range(3):
+        w = SpoolWriter(spool, run_id="r", name=f"p{i}", pid=10 + i,
+                        anchor=(100.0, 0.0))
+        w.emit_span(f"s{i}", 0.0, 1.0)
+        writers.append(w)
+    c = TraceCollector(spool)
+    c.poll()
+    for i, w in enumerate(writers):                    # p0 is the oldest
+        t = now - 1000 + i * 100
+        os.utime(w.path, (t, t))
+    sizes = {w.path: os.path.getsize(w.path) for w in writers}
+    budget = sizes[writers[1].path] + sizes[writers[2].path]
+    res = c.gc(max_bytes=budget)
+    assert res["deleted"] == 1
+    assert res["bytes_freed"] == sizes[writers[0].path]
+    assert not os.path.exists(writers[0].path)
+    assert os.path.exists(writers[1].path)
+    assert os.path.exists(writers[2].path)
+    res = c.gc(max_bytes=0)
+    assert res["deleted"] == 2
+    # the merged trace still renders all three processes from memory
+    doc = c.chrome("r")
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert sorted(e["name"] for e in spans) == ["s0", "s1", "s2"]
+
+
+def test_served_metrics_runs_spool_gc(tmp_path):
+    """serve-metrics retention wiring: a /metrics scrape GCs drained
+    shards past the budget and exports the reclamation counters."""
+    spool = str(tmp_path)
+    w = SpoolWriter(spool, run_id="r", name="p", pid=3,
+                    anchor=(100.0, 0.0))
+    w.emit_span("a", 0.0, 1.0)
+    c = TraceCollector(spool)
+    c.poll()
+    old = time.time() - 100
+    os.utime(w.path, (old, old))
+    size = os.path.getsize(w.path)
+    with ObsServer(collector=c, spool_max_age_s=1.0) as srv:
+        body = _get(srv.url + "/metrics").decode()
+    assert not os.path.exists(w.path)
+    fams = parse_prometheus_text(body)
+    assert fams["collector_spool_gc_deleted_total"]["samples"][0][2] \
+        == 1.0
+    assert fams["collector_spool_gc_bytes_total"]["samples"][0][2] \
+        == float(size)
+
+
 # --------------------------------------------- prometheus text exposition
 
 def test_prometheus_label_escaping_roundtrip():

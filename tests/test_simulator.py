@@ -111,7 +111,8 @@ def test_random_strategies_simulate_clean(gg, topo, seed):
     res = simulate(compile_strategy(gg, Strategy(actions), topo), topo)
     assert res.makespan > 0
     assert all(b >= 0 for b in res.device_busy.values())
-    assert all(f >= s for s, f in zip(res.task_start, res.task_finish))
+    assert all(f >= s for s, f in zip(res.task_start, res.task_finish,
+                                      strict=True))
 
 
 def test_compute_time_linear_in_flops():

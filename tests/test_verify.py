@@ -1,0 +1,243 @@
+"""Static plan verifier tests (repro.verify).
+
+Clean baselines for every schedule family, the mutation self-test's
+100%-catch soundness gate (ISSUE acceptance criterion), per-mutation
+diagnostic-code contracts, the device-free engine/launcher preflight,
+the ``repro-plan verify --selftest`` CLI gate, and the PlannerService
+caching policy: an error-carrying plan is never cached, ``reject`` mode
+raises, ``warn`` mode attaches the verdict to the response and the
+stored record.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.device import testbed as make_testbed
+from repro.core.graph import CompGraph, OpNode, group_graph
+from repro.exec.schedule import SCHEDULES, make_schedule
+from repro.service.planner import PlannerService
+from repro.verify import (
+    CODES, MUTATIONS, PlanVerificationError, Report, Severity,
+    make_context, run_selftest, verify_preflight, verify_schedule)
+from repro.verify.mutate import verify_context
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _chain_gg(n_ops: int = 12, n_groups: int = 6):
+    g = CompGraph(name="chain")
+    for i in range(n_ops):
+        g.add_node(OpNode(i, f"op{i}", "dot_general",
+                          flops=1e9 * (1 + i % 3), bytes_out=1e6,
+                          param_bytes=4e5, grad_bytes=4e5,
+                          is_grad_producer=True))
+        if i:
+            g.add_edge(i - 1, i, 1e6)
+    assign = {i: i * n_groups // n_ops for i in range(n_ops)}
+    return group_graph(g, assign)
+
+
+@pytest.fixture(scope="module")
+def gg():
+    return _chain_gg()
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return make_testbed()
+
+
+# ------------------------------------------------------- clean baselines
+
+@pytest.mark.parametrize("sched", SCHEDULES)
+def test_clean_baseline_verifies_clean(sched):
+    """The synthetic self-test deployment must produce a clean verdict
+    under the full four-analysis pass, for every schedule family."""
+    rep = verify_context(make_context(sched))
+    assert rep.verdict == "clean", rep.format()
+
+
+@pytest.mark.parametrize("n_stages,n_micro",
+                         [(2, 4), (3, 6), (4, 8), (6, 12)])
+@pytest.mark.parametrize("sched", SCHEDULES)
+def test_generated_schedules_verify_clean(sched, n_stages, n_micro):
+    """Every schedule the generators emit passes happens-before
+    verification with zero diagnostics."""
+    V = 2 if sched == "interleaved" else 1
+    order = make_schedule(sched, n_stages, n_micro, n_chunks=V)
+    rep = verify_schedule(order, n_stages, n_micro, n_chunks=V)
+    assert rep.ok, rep.format()
+    assert not rep.diagnostics
+
+
+# --------------------------------------------------- mutation self-test
+
+def test_selftest_catches_every_injected_violation():
+    """Acceptance criterion: the verifier catches 100% of the mutator's
+    injected violations across all four schedule families."""
+    res = run_selftest()
+    assert res["clean_baselines_ok"] is True
+    assert res["missed"] == []
+    assert res["caught"] == res["mutations_run"] >= 40
+    assert res["ok"] is True
+
+
+@pytest.mark.parametrize("mut", MUTATIONS, ids=lambda m: m.name)
+def test_mutation_flags_its_designated_codes(mut):
+    """Each mutation is caught with exactly the codes it designates, on
+    every schedule family it applies to."""
+    applied = 0
+    for sched in SCHEDULES:
+        ctx = make_context(sched)
+        if not mut.apply(ctx):
+            continue
+        applied += 1
+        rep = verify_context(ctx)
+        assert rep.has(*mut.expect), \
+            (sched, mut.name, sorted(rep.codes()))
+        assert not rep.ok
+    assert applied > 0
+
+
+def test_mutation_expected_codes_are_error_severity():
+    """Mutations inject unsound deployments, so every designated code
+    must carry error severity in the frozen code table."""
+    for mut in MUTATIONS:
+        for code in mut.expect:
+            assert CODES[code][0] is Severity.ERROR, (mut.name, code)
+
+
+# ------------------------------------------------------ diagnostics API
+
+def test_report_api_and_verification_error():
+    rep = Report()
+    assert rep.ok and rep.verdict == "clean"
+    rep.add("TAG202", "pressure", stage=1)
+    assert rep.ok and rep.verdict == "warn"
+    d = rep.add("TAG201", "over budget", stage=1, mb=3)
+    assert d.severity is Severity.ERROR
+    assert not rep.ok and rep.verdict == "error"
+    assert rep.has("TAG201", "TAG202") and not rep.has("TAG101")
+    s = rep.summary()
+    assert (s["errors"], s["warnings"], s["infos"]) == (1, 1, 0)
+    assert s["codes"] == ["TAG201", "TAG202"]
+    assert "TAG201" in rep.format() and "stage 1" in rep.format()
+    err = PlanVerificationError(rep, context="unit test")
+    assert "unit test" in str(err) and "TAG201" in str(err)
+    assert err.report is rep
+
+
+# ------------------------------------------------------------ preflight
+
+def test_preflight_clean_then_corrupt_schedule():
+    ctx = make_context("1f1b")
+    rep = verify_preflight(ctx.plan, ctx.order, ctx.n_micro,
+                           n_chunks=ctx.n_chunks,
+                           device_counts=[2, 2, 2, 2])
+    assert rep.ok, rep.format()
+    # drop one backward: coverage hole + unmatched boundary traffic
+    evs = ctx.order[2]
+    del evs[next(i for i, e in enumerate(evs) if e.kind == "B")]
+    rep2 = verify_preflight(ctx.plan, ctx.order, ctx.n_micro,
+                            n_chunks=ctx.n_chunks)
+    assert not rep2.ok
+    assert rep2.has("TAG104")
+
+
+def test_preflight_device_counts_override_plan():
+    """The engine passes the device-set sizes the run will actually
+    use; they override the plan's recorded counts."""
+    ctx = make_context("1f1b")
+    ctx.plan.stages[0].sync = "sfb"
+    rep = verify_preflight(ctx.plan, ctx.order, ctx.n_micro,
+                           device_counts=[1, 2, 2, 2])
+    assert rep.has("TAG302")          # SFB cannot run on one device
+    rep2 = verify_preflight(ctx.plan, ctx.order, ctx.n_micro,
+                            device_counts=[4, 2, 2, 2])
+    assert rep2.ok, rep2.format()
+
+
+# ------------------------------------------- planner service integration
+
+def _error_report():
+    rep = Report()
+    rep.add("TAG201", "injected by test: plan must not be cached")
+    return rep
+
+
+def test_planner_never_caches_error_plan(gg, topo, monkeypatch):
+    """Acceptance criterion: PlannerService refuses to cache a plan
+    carrying an error-severity diagnostic (even in warn mode)."""
+    import repro.service.planner as planner_mod
+    monkeypatch.setattr(planner_mod, "verify_deployment",
+                        lambda *a, **k: _error_report())
+    svc = PlannerService(verify="warn")
+    resp = svc.plan_graph(gg, topo, iterations=4)
+    assert resp.verify["verdict"] == "error"
+    assert "TAG201" in resp.verify["codes"]
+    assert len(svc.store) == 0            # never cached
+    st = svc.stats()
+    assert st["verify_error"] == 1 and st["verify_clean"] == 0
+
+
+def test_planner_reject_mode_raises(gg, topo, monkeypatch):
+    import repro.service.planner as planner_mod
+    monkeypatch.setattr(planner_mod, "verify_deployment",
+                        lambda *a, **k: _error_report())
+    svc = PlannerService(verify="reject")
+    with pytest.raises(PlanVerificationError) as ei:
+        svc.plan_graph(gg, topo, iterations=4)
+    assert "TAG201" in str(ei.value)
+    assert len(svc.store) == 0
+
+
+def test_planner_warn_mode_caches_clean_plan_with_verdict(gg, topo):
+    """Acceptance criterion: the plan the current search produces for a
+    real topology verifies with zero errors, gets cached with its
+    verdict in PlanRecord.meta, and a cache hit replays the verdict."""
+    svc = PlannerService(verify="warn")
+    resp = svc.plan_graph(gg, topo, iterations=8)
+    assert resp.verify is not None
+    assert resp.verify["errors"] == 0
+    assert resp.verify["verdict"] in ("clean", "warn")
+    assert len(svc.store) == 1
+    rec = svc.store.get(resp.graph_fp, resp.topo_fp)
+    assert rec.meta["verify"] == resp.verify
+    resp2 = svc.plan_graph(gg, topo, iterations=8)
+    assert resp2.source == "hit"
+    assert resp2.verify == resp.verify
+    st = svc.stats()
+    assert st["verify_clean"] + st["verify_warn"] == 1   # hit skips verify
+    assert "planner_verify_total" in svc.metrics.to_prometheus()
+    assert "planner_verify_seconds" in svc.metrics.to_prometheus()
+
+
+def test_planner_verify_off_skips_verification(gg, topo):
+    svc = PlannerService(verify="off")
+    resp = svc.plan_graph(gg, topo, iterations=4)
+    assert resp.verify is None
+    assert len(svc.store) == 1            # off: cached without a verdict
+    assert svc.stats()["verify_clean"] == 0
+
+
+def test_planner_rejects_bad_verify_mode():
+    with pytest.raises(ValueError):
+        PlannerService(verify="strict")
+
+
+# ------------------------------------------------------------------ CLI
+
+def test_cli_verify_selftest_gate():
+    """``repro-plan verify --selftest`` is the CI soundness gate: exit 0
+    with ok=true JSON."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.service.cli", "verify",
+         "--selftest"],
+        capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH=SRC), timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout)
+    assert res["ok"] is True and res["missed"] == []
