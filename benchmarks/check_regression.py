@@ -63,6 +63,14 @@ METRICS = {
         ("serve.ok", "true", 0.0),
         ("collector.roundtrip_ok", "true", 0.0),
         ("collector.emit_under_50us_per_event", "true", 0.0),
+        # run-health smoke (benchmarks.health_smoke merges these in):
+        # the straggler scenario's attribution, paging, replan ordering
+        # and per-event analyzer tax
+        ("health.warm_quiet", "true", 0.0),
+        ("health.attribution_ok", "true", 0.0),
+        ("health.alert_fired", "true", 0.0),
+        ("health.replan_ordering_ok", "true", 0.0),
+        ("health.ingest_under_50us_per_event", "true", 0.0),
     ],
     "BENCH_policy.json": [
         ("tiny_win_count", "higher", 0.0),

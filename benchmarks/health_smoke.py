@@ -1,0 +1,198 @@
+"""CI smoke for the run-health analyzer (obs.health / obs.alerts).
+
+Replays the PR's acceptance scenario end to end and gates it: two
+pipelined workloads stream step records into one telemetry dir; after a
+healthy warm-up phase, workload A's TRUE topology gets its stage-1 ->
+stage-2 forward link slowed 3x (directional — the reverse link keeps
+nominal bandwidth) while the analyzer holds only the NOMINAL predicted
+timelines. Gated booleans, merged into ``results/BENCH_overhead.json``
+(run AFTER ``serve_smoke``, read-modify-write) and enforced by
+``check_regression.py``:
+
+  * ``attribution_ok``   — /runs-level health names the slowed edge:
+    dominant residual cause ``link``, key ``1->2``, and the straggler
+    ranking (normalized slowdown + hysteresis) agrees;
+  * ``alert_fired``      — the page-severity burn-rate rule transitions
+    to firing on the SLO tracker BEFORE the recalibration loop runs its
+    replan pass over the drifted records;
+  * ``replan_ordering_ok`` — the loop drains workload A's watched
+    (graph_fp, topo_fp) key before un-drifted workload B's;
+  * ``ingest_under_50us_per_event`` — analyzer cost per ingested
+    timeline event stays under 50µs (raw µs recorded for the artifact).
+"""
+from __future__ import annotations
+
+import copy
+import json
+import os
+import tempfile
+
+from benchmarks.common import fmt_row
+from repro.core.device import testbed
+from repro.core.graph import CompGraph, OpNode, group_graph
+from repro.core.strategy import Action, Option, Strategy
+from repro.exec.replay import execute_pipeline
+from repro.exec.schedule import make_schedule, simulate_schedule
+from repro.exec.stages import build_stage_plan
+from repro.obs.health import RunHealthAnalyzer
+from repro.runtime.feedback import RecalibrationLoop
+from repro.runtime.telemetry import MeasurementStore
+from repro.service.fingerprint import (
+    fingerprint_grouped_cached, fingerprint_topology)
+from repro.service.planner import PlannerService
+
+RESULTS = os.path.join("results", "BENCH_overhead.json")
+
+WARMUP_STEPS = 4
+STRAGGLER_STEPS = 6
+SLOWDOWN = 3.0
+
+
+def _chain_gg(n_ops: int, n_groups: int, edge_bytes: float = 4e6):
+    g = CompGraph(name=f"chain{n_ops}")
+    for i in range(n_ops):
+        g.add_node(OpNode(i, f"op{i}", "dot_general",
+                          flops=1e9 * (1 + i % 3), bytes_out=edge_bytes,
+                          param_bytes=4e5, grad_bytes=4e5,
+                          is_grad_producer=True))
+        if i:
+            g.add_edge(i - 1, i, edge_bytes)
+    return group_graph(g, {i: i * n_groups // n_ops for i in range(n_ops)})
+
+
+def _pipeline(gg, topo, n_micro: int = 8):
+    strat = Strategy([Action((0, 1, 5), Option.PIPE) if i % 2 == 0
+                      else Action((0, 1, 5), Option.PS)
+                      for i in range(gg.n)])
+    plan = build_stage_plan(gg, strat, topo, n_micro=n_micro)
+    assert plan is not None and plan.n_stages >= 3
+    tl = simulate_schedule(plan, topo, make_schedule(
+        "1f1b", plan.n_stages, plan.n_micro))
+    return plan, tl
+
+
+def run_health_smoke() -> dict:
+    tmp = tempfile.mkdtemp(prefix="health_smoke_")
+    tele = os.path.join(tmp, "telemetry")
+    topo = testbed()
+    ggA, ggB = _chain_gg(12, 6), _chain_gg(10, 5)
+    planA, tlA = _pipeline(ggA, topo)
+    planB, tlB = _pipeline(ggB, topo)
+    keyA = (fingerprint_grouped_cached(ggA), fingerprint_topology(topo))
+    keyB = (fingerprint_grouped_cached(ggB), fingerprint_topology(topo))
+
+    svc = PlannerService(cache_dir=os.path.join(tmp, "plans"),
+                         telemetry_dir=tele)
+    store = MeasurementStore(tele)
+    analyzer = RunHealthAnalyzer(MeasurementStore(tele))
+    analyzer.watch("runA", timeline=tlA, slo_s=tlA.makespan * 1.05,
+                   graph_fp=keyA[0], topo_fp=keyA[1])
+    analyzer.watch("runB", timeline=tlB, slo_s=tlB.makespan * 1.5,
+                   graph_fp=keyB[0], topo_fp=keyB[1])
+    loop = RecalibrationLoop(svc, interval_s=0.1, iterations=8,
+                             health=analyzer)
+    loop.watch(ggA, topo)
+    loop.watch(ggB, topo)
+
+    def emit(rid, gg, plan, true, step):
+        rec, _ = execute_pipeline(
+            plan, true, schedule="1f1b", step=step,
+            graph_fp=fingerprint_grouped_cached(gg),
+            topo_fp=fingerprint_topology(topo), meta={"run_id": rid})
+        store.append(rec)
+
+    # phase 1: both workloads healthy on the nominal topology
+    for step in range(WARMUP_STEPS):
+        emit("runA", ggA, planA, topo, step)
+        emit("runB", ggB, planB, topo, step)
+    loop.poll_once()
+    warm = analyzer.health("runA")
+    warm_quiet = (not warm["stragglers"] and
+                  all(a["state"] == "ok" for a in warm["alerts"]))
+
+    # phase 2: slow workload A's stage1->2 forward link 3x, keep B honest
+    trueA = copy.deepcopy(topo)
+    g1 = planA.stages[1].device_group
+    g2 = planA.stages[2].device_group
+    trueA.inter_bw[g1, g2] /= SLOWDOWN
+    for step in range(WARMUP_STEPS, WARMUP_STEPS + STRAGGLER_STEPS):
+        emit("runA", ggA, planA, trueA, step)
+        emit("runB", ggB, planB, topo, step)
+
+    # the analyzer sees the straggler and pages BEFORE the loop replans
+    analyzer.poll()
+    h = analyzer.health("runA")
+    attribution_ok = (
+        h["dominant"]["cause"] == "link" and
+        h["dominant"]["key"] == "1->2" and
+        [s["key"] for s in h["stragglers"]] == ["1->2"])
+    alerts = analyzer.alerts()
+    alert_fired = bool(alerts) and (
+        alerts[0]["run_id"] == "runA" and
+        alerts[0]["severity"] == "page" and
+        alerts[0]["state"] == "firing")
+
+    # now the replan pass: the drifted key must drain first
+    loop.poll_once()
+    order = loop.stats()["last_order"]
+    replan_ordering_ok = (
+        order[:2] == [[keyA[0][:12], keyA[1][:12]],
+                      [keyB[0][:12], keyB[1][:12]]])
+
+    stats = analyzer.stats()
+    ingest_us = stats["ingest_us_per_event"]
+    return {
+        "warmup_steps": WARMUP_STEPS, "straggler_steps": STRAGGLER_STEPS,
+        "slowdown": SLOWDOWN,
+        "warm_quiet": bool(warm_quiet),
+        "step_ratio": h["step_ratio"],
+        "dominant": h["dominant"],
+        "link_ratio": h["links"]["1->2"]["ratio"],
+        "attribution_ok": bool(attribution_ok),
+        "alert_fired": bool(alert_fired),
+        "replan_ordering_ok": bool(replan_ordering_ok),
+        "records_ingested": stats["records"],
+        "ingest_us_per_event": ingest_us,
+        "ingest_under_50us_per_event": bool(ingest_us < 50.0),
+    }
+
+
+def main() -> dict:
+    health = run_health_smoke()
+
+    # merge into the shared overhead artifact (fig8 --overhead, then
+    # serve_smoke, then this — read-modify-write, never clobber)
+    doc = {}
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            doc = json.load(f)
+    doc["health"] = health
+    os.makedirs("results", exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+
+    print("health_smoke,section,metric,value")
+    print(fmt_row("health_smoke", "warm_quiet", health["warm_quiet"]))
+    print(fmt_row("health_smoke", "step_ratio",
+                  f"{health['step_ratio']:.3f}"))
+    print(fmt_row("health_smoke", "dominant",
+                  f"{health['dominant']['cause']}:{health['dominant']['key']}"))
+    print(fmt_row("health_smoke", "link_ratio",
+                  f"{health['link_ratio']:.2f}"))
+    print(fmt_row("health_smoke", "attribution_ok",
+                  health["attribution_ok"]))
+    print(fmt_row("health_smoke", "alert_fired", health["alert_fired"]))
+    print(fmt_row("health_smoke", "replan_ordering_ok",
+                  health["replan_ordering_ok"]))
+    print(fmt_row("health_smoke", "ingest_us_per_event",
+                  f"{health['ingest_us_per_event']:.2f}"))
+    assert health["warm_quiet"], health
+    assert health["attribution_ok"], health
+    assert health["alert_fired"], health
+    assert health["replan_ordering_ok"], health
+    assert health["ingest_under_50us_per_event"], health
+    return doc
+
+
+if __name__ == "__main__":
+    main()

@@ -5,11 +5,13 @@ Two sections, merged into ``results/BENCH_overhead.json`` (run AFTER
 ``check_regression.py``:
 
   * ``serve``     — launches the real ``repro-plan serve-metrics``
-    subprocess on an ephemeral port, scrapes ``/metrics`` (validated
-    through ``parse_prometheus_text`` — HELP/TYPE lines, label escaping,
-    histogram series), ``/healthz``, ``/plans`` and the merged
-    ``/traces/<run_id>`` (schema-validated Chrome trace), then tears it
-    down with SIGINT and requires a clean exit;
+    subprocess on an ephemeral port (with ``--slo-ms`` so the run-health
+    analyzer is armed), scrapes ``/metrics`` (validated through
+    ``parse_prometheus_text`` — HELP/TYPE lines, label escaping,
+    histogram series), ``/healthz``, ``/plans`` (verify-diagnostic
+    schema), ``/runs``, ``/alerts`` and the merged ``/traces/<run_id>``
+    (schema-validated Chrome trace), then tears it down with SIGINT and
+    requires a clean exit;
   * ``collector`` — replays a pipelined step with and without spool
     emission (interleaved repeats, min-compared) to measure the
     collector tax, and round-trips the spooled shards through the
@@ -68,7 +70,7 @@ def run_serve_smoke() -> dict:
          "--port", "0", "--cache-dir", os.path.join(tmp, "plans"),
          "--telemetry-dir", os.path.join(tmp, "telemetry"),
          "--spool-dir", spool_dir, "--run-id", "smoke",
-         "--no-recalibrate"],
+         "--slo-ms", "250", "--no-recalibrate"],
         stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
     out = {"ok": False}
     try:
@@ -101,6 +103,16 @@ def run_serve_smoke() -> dict:
 
         plans = json.loads(_get(url + "/plans"))
         assert "store_size" in plans, plans
+        assert all("verify_diagnostics" in e for e in plans["plans"]), \
+            plans
+
+        # run-health plane is up (no runs yet — just schema + liveness)
+        runs = json.loads(_get(url + "/runs"))
+        assert runs == {"runs": []}, runs
+        alerts = json.loads(_get(url + "/alerts"))
+        assert alerts == {"alerts": []}, alerts
+        health_stats = health.get("run_health")
+        assert health_stats and health_stats["slo_s"] == 0.25, health
 
         trace = json.loads(_get(url + "/traces/smoke"))
         validate_chrome_trace(trace)

@@ -84,6 +84,13 @@ def _export_spans(args):
           flush=True)
 
 
+def _run_id(args) -> str:
+    """One run id for the whole job: groups the spool shard under
+    /traces/<run_id> AND the telemetry records under /runs/<run_id> on
+    the health analyzer side."""
+    return getattr(args, "run_id", "") or f"train-{args.arch}"
+
+
 def _make_spool(args):
     """``--spool-dir``: a ``SpoolWriter`` shard for this training
     process, feeding the cross-process trace collector (``repro-plan
@@ -93,8 +100,7 @@ def _make_spool(args):
     if not spool_dir:
         return None
     from repro.obs.collector import SpoolWriter
-    run_id = getattr(args, "run_id", "") or f"train-{args.arch}"
-    return SpoolWriter(spool_dir, run_id=run_id, name="train",
+    return SpoolWriter(spool_dir, run_id=_run_id(args), name="train",
                        meta={"arch": args.arch})
 
 
@@ -169,7 +175,7 @@ def run_pipeline(args, cfg, stage_plan):
         n_chunks=n_chunks, mb_keys=mb_keys, tied_ref=tied, store=store,
         spool=spool,
         meta={"arch": args.arch, "batch": args.batch, "seq": args.seq,
-              "launcher": "train"})
+              "launcher": "train", "run_id": _run_id(args)})
 
     opt = AdamW(lr=args.lr)
     params_list = runner.place_params(stage_params)
@@ -301,6 +307,7 @@ def main(argv=None):
     ap.add_argument("--run-id", default="",
                     help="run id grouping this job's spool shard with "
                          "other processes' shards in /traces/<run_id> "
+                         "and its telemetry under /runs/<run_id> "
                          "(default: train-<arch>)")
     ap.add_argument("--xla-profile", action="store_true",
                     help="wrap one post-warmup step in a jax.profiler "
@@ -372,7 +379,8 @@ def main(argv=None):
         from repro.runtime.telemetry import MeasurementStore, StepTimer
         timer = StepTimer(MeasurementStore(args.telemetry_dir),
                           meta={"arch": args.arch, "batch": args.batch,
-                                "seq": args.seq, "launcher": "train"})
+                                "seq": args.seq, "launcher": "train",
+                                "run_id": _run_id(args)})
         step_fn = steps_mod.instrument_step(step_fn, timer)
 
     # profile one post-warmup step (the first is compile-dominated)

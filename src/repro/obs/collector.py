@@ -322,6 +322,14 @@ class TraceCollector:
             return sorted({sh.run_id for sh in self._shards.values()
                            if sh.spans or sh.anchor is not None})
 
+    def span_count(self, run_id: str | None = None) -> int:
+        """Merged span records for one run (all when None) — the cheap
+        size probe the server uses to pick buffered vs streamed trace
+        responses."""
+        with self._lock:
+            return sum(len(sh.spans) for sh in self._shards.values()
+                       if run_id is None or sh.run_id == run_id)
+
     def counts(self) -> dict:
         with self._lock:
             shards = list(self._shards.values())
@@ -383,3 +391,32 @@ class TraceCollector:
         doc = chrome_trace(events, spool_dir=self.spool_dir,
                            run_id=run_id, **metadata)
         return validate_chrome_trace(doc)
+
+    def chrome_stream(self, run_id: str | None = None, *,
+                      chunk_events: int = 512, **metadata):
+        """Incrementally-serialized Chrome trace: a generator of JSON
+        text fragments that concatenate to the same document ``chrome``
+        returns. ``json.dumps`` of a whole merged trace costs several
+        times the span list's own footprint in one allocation; this
+        serializes ``chunk_events`` events at a time so the server's
+        extra memory per in-flight response is bounded by the chunk,
+        not the run. Raises ``KeyError`` (before yielding anything) for
+        a run with no spooled events."""
+        events = self.trace_events(run_id)
+        if not events:
+            raise KeyError(f"no spooled events for run {run_id!r} in "
+                           f"{self.spool_dir}")
+
+        def gen():
+            head = {"spool_dir": self.spool_dir, "run_id": run_id,
+                    **metadata}
+            yield ('{"displayTimeUnit": "ms", "otherData": '
+                   + json.dumps(head, default=str)
+                   + ', "traceEvents": [')
+            for i in range(0, len(events), max(chunk_events, 1)):
+                block = events[i:i + max(chunk_events, 1)]
+                prefix = "" if i == 0 else ","
+                yield prefix + ",".join(
+                    json.dumps(e, default=str) for e in block)
+            yield "]}"
+        return gen()

@@ -67,6 +67,19 @@ class Metric:
         with self._lock:
             return dict(self._series)
 
+    def remove(self, **labels) -> int:
+        """Drop every series whose label set contains all the given
+        pairs; returns how many were removed. Long-lived registries
+        (the served plane) use this to retire series for runs the
+        health analyzer has evicted, so label cardinality tracks live
+        runs instead of growing forever."""
+        want = {(str(k), str(v)) for k, v in labels.items()}
+        with self._lock:
+            doomed = [k for k in self._series if want <= set(k)]
+            for k in doomed:
+                del self._series[k]
+        return len(doomed)
+
 
 class Counter(Metric):
     """Monotonically increasing counter (per label set)."""

@@ -201,6 +201,34 @@ def validate_chrome_trace(doc) -> dict:
     return doc
 
 
+def aggregate_events(events: list) -> dict:
+    """Reduce a normalized executed-event list (``executed_events_of``)
+    to the per-key busy sums the run-health analyzer rolls over:
+
+      * ``stage``: compute seconds (F/B/W) by stage id;
+      * ``link``:  transfer seconds (X) by directed ``"src->dst"`` stage
+        edge (``"?->dst"`` when the producer did not record a src);
+      * ``span``:  (earliest start, latest finish) across all events.
+    """
+    stage: dict = {}
+    link: dict = {}
+    t0, t1 = float("inf"), float("-inf")
+    for e in events:
+        dur = e["finish"] - e["start"]
+        t0 = min(t0, e["start"])
+        t1 = max(t1, e["finish"])
+        if e["kind"] == "X":
+            src = e.get("src", -1)
+            key = f"{src if src >= 0 else '?'}->{e['stage']}"
+            link[key] = link.get(key, 0.0) + dur
+        else:
+            s = int(e["stage"])
+            stage[s] = stage.get(s, 0.0) + dur
+    if not events:
+        t0 = t1 = 0.0
+    return {"stage": stage, "link": link, "span": (t0, t1)}
+
+
 # ------------------------------------------------------------ diff report
 
 def _key(e) -> tuple:

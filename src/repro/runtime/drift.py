@@ -26,13 +26,18 @@ class DriftReport:
     threshold: float
     n_obs: int
     drifted: bool
+    # attributed root cause of a drifted verdict, stamped by the
+    # recalibration path from the run-health analyzer:
+    # {"cause": "stage"|"link"|"sync", "key", "residual_s", ...}.
+    # None when no analyzer observed the drifting run.
+    cause: dict | None = None
 
     def to_dict(self) -> dict:
         return {"graph_fp": self.graph_fp, "topo_fp": self.topo_fp,
                 "simulated": self.simulated, "observed": self.observed,
                 "ewma": self.ewma, "drift": self.drift,
                 "threshold": self.threshold, "n_obs": self.n_obs,
-                "drifted": self.drifted}
+                "drifted": self.drifted, "cause": self.cause}
 
 
 @dataclass

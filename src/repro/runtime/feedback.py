@@ -178,18 +178,38 @@ class RecalibrationLoop:
     profile is refit from the watched workload's accumulated telemetry
     and published as gauges (``profile_metrics``), so /metrics always
     shows the currently-fitted cluster state.
+
+    Backlog control is two-tier: the whole poll is capped at
+    ``max_batch`` records (oldest dropped,
+    ``recalib_records_total{outcome="dropped"}``), then each watched
+    key keeps only its newest ``max_per_key`` records — older
+    duplicates of the same workload only re-smooth the same EWMA, so
+    shedding them (``recalib_backlog_shed_total``) bounds a flooded
+    telemetry dir's poll cost without losing any key's newest signal.
+    ``recalib_backlog_depth`` gauges the pre-shed backlog per poll.
+
+    ``health`` (a ``repro.obs.health.RunHealthAnalyzer``) upgrades the
+    loop from arrival-order to severity-order: watched keys drain in
+    descending ``replan_priority()`` score, so when several workloads
+    drift at once the worst-deviating one replans FIRST, and each
+    replanned verdict is stamped with the analyzer's attributed cause
+    (``DriftReport.cause`` + ``PlanRecord.meta["drift_cause"]``).
     """
 
     def __init__(self, service, *, interval_s: float = 5.0,
                  iterations: int = 20, seed: int = 0,
-                 enable_sfb: bool = True, max_batch: int = 256):
+                 enable_sfb: bool = True, max_batch: int = 256,
+                 max_per_key: int = 32, health=None):
         self.service = service
         self.interval_s = float(interval_s)
         self.iterations = int(iterations)
         self.seed = int(seed)
         self.enable_sfb = bool(enable_sfb)
         self.max_batch = int(max_batch)
+        self.max_per_key = max(int(max_per_key), 1)
+        self.health = health
         self._watched: dict = {}            # (graph_fp, topo_fp) -> (gg, t)
+        self._last_order: list = []         # key drain order of last poll
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._lock = threading.Lock()       # one poll at a time
@@ -207,6 +227,13 @@ class RecalibrationLoop:
         self._m_watched = reg.gauge(
             "recalib_watched_workloads",
             "(graph, topology) pairs registered for replanning")
+        self._m_backlog = reg.gauge(
+            "recalib_backlog_depth",
+            "records found waiting at the start of the latest poll")
+        self._m_shed = reg.counter(
+            "recalib_backlog_shed_total",
+            "stale per-key records shed before processing (oldest "
+            "first; each key keeps its newest max_per_key)")
 
     # ------------------------------------------------------------- control
     def watch(self, gg, topo) -> tuple:
@@ -250,37 +277,101 @@ class RecalibrationLoop:
     # ------------------------------------------------------------ polling
     def poll_once(self) -> list:
         """Drain newly appended records once; returns the
-        ``FeedbackResult``s of processed (watched) records."""
+        ``FeedbackResult``s of processed (watched) records, in the
+        order they were processed (priority order when a health
+        analyzer is attached)."""
         with self._lock:
             store = self.service.measurements
             recs = store.read_new()
             self._m_polls.inc()
             self._m_last.set(time.time())
+            self._m_backlog.set(len(recs))
             results = []
             touched: set = set()
             if len(recs) > self.max_batch:   # never replay an unbounded
                 self._m_records.inc(len(recs) - self.max_batch,
                                     outcome="dropped")    # backlog silently
-            for rec in recs[-self.max_batch:]:
-                pair = self._watched.get((rec.graph_fp, rec.topo_fp))
-                if pair is None:
+                recs = recs[-self.max_batch:]
+            if self.health is not None:
+                # keep the analyzer's view fresh BEFORE ordering keys.
+                # An analyzer with its own store cursor drains it; a
+                # feed-only analyzer rides this poll's records.
+                if getattr(self.health, "store", None) is not None:
+                    self.health.poll()
+                else:
+                    for rec in recs:
+                        try:
+                            self.health.ingest(rec)
+                        except Exception:
+                            pass             # health is advisory, never
+                                             # blocks recalibration
+            by_key: dict = {}               # key -> records, oldest first
+            for rec in recs:
+                key = (rec.graph_fp, rec.topo_fp)
+                if key not in self._watched:
                     self._m_records.inc(outcome="unwatched")
                     continue
-                gg, topo = pair
-                try:
-                    res = self.service.observe(
-                        gg, topo, rec, iterations=self.iterations,
-                        seed=self.seed, enable_sfb=self.enable_sfb,
-                        append=False)
-                except Exception:
-                    self._m_records.inc(outcome="error")
-                    continue
-                self._m_records.inc(outcome=res.kind)
-                touched.add((rec.graph_fp, rec.topo_fp))
-                results.append(res)
+                by_key.setdefault(key, []).append(rec)
+            # per-key shedding: EWMA smoothing means only the newest
+            # records of a flooded key carry signal — keep those
+            for key, krecs in by_key.items():
+                if len(krecs) > self.max_per_key:
+                    shed = len(krecs) - self.max_per_key
+                    self._m_shed.inc(shed)
+                    self._m_records.inc(shed, outcome="shed")
+                    by_key[key] = krecs[-self.max_per_key:]
+            order = sorted(by_key, key=self._priority, reverse=True)
+            self._last_order = list(order)
+            for key in order:
+                gg, topo = self._watched[key]
+                for rec in by_key[key]:
+                    try:
+                        res = self.service.observe(
+                            gg, topo, rec, iterations=self.iterations,
+                            seed=self.seed, enable_sfb=self.enable_sfb,
+                            append=False)
+                    except Exception:
+                        self._m_records.inc(outcome="error")
+                        continue
+                    self._m_records.inc(outcome=res.kind)
+                    touched.add(key)
+                    if res.kind == "replanned":
+                        self._annotate_cause(key, res)
+                    results.append(res)
             for key in touched:
                 self._publish_calibration(key, store)
             return results
+
+    def _priority(self, key: tuple) -> tuple:
+        """Drain order for a watched key: health-attributed deviation
+        first (worst drift replans before any un-drifted workload),
+        fingerprints as a deterministic tiebreak."""
+        score = 0.0
+        if self.health is not None:
+            try:
+                score = self.health.replan_priority().get(key, 0.0)
+            except Exception:
+                score = 0.0
+        return (score, key[0], key[1])
+
+    def _annotate_cause(self, key: tuple, res):
+        """Stamp the analyzer's attributed cause onto a replanned
+        verdict: the DriftReport carries it back to the caller and the
+        refreshed PlanRecord persists it in ``meta["drift_cause"]``."""
+        if self.health is None:
+            return
+        try:
+            cause = self.health.attributed_cause(*key)
+        except Exception:
+            return
+        if not cause:
+            return
+        if res.report is not None:
+            res.report.cause = cause
+        rec = self.service.store.get(*key)
+        if rec is not None:
+            rec.meta["drift_cause"] = cause
+            self.service.store.put(rec)
 
     def _publish_calibration(self, key: tuple, store: MeasurementStore):
         """Refit + publish calibration gauges for one watched workload."""
@@ -302,5 +393,9 @@ class RecalibrationLoop:
                 "records": {
                     k: self._m_records.value(outcome=k)
                     for k in ("ok", "replanned", "no_plan", "unwatched",
-                              "error")},
+                              "error", "shed", "dropped")},
+                "backlog_depth": self._m_backlog.value(),
+                "shed_total": self._m_shed.value(),
+                "last_order": [[k[0][:12], k[1][:12]]
+                               for k in self._last_order],
                 "last_poll_unixtime": self._m_last.value()}

@@ -10,6 +10,8 @@
         --telemetry-dir .telemetry --save profile.json
     python -m repro.service.cli drift --model vgg19 --topo testbed \
         --observed-time 0.31 --cache-dir .plans
+    python -m repro.service.cli health --telemetry-dir .telemetry \
+        --slo-ms 350
     python -m repro.service.cli policy train --models bert_small vgg19 \
         --name corpus-a --steps 16 --cache-dir .plans
     python -m repro.service.cli policy list --cache-dir .plans
@@ -425,18 +427,22 @@ def cmd_metrics(args) -> int:
 
 def cmd_serve_metrics(args) -> int:
     """Run the live observability plane: /metrics, /healthz,
-    /traces/<run_id>, /plans — plus (unless ``--no-recalibrate``) the
-    background recalibration loop polling the telemetry dir and
-    replanning watched workloads on drift."""
+    /traces/<run_id>, /plans, /runs, /alerts — plus (unless
+    ``--no-recalibrate``) the background recalibration loop polling the
+    telemetry dir and replanning watched workloads on drift, ordered by
+    the health analyzer's attribution."""
     import time as time_mod
 
+    from repro.obs.alerts import load_rules
     from repro.obs.collector import SpoolWriter, TraceCollector
+    from repro.obs.health import RunHealthAnalyzer
     from repro.obs.server import ObsServer
+    from repro.runtime.telemetry import MeasurementStore
 
     svc = PlannerService(cache_dir=args.cache_dir,
                          telemetry_dir=args.telemetry_dir or None,
                          drift_threshold=args.threshold)
-    spool = collector = loop = None
+    spool = collector = loop = analyzer = None
     if args.spool_dir:
         spool = SpoolWriter(args.spool_dir, run_id=args.run_id,
                             name="planner")
@@ -445,28 +451,41 @@ def cmd_serve_metrics(args) -> int:
         # the merged trace
         from repro.obs.spans import get_tracer
         get_tracer().enable()
+    if not args.no_health:
+        rules = load_rules(args.alert_rules) if args.alert_rules else None
+        hstore = MeasurementStore(args.telemetry_dir) \
+            if args.telemetry_dir else None
+        analyzer = RunHealthAnalyzer(
+            hstore, registry=svc.metrics,
+            slo_s=args.slo_ms / 1000.0 if args.slo_ms else None,
+            slo_objective=args.slo_objective, alert_rules=rules)
     watched = None
     if not args.no_recalibrate:
         from repro.runtime.feedback import RecalibrationLoop
         loop = RecalibrationLoop(svc, interval_s=args.interval,
-                                 iterations=args.iterations)
+                                 iterations=args.iterations,
+                                 health=analyzer)
         if args.model:
             watched = loop.watch(_build_grouped(args),
                                  _build_topology(args.topo))
     server = ObsServer(registry=svc.metrics, service=svc,
                        collector=collector, spool=spool, recalib=loop,
-                       host=args.host, port=args.port,
+                       health=analyzer, host=args.host, port=args.port,
                        spool_max_age_s=args.spool_max_age,
                        spool_max_bytes=args.spool_max_bytes)
     server.start()
     print(json.dumps({
         "url": server.url,
-        "endpoints": ["/metrics", "/healthz", "/plans", "/traces",
-                      "/traces/<run_id>"],
+        "endpoints": ["/metrics", "/healthz", "/plans",
+                      "/plans/<fingerprint>/verify", "/traces",
+                      "/traces/<run_id>", "/runs",
+                      "/runs/<run_id>/health", "/alerts"],
         "cache_dir": args.cache_dir,
         "telemetry_dir": args.telemetry_dir or None,
         "spool_dir": args.spool_dir or None,
         "recalibrate": loop is not None,
+        "health": analyzer is not None,
+        "slo_ms": args.slo_ms or None,
         "watched": list(watched) if watched else None,
     }, indent=2), flush=True)
     try:
@@ -479,6 +498,59 @@ def cmd_serve_metrics(args) -> int:
         pass
     finally:
         server.stop()
+    return 0
+
+
+def cmd_health(args) -> int:
+    """Run-health snapshot: per-run residual attribution, straggler
+    ranking, SLO burn rates and alert states. ``--url`` reads a running
+    ``serve-metrics`` server (/runs, /runs/<id>/health, /alerts);
+    otherwise a local ``RunHealthAnalyzer`` drains the telemetry dir
+    once and renders the same view."""
+    if args.url:
+        import urllib.request
+        base = args.url.rstrip("/")
+
+        def _get(path):
+            with urllib.request.urlopen(base + path, timeout=30) as r:
+                return json.loads(r.read().decode("utf-8"))
+
+        runs = _get("/runs")
+        out = {"url": base, "runs": runs, "alerts": _get("/alerts")}
+        if args.run_id:
+            out["health"] = _get(f"/runs/{args.run_id}/health")
+        else:
+            out["health"] = {
+                r["run_id"]: _get(f"/runs/{r['run_id']}/health")
+                for r in runs.get("runs", [])}
+        print(json.dumps(out, indent=2))
+        return 0
+
+    from repro.obs.alerts import load_rules
+    from repro.obs.health import RunHealthAnalyzer
+    from repro.runtime.telemetry import MeasurementStore
+    rules = load_rules(args.alert_rules) if args.alert_rules else None
+    analyzer = RunHealthAnalyzer(
+        MeasurementStore(args.telemetry_dir),
+        slo_s=args.slo_ms / 1000.0 if args.slo_ms else None,
+        slo_objective=args.slo_objective, alert_rules=rules)
+    n = analyzer.poll()
+    if n == 0:
+        print(json.dumps({"error": "no telemetry records",
+                          "telemetry_dir": args.telemetry_dir}))
+        return 1
+    out = {"telemetry_dir": args.telemetry_dir, "ingested": n,
+           "runs": analyzer.run_summaries(),
+           "alerts": analyzer.alerts(),
+           "stats": analyzer.stats()}
+    ids = [args.run_id] if args.run_id else analyzer.run_ids()
+    try:
+        out["health"] = {rid: analyzer.health(rid) for rid in ids}
+    except KeyError:
+        print(json.dumps({"error": f"unknown run {args.run_id!r}",
+                          "runs": analyzer.run_ids()}))
+        return 1
+    print(json.dumps(out, indent=2))
     return 0
 
 
@@ -652,7 +724,35 @@ def main(argv=None) -> int:
     p.add_argument("--duration", type=float, default=0.0,
                    help="serve for SECONDS then exit (0: until "
                         "interrupted) — CI smoke uses this")
+    p.add_argument("--slo-ms", type=float, default=None,
+                   help="step-time SLO target in milliseconds; arms "
+                        "burn-rate alerting on /alerts")
+    p.add_argument("--slo-objective", type=float, default=0.99,
+                   help="fraction of steps that must meet the target "
+                        "(error budget = 1 - objective)")
+    p.add_argument("--alert-rules", default=None, metavar="PATH",
+                   help="JSON AlertRule list overriding the default "
+                        "page/warn burn-rate pair")
+    p.add_argument("--no-health", action="store_true",
+                   help="disable the run-health analyzer (/runs, "
+                        "/alerts return 404)")
     p.set_defaults(fn=cmd_serve_metrics)
+
+    p = sub.add_parser("health",
+                       help="run-health snapshot: residual attribution, "
+                            "stragglers, SLO burn rates, alert states")
+    p.add_argument("--telemetry-dir", default=".telemetry",
+                   help="measurement log to drain (local mode)")
+    p.add_argument("--run-id", default=None,
+                   help="restrict the detail view to one run")
+    p.add_argument("--slo-ms", type=float, default=None)
+    p.add_argument("--slo-objective", type=float, default=0.99)
+    p.add_argument("--alert-rules", default=None, metavar="PATH")
+    p.add_argument("--url", default="",
+                   help="read /runs + /runs/<id>/health + /alerts from "
+                        "a running serve-metrics server instead of "
+                        "draining telemetry locally")
+    p.set_defaults(fn=cmd_health)
 
     p = sub.add_parser("policy",
                        help="train / list / pin registered GNN policies")

@@ -239,6 +239,7 @@ class PlannerService:
             self._stats["iterations"] += res.search.iterations_run
 
             verify_summary = None
+            verify_diagnostics = None
             verify_ok = True
             if self.verify_mode != "off":
                 t_verify = time.perf_counter()
@@ -247,6 +248,11 @@ class PlannerService:
                 self._m_verify_seconds.observe(
                     time.perf_counter() - t_verify)
                 verify_summary = report.summary()
+                # the full TAGxxx diagnostic list rides along in the
+                # cached record so the served plane (/plans,
+                # /plans/<fp>/verify) can show WHAT was flagged, not
+                # just how many
+                verify_diagnostics = report.to_dict()["diagnostics"]
                 verify_ok = report.ok
                 self._m_verify.inc(verdict=report.verdict)
                 self._stats["verify_" + report.verdict] += 1
@@ -276,6 +282,7 @@ class PlannerService:
                               "best_reward": res.search.best_reward,
                               "policy": policy_name,
                               "verify": verify_summary,
+                              "verify_diagnostics": verify_diagnostics,
                               "source": "warm" if prior is not None
                               else "cold"}))
             source = "warm" if prior is not None else "cold"
@@ -386,6 +393,28 @@ class PlannerService:
         s["metrics"] = self.metrics.to_dict()
         return s
 
+    def plan_entries(self) -> list:
+        """Per-plan rows for the served plane: fingerprints, timings,
+        the cached verify verdict summary AND the full TAGxxx
+        diagnostic list, plus the attributed drift cause when the
+        recalibration path has replanned the entry."""
+        out = []
+        for rec in self.store.records():
+            out.append({
+                "graph_fp": rec.graph_fp, "topo_fp": rec.topo_fp,
+                "n_groups": rec.n_groups, "topo_m": rec.topo_m,
+                "time_s": rec.time, "baseline_time_s": rec.baseline_time,
+                "speedup": rec.speedup,
+                "source": rec.meta.get("source"),
+                "policy": rec.meta.get("policy"),
+                "verify": rec.meta.get("verify"),
+                "verify_diagnostics":
+                    rec.meta.get("verify_diagnostics"),
+                "drift_cause": rec.meta.get("drift_cause"),
+            })
+        out.sort(key=lambda e: (e["graph_fp"], e["topo_fp"]))
+        return out
+
     # ------------------------------------------------- served observability
     def serve_metrics(self, *, host: str = "127.0.0.1", port: int = 0,
                       spool_dir: str | None = None,
@@ -393,31 +422,51 @@ class PlannerService:
                       interval_s: float = 5.0, iterations: int = 20,
                       spool_max_age_s: float | None = None,
                       spool_max_bytes: int | None = None,
+                      slo_s: float | None = None,
+                      alert_rules=None, health: bool = True,
                       start: bool = True):
         """Embed the live observability plane in this service.
 
         Returns a started ``repro.obs.server.ObsServer`` exposing this
-        service's registry on /metrics, store stats on /plans, and — when
-        ``spool_dir`` is given — the cross-process trace collector on
+        service's registry on /metrics, per-plan verify diagnostics on
+        /plans, run health on /runs + /alerts, and — when ``spool_dir``
+        is given — the cross-process trace collector on
         /traces/<run_id>, with this process's planner spans drained into
         its own spool shard on every scrape. ``recalibrate=True`` also
         attaches a ``RecalibrationLoop`` (its lifecycle follows the
         server's); register workloads for unattended replanning via
         ``server.recalib.watch(gg, topo)``.
+
+        ``health=True`` attaches a ``RunHealthAnalyzer`` draining the
+        service's telemetry dir with its OWN cursor (it never steals
+        the recalibration loop's records); ``slo_s``/``alert_rules``
+        arm step-time SLO burn-rate alerting, and the recalibration
+        loop replans drifted workloads in the analyzer's severity
+        order. Register predicted schedules via
+        ``server.health.watch(run_id, timeline=...)``.
         """
         from repro.obs.collector import SpoolWriter, TraceCollector
         from repro.obs.server import ObsServer
-        spool = collector = loop = None
+        spool = collector = loop = analyzer = None
         if spool_dir:
             spool = SpoolWriter(spool_dir, run_id=run_id, name="planner")
             collector = TraceCollector(spool_dir)
+        if health:
+            from repro.obs.health import RunHealthAnalyzer
+            from repro.runtime.telemetry import MeasurementStore
+            hstore = MeasurementStore(self._telemetry_dir) \
+                if self._telemetry_dir else None
+            analyzer = RunHealthAnalyzer(
+                hstore, registry=self.metrics, slo_s=slo_s,
+                alert_rules=alert_rules)
         if recalibrate:
             from repro.runtime.feedback import RecalibrationLoop
             loop = RecalibrationLoop(self, interval_s=interval_s,
-                                     iterations=iterations)
+                                     iterations=iterations,
+                                     health=analyzer)
         server = ObsServer(registry=self.metrics, service=self,
                            collector=collector, spool=spool, recalib=loop,
-                           host=host, port=port,
+                           health=analyzer, host=host, port=port,
                            spool_max_age_s=spool_max_age_s,
                            spool_max_bytes=spool_max_bytes)
         return server.start() if start else server

@@ -1,0 +1,478 @@
+"""Run-health analyzer + burn-rate alerting tests (repro.obs.health /
+repro.obs.alerts) and their recalibration-loop wiring
+(repro.runtime.feedback: priority ordering, backlog shedding, drift
+cause annotation).
+
+The straggler scenario mirrors the acceptance criterion: a pipelined
+workload executes on a TRUE topology whose stage-1 -> stage-2 link runs
+at 1/3 bandwidth while the analyzer holds the NOMINAL predicted
+timeline — the dominant residual must name that link, the flagged
+straggler must survive hysteresis, the SLO page must fire, and the
+recalibration loop must replan the afflicted workload before the
+healthy one.
+"""
+import copy
+import json
+import types
+
+import pytest
+
+from repro.core.device import testbed as make_testbed
+from repro.core.graph import CompGraph, OpNode, group_graph
+from repro.core.strategy import Action, Option, Strategy
+from repro.exec.replay import execute_pipeline
+from repro.exec.schedule import make_schedule, simulate_schedule
+from repro.exec.stages import build_stage_plan
+from repro.obs.alerts import (
+    AlertEvaluator, AlertRule, SLOTracker, default_rules, load_rules,
+    parse_rules)
+from repro.obs.health import RunHealthAnalyzer
+from repro.obs.metrics import MetricsRegistry, parse_prometheus_text
+from repro.runtime.feedback import RecalibrationLoop
+from repro.runtime.telemetry import MeasurementStore, StepRecord
+from repro.service.planner import PlannerService
+
+
+def _chain_gg(n_ops=12, n_groups=6, edge_bytes=4e6):
+    g = CompGraph(name=f"chain{n_ops}")
+    for i in range(n_ops):
+        g.add_node(OpNode(i, f"op{i}", "dot_general",
+                          flops=1e9 * (1 + i % 3), bytes_out=edge_bytes,
+                          param_bytes=4e5, grad_bytes=4e5,
+                          is_grad_producer=True))
+        if i:
+            g.add_edge(i - 1, i, edge_bytes)
+    return group_graph(g, {i: i * n_groups // n_ops for i in range(n_ops)})
+
+
+def _pipeline(gg, topo, n_micro=8):
+    strat = Strategy([Action((0, 1, 5), Option.PIPE) if i % 2 == 0
+                      else Action((0, 1, 5), Option.PS)
+                      for i in range(gg.n)])
+    plan = build_stage_plan(gg, strat, topo, n_micro=n_micro)
+    assert plan is not None and plan.n_stages >= 3
+    tl = simulate_schedule(plan, topo, make_schedule(
+        "1f1b", plan.n_stages, plan.n_micro))
+    return plan, tl
+
+
+def _slowed(topo, plan, factor=3.0):
+    """A TRUE topology with the stage1->stage2 forward link slowed."""
+    true = copy.deepcopy(topo)
+    g1 = plan.stages[1].device_group
+    g2 = plan.stages[2].device_group
+    true.inter_bw[g1, g2] /= factor
+    return true
+
+
+def _rec(run_id, step, wall, stages=None, pairs=None, ts=None):
+    """Synthetic sample-based StepRecord (no meta['events'])."""
+    compute = [{"stage": s, "time": t, "gpu_type": "V100", "flops": 1e9}
+               for s, t in (stages or {}).items()]
+    colls = [{"pair": p, "time": t, "kind": "xfer", "nbytes": 1,
+              "n_dev": 2, "nominal_bw": 1e9, "link": "p2p"}
+             for p, t in (pairs or {}).items()]
+    return StepRecord(step=step, wall_time=wall, compute=compute,
+                      collectives=colls, meta={"run_id": run_id},
+                      ts=ts if ts is not None else 1000.0 + step)
+
+
+# ------------------------------------------------------------ alert rules
+
+def test_alert_rule_validation():
+    with pytest.raises(ValueError):
+        AlertRule("x", "sev", 1.0, 100.0, 10.0)        # bad severity
+    with pytest.raises(ValueError):
+        AlertRule("x", "page", 0.0, 100.0, 10.0)       # burn <= 0
+    with pytest.raises(ValueError):
+        AlertRule("x", "page", 1.0, 10.0, 100.0)       # short > long
+    r = AlertRule("x", "warn", 3.0, 100.0, 10.0)
+    assert AlertRule.from_dict(r.to_dict()) == r
+
+
+def test_parse_rules_schema(tmp_path):
+    rules = parse_rules(json.dumps([r.to_dict() for r in default_rules()]))
+    assert [r.name for r in rules] == ["slo_fast_burn", "slo_slow_burn"]
+    with pytest.raises(ValueError):
+        parse_rules("not json")
+    with pytest.raises(ValueError):
+        parse_rules("[]")                              # empty list
+    with pytest.raises(ValueError):
+        parse_rules('{"name": "x"}')                   # not a list
+    with pytest.raises(ValueError):
+        parse_rules('[{"name": "x"}]')                 # missing fields
+    dup = [default_rules()[0].to_dict()] * 2
+    with pytest.raises(ValueError):
+        parse_rules(json.dumps(dup))
+    p = tmp_path / "rules.json"
+    p.write_text(json.dumps([
+        {"name": "solo", "severity": "page", "burn_rate": 2.0,
+         "long_window_s": 60.0, "short_window_s": 30.0}]))
+    [rule] = load_rules(str(p))
+    assert rule.name == "solo" and rule.burn_rate == 2.0
+
+
+# ------------------------------------------------------------ SLO tracker
+
+def test_slo_tracker_window_edges():
+    tr = SLOTracker(1.0, objective=0.9, horizon_s=100.0)
+    assert tr.budget == pytest.approx(0.1)
+    assert tr.observe(0.0, 2.0) is True                # bad
+    assert tr.observe(10.0, 0.5) is False              # good
+    assert tr.observe(20.0, 2.0) is True               # bad
+    # full window: 2 bad of 3
+    assert tr.bad_fraction(100.0, now=20.0) == pytest.approx(2 / 3)
+    # window (0, 20]: the ts=0 sample sits exactly ON the lower edge
+    # and is excluded — half-open window semantics
+    assert tr.bad_fraction(20.0, now=20.0) == pytest.approx(1 / 2)
+    # a window holding no samples burns 0 (no data is not an incident)
+    assert tr.bad_fraction(5.0, now=200.0) == 0.0
+    assert tr.burn_rate(100.0, now=20.0) == pytest.approx((2 / 3) / 0.1)
+    # horizon pruning: samples older than horizon_s drop off the buffer
+    tr.observe(120.0, 0.5)
+    assert tr.to_dict()["buffered"] == 2               # ts=0,10 pruned
+    assert tr.total == 4 and tr.bad == 2               # lifetime kept
+    # window (20, 120]: only the good ts=120 sample (ts=20 on the edge)
+    assert tr.to_dict(now=120.0, windows=[100.0])["burn"]["100"] == 0.0
+    with pytest.raises(ValueError):
+        SLOTracker(0.0)
+    with pytest.raises(ValueError):
+        SLOTracker(1.0, objective=1.0)
+
+
+def test_alert_evaluator_two_window_semantics():
+    rule = AlertRule("r", "page", 5.0, long_window_s=100.0,
+                     short_window_s=10.0)
+    ev = AlertEvaluator([rule])
+    assert ev.horizon_s == 100.0
+    tr = SLOTracker(1.0, objective=0.9, horizon_s=100.0)
+    # sustained violations: both windows burn at 1/0.1 = 10 >= 5
+    for i in range(10):
+        tr.observe(float(i), 2.0)
+        ev.evaluate(tr, float(i))
+    [st] = ev.firing()
+    assert st.rule.name == "r" and st.transitions == 1
+    # recovery: good steps drain the SHORT window below the threshold
+    # while the long window still remembers the incident
+    cleared_at = None
+    for i in range(10, 22):
+        tr.observe(float(i), 0.5)
+        if ev.evaluate(tr, float(i)) and cleared_at is None:
+            cleared_at = float(i)
+            # at the instant of clearing, the long window is still hot:
+            # recovery is decided by the short window alone
+            assert st.burn_long >= rule.burn_rate
+            assert st.burn_short < rule.burn_rate
+    assert ev.firing() == [] and st.state == "ok"
+    assert cleared_at is not None and st.since == cleared_at
+    assert st.transitions == 2                     # cleared once, stays ok
+    # long-window-only burn never fires (persistence without recency)
+    ev2 = AlertEvaluator([rule])
+    assert ev2.evaluate(tr, 21.0) == []
+    assert ev2.firing() == []
+
+
+# -------------------------------------------------- residual attribution
+
+def _fake_timeline(stage_dur, link_dur, makespan, bubble=0.25):
+    """Timeline stand-in: events carry (kind, stage, src, dur)."""
+    events = [types.SimpleNamespace(kind="F", stage=s, src=-1, dur=d)
+              for s, d in stage_dur.items()]
+    events += [types.SimpleNamespace(kind="X", stage=dst, src=src, dur=d)
+               for (src, dst), d in link_dur.items()]
+    return types.SimpleNamespace(events=events, makespan=makespan,
+                                 bubble_fraction=lambda: bubble)
+
+
+def test_residual_attribution_math():
+    an = RunHealthAnalyzer(ewma_alpha=1.0)         # no smoothing: exact
+    tl = _fake_timeline({0: 0.30, 1: 0.30}, {(0, 1): 0.10},
+                        makespan=0.80)
+    an.watch("r", timeline=tl, sync_time=0.05)
+    # executed: stage 1 twice as slow, link on plan, wall grew by the
+    # stage residual plus 0.02s of unattributed sync
+    an.ingest(_rec("r", 0, wall=1.17,
+                   stages={0: 0.30, 1: 0.60}, pairs={"0-1": 0.10}))
+    h = an.health("r")
+    assert h["mode"] == "predicted"
+    assert h["predicted_step_s"] == pytest.approx(0.85)   # makespan+sync
+    assert h["stages"]["1"]["ratio"] == pytest.approx(2.0)
+    assert h["stages"]["0"]["ratio"] == pytest.approx(1.0)
+    assert h["links"]["0->1"]["ratio"] == pytest.approx(1.0)
+    att = h["attribution"]
+    assert att["compute_s"] == pytest.approx(0.30)
+    assert att["transfer_s"] == pytest.approx(0.0)
+    assert att["sync_other_s"] == pytest.approx(0.02)
+    assert h["dominant"] == {"cause": "stage", "key": "1",
+                             "residual_s": pytest.approx(0.30)}
+    assert h["step_ratio"] == pytest.approx(1.17 / 0.85)
+    assert h["bubble"]["predicted"] == pytest.approx(0.25)
+
+
+def test_self_baselined_mode_anchors_first_step():
+    an = RunHealthAnalyzer(ewma_alpha=1.0)
+    an.ingest(_rec("solo", 0, wall=1.0, stages={0: 0.4}))
+    an.ingest(_rec("solo", 1, wall=2.0, stages={0: 0.8}))
+    h = an.health("solo")
+    assert h["mode"] == "self_baselined"
+    assert h["predicted_step_s"] == pytest.approx(1.0)    # first step
+    assert h["step_ratio"] == pytest.approx(2.0)
+    assert h["stages"]["0"]["ratio"] == pytest.approx(2.0)
+
+
+def test_run_id_resolution():
+    an = RunHealthAnalyzer()
+    an.ingest(_rec("named", 0, 1.0))
+    r = StepRecord(graph_fp="g" * 20, topo_fp="t" * 20, wall_time=1.0,
+                   ts=1.0)
+    an.ingest(r)
+    an.ingest(StepRecord(wall_time=1.0, ts=1.0))
+    assert an.run_ids() == ["default", "gggggggggggg:tttttttttttt",
+                            "named"]
+
+
+def test_lru_eviction_retires_metric_series():
+    reg = MetricsRegistry()
+    an = RunHealthAnalyzer(registry=reg, max_runs=2)
+    for i in range(3):
+        an.ingest(_rec(f"r{i}", 0, 1.0, ts=float(i + 1)))
+        an.export_metrics()
+    assert an.run_ids() == ["r1", "r2"]                # r0 evicted (LRU)
+    fams = parse_prometheus_text(reg.to_prometheus())
+    labels = {s[1]["run"]
+              for s in fams["run_health_step_ratio"]["samples"]}
+    assert labels == {"r1", "r2"}                      # r0 series removed
+
+
+# --------------------------------------------------- straggler hysteresis
+
+def test_straggler_hysteresis_up_and_down():
+    an = RunHealthAnalyzer(ewma_alpha=1.0, straggler_ratio=1.3,
+                           hysteresis_up=2, hysteresis_down=2)
+    base = {0: 0.1, 1: 0.1, 2: 0.1}
+
+    def flagged():
+        return [s["key"] for s in an.health("r")["stragglers"]]
+
+    an.ingest(_rec("r", 0, 0.3, stages=base))          # baseline anchor
+    # one noisy step must NOT flag (hysteresis_up=2)
+    an.ingest(_rec("r", 1, 0.4, stages={**base, 1: 0.2}))
+    assert flagged() == []
+    # second consecutive slow step flags stage 1
+    an.ingest(_rec("r", 2, 0.4, stages={**base, 1: 0.2}))
+    assert flagged() == ["1"]
+    assert an.health("r")["stragglers"][0]["since_step"] == 2
+    # one recovered step must NOT clear (hysteresis_down=2)
+    an.ingest(_rec("r", 3, 0.3, stages=base))
+    assert flagged() == ["1"]
+    an.ingest(_rec("r", 4, 0.3, stages=base))
+    assert flagged() == []
+
+
+def test_uniform_slowdown_is_drift_not_straggler():
+    an = RunHealthAnalyzer(ewma_alpha=1.0)
+    base = {0: 0.1, 1: 0.1, 2: 0.1}
+    an.ingest(_rec("r", 0, 0.3, stages=base))
+    for step in range(1, 4):                           # ALL stages 2x
+        an.ingest(_rec("r", step, 0.6,
+                       stages={s: 0.2 for s in base}))
+    h = an.health("r")
+    assert h["stragglers"] == []                       # median-normalized
+    assert h["step_ratio"] == pytest.approx(2.0)       # ...but drifted
+
+
+# --------------------------------------------- replay straggler scenario
+
+def test_replay_straggler_names_slowed_link_and_pages():
+    topo = make_testbed()
+    gg = _chain_gg()
+    plan, nominal_tl = _pipeline(gg, topo)
+    true_topo = _slowed(topo, plan, factor=3.0)
+
+    an = RunHealthAnalyzer(slo_s=nominal_tl.makespan * 1.05)
+    an.watch("runA", timeline=nominal_tl,
+             graph_fp="G" * 40, topo_fp="T" * 40)
+    for step in range(8):
+        rec, _ = execute_pipeline(plan, true_topo, schedule="1f1b",
+                                  step=step, meta={"run_id": "runA"})
+        rec.ts = 1000.0 + 10.0 * step                  # inside 5m window
+        an.ingest(rec)
+
+    h = an.health("runA")
+    assert h["mode"] == "predicted"
+    assert h["step_ratio"] > 1.05
+    # dominant residual names the slowed stage1->stage2 edge
+    assert h["dominant"]["cause"] == "link"
+    assert h["dominant"]["key"] == "1->2"
+    assert h["dominant"]["residual_s"] > 0
+    # the straggler ranking agrees and survived hysteresis
+    assert [s["key"] for s in h["stragglers"]] == ["1->2"]
+    assert h["links"]["1->2"]["ratio"] > 1.5
+    assert h["links"]["0->1"]["ratio"] == pytest.approx(1.0, abs=0.05)
+    # every perturbed step violated the SLO: both burn-rate rules fire
+    assert {(a["rule"], a["state"]) for a in h["alerts"]} == {
+        ("slo_fast_burn", "firing"), ("slo_slow_burn", "firing")}
+    alerts = an.alerts()
+    assert alerts[0]["severity"] == "page"             # pages sort first
+    assert alerts[0]["state"] == "firing"
+    # replan wiring: the watched key scores its deviation, the cause is
+    # the attributed link
+    key = ("G" * 40, "T" * 40)
+    assert an.replan_priority()[key] == pytest.approx(
+        h["step_ratio"] - 1.0)
+    cause = an.attributed_cause(*key)
+    assert cause["cause"] == "link" and cause["key"] == "1->2"
+    assert cause["run_id"] == "runA"
+
+
+def test_healthy_replay_run_stays_quiet():
+    topo = make_testbed()
+    gg = _chain_gg()
+    plan, tl = _pipeline(gg, topo)
+    an = RunHealthAnalyzer(slo_s=tl.makespan * 1.05)
+    an.watch("ok", timeline=tl)
+    for step in range(6):
+        rec, _ = execute_pipeline(plan, topo, schedule="1f1b", step=step,
+                                  meta={"run_id": "ok"})
+        rec.ts = 1000.0 + 10.0 * step
+        an.ingest(rec)
+    h = an.health("ok")
+    assert h["step_ratio"] == pytest.approx(1.0, abs=0.02)
+    assert h["stragglers"] == []
+    assert all(a["state"] == "ok" for a in h["alerts"])
+    # executed bubble tracks the predicted one on a faithful replay
+    assert h["bubble"]["executed"] == pytest.approx(
+        h["bubble"]["predicted"], abs=0.05)
+
+
+# ----------------------------------------------- analyzer metrics export
+
+def test_export_metrics_parses_and_counts():
+    reg = MetricsRegistry()
+    an = RunHealthAnalyzer(registry=reg, slo_s=0.5, ewma_alpha=1.0)
+    an.ingest(_rec("m", 0, 1.0, stages={0: 0.2}, pairs={"0-1": 0.1}))
+    an.ingest(_rec("m", 1, 1.0, stages={0: 0.2}, pairs={"0-1": 0.1}))
+    an.export_metrics()
+    fams = parse_prometheus_text(reg.to_prometheus())
+    for name in ("run_health_runs", "run_health_step_ratio",
+                 "run_health_stage_ratio", "run_health_link_ratio",
+                 "run_health_stragglers", "run_health_slo_burn",
+                 "run_health_alert_firing", "run_health_records_total",
+                 "alert_transitions_total"):
+        assert name in fams, name
+    assert fams["run_health_runs"]["samples"][0][2] == 1.0
+    # every step violated the 0.5s target -> transition counted
+    [(_, labels, v)] = [
+        s for s in fams["alert_transitions_total"]["samples"]
+        if s[1]["rule"] == "slo_fast_burn"]
+    assert labels["to"] == "firing" and v == 1.0
+    st = an.stats()
+    assert st["records"] == 2 and st["ingest_us_per_event"] > 0.0
+
+
+# --------------------------------------- recalibration loop integration
+
+def test_recalib_priority_order_and_cause_annotation(tmp_path):
+    """Two watched workloads drift in the same poll; the one the health
+    analyzer scores worse replans FIRST and its refreshed plan record
+    carries the attributed cause."""
+    tele = str(tmp_path / "telemetry")
+    svc = PlannerService(cache_dir=str(tmp_path / "plans"),
+                         telemetry_dir=tele)
+    topo = make_testbed()
+    gg_bad, gg_ok = _chain_gg(12, 6), _chain_gg(10, 5)
+    r_bad = svc.plan_graph(gg_bad, topo, iterations=8, seed=0)
+    r_ok = svc.plan_graph(gg_ok, topo, iterations=8, seed=0)
+
+    an = RunHealthAnalyzer()                       # feed-only, rides poll
+    loop = RecalibrationLoop(svc, interval_s=60.0, iterations=8,
+                             health=an)
+    key_bad = loop.watch(gg_bad, topo)
+    key_ok = loop.watch(gg_ok, topo)
+    # health scores come from run step ratios: register each plan's
+    # simulated time as the predicted step so the deviation is measured
+    # against the plan, not self-baselined against the first bad step
+    an.watch("bad", graph_fp=key_bad[0], topo_fp=key_bad[1],
+             timeline=_fake_timeline({}, {}, makespan=r_bad.time))
+    an.watch("ok", graph_fp=key_ok[0], topo_fp=key_ok[1],
+             timeline=_fake_timeline({}, {}, makespan=r_ok.time))
+
+    ext = MeasurementStore(tele)
+    # interleave arrival order: ok first, then bad — priority must
+    # reorder so 'bad' (4x deviation) drains before 'ok' (3x)
+    for step in range(2):
+        ext.append(StepRecord(graph_fp=key_ok[0], topo_fp=key_ok[1],
+                              step=step, wall_time=r_ok.time * 3.0,
+                              meta={"run_id": "ok"}))
+        ext.append(StepRecord(graph_fp=key_bad[0], topo_fp=key_bad[1],
+                              step=step, wall_time=r_bad.time * 4.0,
+                              meta={"run_id": "bad"}))
+
+    results = loop.poll_once()
+    st = loop.stats()
+    assert st["last_order"] == [[key_bad[0][:12], key_bad[1][:12]],
+                                [key_ok[0][:12], key_ok[1][:12]]]
+    kinds = [r.kind for r in results]
+    assert "replanned" in kinds
+    first_replan = next(r for r in results if r.kind == "replanned")
+    assert first_replan.report.graph_fp == key_bad[0]  # worst key first
+    assert first_replan.report.cause is not None
+    assert first_replan.report.cause["run_id"] == "bad"
+    assert "cause" in first_replan.report.to_dict()
+    # the refreshed plan record persists the attribution
+    rec = svc.store.get(*key_bad)
+    assert rec is not None
+    assert rec.meta["drift_cause"]["run_id"] == "bad"
+
+
+def test_recalib_backlog_shedding(tmp_path):
+    """A flooded telemetry dir: per-key shedding keeps only the newest
+    max_per_key records, counts the shed ones, and still processes the
+    newest signal."""
+    tele = str(tmp_path / "telemetry")
+    svc = PlannerService(cache_dir=str(tmp_path / "plans"),
+                         telemetry_dir=tele)
+    gg, topo = _chain_gg(), make_testbed()
+    res = svc.plan_graph(gg, topo, iterations=8, seed=0)
+    loop = RecalibrationLoop(svc, interval_s=60.0, iterations=8,
+                             max_per_key=4, health=RunHealthAnalyzer())
+    key = loop.watch(gg, topo)
+    ext = MeasurementStore(tele)
+    for step in range(20):                         # flood: 20 >> 4
+        ext.append(StepRecord(graph_fp=key[0], topo_fp=key[1], step=step,
+                              wall_time=res.time * 1.01))
+    results = loop.poll_once()
+    assert len(results) == 4                       # newest 4 processed
+    st = loop.stats()
+    assert st["backlog_depth"] == 20.0
+    assert st["shed_total"] == 16.0
+    assert st["records"]["shed"] == 16.0
+    fams = parse_prometheus_text(svc.metrics.to_prometheus())
+    assert fams["recalib_backlog_shed_total"]["samples"][0][2] == 16.0
+    assert fams["recalib_backlog_depth"]["samples"][0][2] == 20.0
+    # the loop's feed-only analyzer saw the records it rode along
+    assert loop.health.records_total == 20
+
+
+# ------------------------------------------------------------------- CLI
+
+def test_health_cli_local_mode(tmp_path, capsys):
+    from repro.service.cli import main
+    tele = str(tmp_path / "telemetry")
+    store = MeasurementStore(tele)
+    for step in range(3):
+        store.append(_rec("cli-run", step, 0.2, stages={0: 0.1},
+                          ts=100.0 + step))
+    rc = main(["health", "--telemetry-dir", tele, "--slo-ms", "100"])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["ingested"] == 3
+    assert [r["run_id"] for r in out["runs"]] == ["cli-run"]
+    h = out["health"]["cli-run"]
+    assert h["mode"] == "self_baselined" and h["steps"] == 3
+    # 0.2s steps vs a 0.1s target: the page rule fires
+    assert any(a["rule"] == "slo_fast_burn" and a["state"] == "firing"
+               for a in out["alerts"])
+    rc = main(["health", "--telemetry-dir", tele, "--run-id", "nope"])
+    assert rc == 1
+    assert "unknown run" in json.loads(capsys.readouterr().out)["error"]

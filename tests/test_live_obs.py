@@ -23,12 +23,17 @@ import pytest
 
 from repro.core.device import testbed as make_testbed
 from repro.core.graph import CompGraph, OpNode, group_graph
+from repro.core.strategy import Action, Option, Strategy
+from repro.exec.schedule import make_schedule, simulate_schedule
+from repro.exec.stages import build_stage_plan
 from repro.obs import (
-    MetricsRegistry, ObsServer, SpoolWriter, TraceCollector, Tracer,
-    escape_label_value, export_tracer_metrics, parse_prometheus_text,
-    set_tracer, shard_path, validate_chrome_trace)
+    MetricsRegistry, ObsServer, RunHealthAnalyzer, SpoolWriter,
+    TraceCollector, Tracer, escape_label_value, export_tracer_metrics,
+    parse_prometheus_text, set_tracer, shard_path, validate_chrome_trace)
 from repro.runtime.feedback import RecalibrationLoop
 from repro.runtime.telemetry import MeasurementStore, StepRecord
+from repro.service.fingerprint import (
+    fingerprint_grouped_cached, fingerprint_topology)
 from repro.service.planner import PlannerService
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -45,30 +50,30 @@ def _run_subprocess(code: str) -> str:
     return out.stdout
 
 
-def _chain_gg(n_ops: int = 12, n_groups: int = 6):
+def _chain_gg(n_ops: int = 12, n_groups: int = 6, edge_bytes: float = 1e6):
     g = CompGraph(name="chain")
     for i in range(n_ops):
         g.add_node(OpNode(i, f"op{i}", "dot_general",
-                          flops=1e9 * (1 + i % 3), bytes_out=1e6,
+                          flops=1e9 * (1 + i % 3), bytes_out=edge_bytes,
                           param_bytes=4e5, grad_bytes=4e5,
                           is_grad_producer=True))
         if i:
-            g.add_edge(i - 1, i, 1e6)
+            g.add_edge(i - 1, i, edge_bytes)
     assign = {i: i * n_groups // n_ops for i in range(n_ops)}
     return group_graph(g, assign)
 
 
 _CHAIN_GG_SRC = '''
-def _chain_gg(n_ops=12, n_groups=6):
+def _chain_gg(n_ops=12, n_groups=6, edge_bytes=1e6):
     from repro.core.graph import CompGraph, OpNode, group_graph
     g = CompGraph(name="chain")
     for i in range(n_ops):
         g.add_node(OpNode(i, f"op{i}", "dot_general",
-                          flops=1e9 * (1 + i % 3), bytes_out=1e6,
+                          flops=1e9 * (1 + i % 3), bytes_out=edge_bytes,
                           param_bytes=4e5, grad_bytes=4e5,
                           is_grad_producer=True))
         if i:
-            g.add_edge(i - 1, i, 1e6)
+            g.add_edge(i - 1, i, edge_bytes)
     return group_graph(g, {i: i * n_groups // n_ops for i in range(n_ops)})
 '''
 
@@ -507,6 +512,88 @@ def test_recalibration_background_thread(tmp_path):
     assert not loop.running
 
 
+# ---------------------------------------------------- streaming /traces
+
+def _get_with_headers(url: str, timeout: float = 30.0):
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.read(), dict(r.headers)
+
+
+def test_trace_streaming_past_size_threshold(tmp_path):
+    """Satellite: past ``trace_stream_events`` merged spans the server
+    streams /traces/<run_id> chunked (no Content-Length buffered body);
+    the streamed document is byte-for-byte JSON-equal to the buffered
+    one, and small runs keep the buffered path."""
+    spool_dir = str(tmp_path)
+    big = SpoolWriter(spool_dir, run_id="big", name="p",
+                      anchor=(100.0, 0.0))
+    for i in range(40):
+        big.emit_span(f"s{i}", 0.1 * i, 0.1 * i + 0.05, tid=0)
+    small = SpoolWriter(spool_dir, run_id="small", name="p",
+                        anchor=(100.0, 0.0))
+    small.emit_span("only", 0.0, 1.0, tid=0)
+    collector = TraceCollector(spool_dir)
+    with ObsServer(collector=collector, trace_stream_events=10) as srv:
+        body, headers = _get_with_headers(srv.url + "/traces/big")
+        assert headers.get("Transfer-Encoding") == "chunked"
+        assert "Content-Length" not in headers
+        doc = json.loads(body)
+        validate_chrome_trace(doc)
+        assert doc == collector.chrome("big")
+        assert sum(1 for e in doc["traceEvents"]
+                   if e["ph"] == "X") == 40
+        body, headers = _get_with_headers(srv.url + "/traces/small")
+        assert "Content-Length" in headers
+        assert headers.get("Transfer-Encoding") != "chunked"
+        validate_chrome_trace(json.loads(body))
+        # an unknown run 404s regardless of the threshold
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/traces/nope")
+        assert ei.value.code == 404
+
+
+def test_collector_chrome_stream_matches_chrome(tmp_path):
+    w = SpoolWriter(str(tmp_path), run_id="r", name="p",
+                    anchor=(100.0, 0.0))
+    for i in range(7):
+        w.emit_span(f"s{i}", float(i), i + 0.5, tid=0)
+    c = TraceCollector(str(tmp_path))
+    c.poll()
+    assert c.span_count("r") == 7
+    assert c.span_count() == 7                     # all runs
+    streamed = "".join(c.chrome_stream("r", chunk_events=3))
+    assert json.loads(streamed) == c.chrome("r")
+    with pytest.raises(KeyError):                  # eager, not mid-stream
+        c.chrome_stream("missing")
+
+
+# ------------------------------------------- served verify diagnostics
+
+def test_served_plans_verify_detail(tmp_path):
+    svc = PlannerService(cache_dir=str(tmp_path / "plans"))
+    gg, topo = _chain_gg(), make_testbed()
+    resp = svc.plan_graph(gg, topo, iterations=8, seed=0)
+    with ObsServer(service=svc) as srv:
+        plans = json.loads(_get(srv.url + "/plans"))
+        [entry] = plans["plans"]
+        assert entry["graph_fp"] == resp.graph_fp
+        assert entry["verify"] == resp.verify
+        assert isinstance(entry["verify_diagnostics"], list)
+        detail = json.loads(
+            _get(srv.url + f"/plans/{resp.graph_fp[:16]}/verify"))
+        [match] = detail["matches"]
+        assert match["graph_fp"] == resp.graph_fp
+        assert match["verify_diagnostics"] == entry["verify_diagnostics"]
+        # the combined <graph24>-<topo24> store-file form matches too
+        combined = f"{resp.graph_fp[:24]}-{resp.topo_fp[:24]}"
+        detail = json.loads(_get(srv.url + f"/plans/{combined}/verify"))
+        assert len(detail["matches"]) == 1
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/plans/zzzznothing/verify")
+        assert ei.value.code == 404
+        assert json.loads(ei.value.read())["plans"]
+
+
 # ------------------------------------------------------------- end-to-end
 
 def test_live_obs_e2e_cross_process(tmp_path):
@@ -626,3 +713,121 @@ def test_live_obs_e2e_cross_process(tmp_path):
         assert not loop.running                # server.stop stopped it
     finally:
         set_tracer(Tracer())
+
+
+def test_health_e2e_cross_process_straggler(tmp_path):
+    """Acceptance: a training process executes two pipelined workloads
+    against a TRUE topology whose stage-1 -> stage-2 link for runA runs
+    at 1/3 bandwidth, appending step records to a shared telemetry dir.
+    The serving process — holding only the NOMINAL predicted timelines —
+    must attribute runA's dominant residual to that exact edge on
+    /runs/runA/health, surface a firing page on /alerts, leave runB
+    quiet, and have its recalibration loop drain runA's watched key
+    before runB's."""
+    cache = str(tmp_path / "plans")
+    tele = str(tmp_path / "telemetry")
+    topo = make_testbed()
+    ggA = _chain_gg(12, 6, edge_bytes=4e6)
+    ggB = _chain_gg(10, 5, edge_bytes=4e6)
+
+    def _pipeline(gg):
+        strat = Strategy([Action((0, 1, 5), Option.PIPE) if i % 2 == 0
+                          else Action((0, 1, 5), Option.PS)
+                          for i in range(gg.n)])
+        plan = build_stage_plan(gg, strat, topo, n_micro=8)
+        tl = simulate_schedule(plan, topo, make_schedule(
+            "1f1b", plan.n_stages, plan.n_micro))
+        return plan, tl
+
+    _, tlA = _pipeline(ggA)
+    _, tlB = _pipeline(ggB)
+
+    # training process: rebuilds the same deterministic plans, slows the
+    # stage1->2 forward link for runA only, interleaves 6 steps of each
+    _run_subprocess(_CHAIN_GG_SRC + textwrap.dedent(f"""
+        import copy
+        from repro.core.device import testbed
+        from repro.core.strategy import Action, Option, Strategy
+        from repro.exec.replay import execute_pipeline
+        from repro.exec.stages import build_stage_plan
+        from repro.runtime.telemetry import MeasurementStore
+        from repro.service.fingerprint import (
+            fingerprint_grouped_cached, fingerprint_topology)
+
+        topo = testbed()
+        store = MeasurementStore({tele!r})
+        jobs = []
+        for rid, gg in (("runA", _chain_gg(12, 6, edge_bytes=4e6)),
+                        ("runB", _chain_gg(10, 5, edge_bytes=4e6))):
+            strat = Strategy([Action((0, 1, 5), Option.PIPE) if i % 2 == 0
+                              else Action((0, 1, 5), Option.PS)
+                              for i in range(gg.n)])
+            plan = build_stage_plan(gg, strat, topo, n_micro=8)
+            true = topo
+            if rid == "runA":
+                true = copy.deepcopy(topo)
+                g1 = plan.stages[1].device_group
+                g2 = plan.stages[2].device_group
+                true.inter_bw[g1, g2] /= 3.0   # directional straggler
+            jobs.append((rid, gg, plan, true))
+        for step in range(6):
+            for rid, gg, plan, true in jobs:
+                rec, _ = execute_pipeline(
+                    plan, true, schedule="1f1b", step=step,
+                    graph_fp=fingerprint_grouped_cached(gg),
+                    topo_fp=fingerprint_topology(topo),
+                    meta={{"run_id": rid}})
+                store.append(rec)
+        print("TRAINED")
+    """))
+
+    # serving process: nominal timelines, tight SLO for runA, slack for
+    # runB; the analyzer rides its own cursor over the telemetry dir
+    svc = PlannerService(cache_dir=cache, telemetry_dir=tele)
+    keyA = (fingerprint_grouped_cached(ggA), fingerprint_topology(topo))
+    keyB = (fingerprint_grouped_cached(ggB), fingerprint_topology(topo))
+    analyzer = RunHealthAnalyzer(MeasurementStore(tele))
+    analyzer.watch("runA", timeline=tlA, slo_s=tlA.makespan * 1.05,
+                   graph_fp=keyA[0], topo_fp=keyA[1])
+    analyzer.watch("runB", timeline=tlB, slo_s=tlB.makespan * 1.5,
+                   graph_fp=keyB[0], topo_fp=keyB[1])
+    loop = RecalibrationLoop(svc, interval_s=0.1, iterations=8,
+                             health=analyzer)
+    loop.watch(ggA, topo)
+    loop.watch(ggB, topo)
+    loop.poll_once()
+
+    with ObsServer(service=svc, health=analyzer) as srv:
+        runs = json.loads(_get(srv.url + "/runs"))["runs"]
+        assert [r["run_id"] for r in runs] == ["runA", "runB"]
+
+        h = json.loads(_get(srv.url + "/runs/runA/health"))
+        assert h["mode"] == "predicted"
+        assert h["step_ratio"] > 1.05
+        assert h["dominant"]["cause"] == "link"
+        assert h["dominant"]["key"] == "1->2"   # the slowed edge, named
+        assert [s["key"] for s in h["stragglers"]] == ["1->2"]
+        assert {(a["rule"], a["state"]) for a in h["alerts"]} == {
+            ("slo_fast_burn", "firing"), ("slo_slow_burn", "firing")}
+
+        hb = json.loads(_get(srv.url + "/runs/runB/health"))
+        assert hb["step_ratio"] == pytest.approx(1.0, abs=0.05)
+        assert hb["stragglers"] == []
+        assert all(a["state"] == "ok" for a in hb["alerts"])
+
+        alerts = json.loads(_get(srv.url + "/alerts"))["alerts"]
+        assert alerts[0]["run_id"] == "runA"
+        assert alerts[0]["severity"] == "page"
+        assert alerts[0]["state"] == "firing"
+
+        # the health series ride the scrape
+        fams = parse_prometheus_text(_get(srv.url + "/metrics").decode())
+        ratios = {s[1]["run"]: s[2]
+                  for s in fams["run_health_step_ratio"]["samples"]}
+        assert ratios["runA"] > 1.05
+        assert ratios["runB"] == pytest.approx(1.0, abs=0.05)
+
+    # the drifted workload was drained before the healthy one
+    order = loop.stats()["last_order"]
+    assert order[0] == [keyA[0][:12], keyA[1][:12]]
+    assert order[1] == [keyB[0][:12], keyB[1][:12]]
