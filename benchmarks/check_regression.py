@@ -40,6 +40,13 @@ METRICS = {
         ("mcts.variants.zb.step_time_s", "lower", 0.10),
         ("mcts.fifo_schedule_blind", "true", 0.0),
         ("mcts.aware_pick_is_best", "true", 0.0),
+        # execution engines (real jax): dispatch counts are
+        # deterministic; the step-speed and compile-flatness gates are
+        # booleans like BENCH_overhead's wall-clock criteria
+        ("engine.dispatch_reduction_ok", "true", 0.0),
+        ("engine.scan_step_faster", "true", 0.0),
+        ("engine.loss_agrees", "true", 0.0),
+        ("engine.compile_flat_ok", "true", 0.0),
     ],
     "BENCH_planner.json": [
         ("warm.iters", "lower", 0.10),          # playouts-to-best

@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Execute the documentation's runnable command blocks.
+
+Fenced code blocks in README.md and docs/*.md whose info string is
+``bash doc-smoke`` are contracts, not prose: this script extracts each
+one and runs it with ``bash -euo pipefail`` so CI fails the moment a
+documented command sequence rots (renamed flag, removed subcommand,
+changed default).
+
+Blocks run in a throwaway working directory (so relative cache/output
+dirs like ``.plans-docs`` never pollute the checkout) with the repo's
+``src/`` prepended to ``PYTHONPATH`` (no-op when the package is
+pip-installed, as in CI).
+
+Usage:
+    python scripts/doc_smoke.py            # run every block
+    python scripts/doc_smoke.py --list     # show blocks without running
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+MARKER = "doc-smoke"
+FENCE_RE = re.compile(
+    r"^```bash[ \t]+doc-smoke[ \t]*\n(.*?)^```[ \t]*$",
+    re.MULTILINE | re.DOTALL,
+)
+
+
+def doc_files() -> list[Path]:
+    files = [REPO / "README.md"]
+    files.extend(sorted((REPO / "docs").glob("*.md")))
+    return [f for f in files if f.is_file()]
+
+
+def extract_blocks() -> list[tuple[Path, str]]:
+    blocks = []
+    for f in doc_files():
+        for m in FENCE_RE.finditer(f.read_text()):
+            blocks.append((f, m.group(1)))
+    return blocks
+
+
+def run_block(path: Path, script: str, workdir: str) -> float:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    t0 = time.monotonic()
+    subprocess.run(
+        ["bash", "-euo", "pipefail", "-c", script],
+        cwd=workdir,
+        env=env,
+        check=True,
+    )
+    return time.monotonic() - t0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--list", action="store_true",
+                    help="print the extracted blocks and exit")
+    args = ap.parse_args(argv)
+
+    blocks = extract_blocks()
+    if not blocks:
+        print(f"doc-smoke: no ```bash {MARKER} blocks found", file=sys.stderr)
+        return 1
+
+    if args.list:
+        for path, script in blocks:
+            print(f"--- {path.relative_to(REPO)} ---")
+            print(script, end="")
+        return 0
+
+    failed = 0
+    with tempfile.TemporaryDirectory(prefix="doc-smoke-") as workdir:
+        for i, (path, script) in enumerate(blocks, 1):
+            rel = path.relative_to(REPO)
+            print(f"[doc-smoke {i}/{len(blocks)}] {rel}", flush=True)
+            for line in script.rstrip().splitlines():
+                print(f"    {line}")
+            try:
+                dt = run_block(path, script, workdir)
+            except subprocess.CalledProcessError as e:
+                print(f"[doc-smoke {i}/{len(blocks)}] FAILED "
+                      f"(exit {e.returncode}): {rel}", file=sys.stderr)
+                failed += 1
+            else:
+                print(f"[doc-smoke {i}/{len(blocks)}] ok ({dt:.1f}s)",
+                      flush=True)
+    if failed:
+        print(f"doc-smoke: {failed}/{len(blocks)} block(s) failed",
+              file=sys.stderr)
+        return 1
+    print(f"doc-smoke: {len(blocks)}/{len(blocks)} block(s) green")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

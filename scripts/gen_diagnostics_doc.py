@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""Generate docs/DIAGNOSTICS.md from the verifier's diagnostic table.
+
+The TAGxxx codes in ``repro.verify.diagnostics.CODES`` are API — tests,
+CI gates and the mutation self-test match on them — so their reference
+page is generated, never hand-edited. Regenerate after touching CODES:
+
+    PYTHONPATH=src python scripts/gen_diagnostics_doc.py
+
+CI runs the sync check and fails when the committed page drifts from
+the table in code:
+
+    PYTHONPATH=src python scripts/gen_diagnostics_doc.py --check
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+HEADER = """\
+# Verifier diagnostic codes (TAGxxx)
+
+<!-- GENERATED FILE — do not edit by hand.
+     Regenerate with: PYTHONPATH=src python scripts/gen_diagnostics_doc.py -->
+
+Every finding the static plan verifier (`repro.verify`) emits carries a
+stable `TAGxxx` code. Codes are API: they never change meaning once
+shipped, so alert routing, CI gates and the mutation self-test can
+match on them. This page is generated from
+`repro.verify.diagnostics.CODES`.
+
+Severity semantics:
+
+* **error** — the deployment is unsound: it deadlocks, races, OOMs or
+  references devices/links that cannot serve it. `PlannerService`
+  refuses to cache such a plan; execution preflight refuses to run it.
+* **warn** — legal but suspicious; the plan runs, the diagnostic ships
+  with it.
+* **info** — lint-grade observations.
+
+See [verification.md](verification.md) for the analyses that emit
+these codes and where they are wired.
+"""
+
+# code-prefix -> section title, in rendering order
+SECTIONS = [
+    ("TAG0", "Plan / input structure"),
+    ("TAG1", "Happens-before analysis"),
+    ("TAG2", "Memory-budget prover"),
+    ("TAG3", "Collective matching"),
+    ("TAG4", "Placement feasibility"),
+]
+
+
+def render() -> str:
+    from repro.verify.diagnostics import CODES
+
+    lines = [HEADER]
+    for prefix, title in SECTIONS:
+        rows = sorted((c, sev, t) for c, (sev, t) in CODES.items()
+                      if c.startswith(prefix))
+        if not rows:
+            continue
+        lines.append(f"\n## {title}\n")
+        lines.append("| Code | Severity | Meaning |")
+        lines.append("|------|----------|---------|")
+        for code, sev, text in rows:
+            lines.append(f"| `{code}` | {sev} | {text} |")
+    orphans = sorted(c for c in CODES
+                     if not any(c.startswith(p) for p, _ in SECTIONS))
+    if orphans:
+        lines.append("\n## Other\n")
+        lines.append("| Code | Severity | Meaning |")
+        lines.append("|------|----------|---------|")
+        for code in orphans:
+            sev, text = CODES[code]
+            lines.append(f"| `{code}` | {sev} | {text} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="fail if docs/DIAGNOSTICS.md is out of sync "
+                         "with repro.verify.diagnostics.CODES")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "docs", "DIAGNOSTICS.md"))
+    args = ap.parse_args(argv)
+    want = render()
+    out = os.path.normpath(args.out)
+    if args.check:
+        have = open(out).read() if os.path.exists(out) else ""
+        if have != want:
+            print(f"{out} is out of sync with "
+                  f"repro.verify.diagnostics.CODES — regenerate with:\n"
+                  f"  PYTHONPATH=src python scripts/gen_diagnostics_doc.py")
+            return 1
+        print(f"{out}: in sync ({want.count('TAG')} code mentions)")
+        return 0
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write(want)
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

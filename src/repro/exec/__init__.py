@@ -9,14 +9,21 @@ multi-stage train step:
                       event lists + a dependency-driven timeline
                       simulator (bubble fractions, stash bounds);
   * ``model_split`` — cut a ``ModelConfig`` LM into stage functions;
-  * ``engine``      — eager executor: per-stage jitted fwd/bwd,
-                      device_put boundary transfers, shard_map per-stage
-                      data parallelism with AR/PS/SFB gradient sync;
+  * ``engine``      — two executors sharing the same stage math: the
+                      eager ``PipelineRunner`` (per-event jitted
+                      dispatch, device_put boundary transfers, shard_map
+                      per-stage data parallelism with AR/PS/SFB gradient
+                      sync) and the scan-rolled
+                      ``CompiledPipelineRunner`` (per-stage ``lax.scan``
+                      programs, bulk double-buffered boundary
+                      transfers);
   * ``replay``      — replay executor emitting step telemetry (the
                       simulator cross-check + per-link-pair calibration
                       samples).
 """
-from repro.exec.engine import PipelineRunner, split_microbatches
+from repro.exec.engine import (
+    CompiledPipelineRunner, PipelineRunner, split_microbatches,
+    stack_microbatches)
 from repro.exec.model_split import split_model
 from repro.exec.replay import execute_pipeline
 from repro.exec.schedule import (
@@ -30,7 +37,8 @@ from repro.exec.stages import (
     vote_schedule)
 
 __all__ = [
-    "PipelineRunner", "split_microbatches", "split_model",
+    "CompiledPipelineRunner", "PipelineRunner", "split_microbatches",
+    "stack_microbatches", "split_model",
     "execute_pipeline",
     "SCHEDULES", "Timeline", "flatten_schedule", "gpipe_schedule",
     "interleaved_1f1b_schedule", "make_schedule", "max_feasible_micro",

@@ -1,12 +1,20 @@
-"""Pipeline execution engine: run a StagePlan as a REAL multi-stage
+"""Pipeline execution engines: run a StagePlan as a REAL multi-stage
 jax train step.
 
-The engine executes a microbatch schedule (``exec.schedule``) eagerly:
-per-stage jitted forward / backward callables, ``device_put`` boundary
-transfers for activations and activation-grads, per-stage data
-parallelism via ``shard_map`` submeshes, and explicit AR / PS / SFB
-parameter-gradient synchronization (the §4.2.3 ILP's decisions routed
-through ``parallel.sfb_dense``'s primitives).
+Two engines share the same per-microbatch stage math (``_make_bodies``):
+
+  * ``PipelineRunner`` executes the microbatch schedule
+    (``exec.schedule``) eagerly — per-stage jitted forward / backward
+    callables dispatched per event, ``device_put`` boundary transfers
+    for activations and activation-grads, per-stage data parallelism
+    via ``shard_map`` submeshes, and explicit AR / PS / SFB
+    parameter-gradient synchronization (the §4.2.3 ILP's decisions
+    routed through ``parallel.sfb_dense``'s primitives).
+  * ``CompiledPipelineRunner`` rolls the same bodies into per-stage
+    ``jax.lax.scan`` programs (O(stages) compiled dispatches per step,
+    compile time flat in ``n_micro * n_chunks``) with bulk
+    double-buffered boundary transfers; see its docstring for the
+    memory/overlap trade.
 
 Two schedule extensions execute for real here:
 
@@ -73,6 +81,19 @@ def _gather(tree, specs):
             return jax.lax.all_gather(x, "dp", tiled=True)
         return x
     return jax.tree.map(g, tree, specs)
+
+
+def stack_microbatches(batch: dict, n_micro: int) -> dict:
+    """Reshape every batch leaf to ``[n_micro, per_mb, ...]`` — the scan
+    engine's stacked layout; row ``m`` is exactly
+    ``split_microbatches(batch, n_micro)[m]``."""
+    for k, v in batch.items():
+        if v.shape[0] % n_micro:
+            raise ValueError(
+                f"batch dim {v.shape[0]} of {k!r} not divisible by "
+                f"n_micro={n_micro}")
+    return {k: v.reshape(n_micro, v.shape[0] // n_micro, *v.shape[1:])
+            for k, v in batch.items()}
 
 
 def split_microbatches(batch: dict, n_micro: int) -> list:
@@ -212,10 +233,14 @@ class PipelineRunner:
         return {k: mb[k] for k in self.mb_keys[u] if k in mb}
 
     # ------------------------------------------------------- compiled fns
-    def _build(self, u: int, p_ex, c_ex, mb_ex):
-        """Compile virtual stage ``u``'s forward and backward callables
-        (joint backward, plus the split activation-grad / weight-grad
-        pair when the schedule zero-bubbles)."""
+    def _make_bodies(self, u: int, p_ex, c_ex, mb_ex) -> dict:
+        """Un-jitted per-microbatch bodies of virtual stage ``u`` — the
+        single source of the stage math both engines compile. The eager
+        engine jits each body and dispatches it per event; the scan
+        engine rolls the same bodies into per-stage ``lax.scan``
+        programs, so gradient parity between the engines is structural.
+        Multi-device stages also carry the shard_map partition specs
+        (``mesh`` is None on single-device stages)."""
         fn = self.fns[u]
         is_last = u == self.U - 1
         s = self.phys(u)
@@ -247,13 +272,8 @@ class PipelineRunner:
                 _, vjp = jax.vjp(lambda pp: f_of(pp, c, mb), p)
                 return vjp(dout)[0]
 
-            self._fwd[u] = jax.jit(fwd)
-            if self.has_w:
-                self._bwd_act[u] = jax.jit(bwd_act)
-                self._bwd_wgt[u] = jax.jit(bwd_wgt)
-            else:
-                self._bwd[u] = jax.jit(bwd)
-            return
+            return {"mesh": None, "fwd": fwd, "bwd": bwd,
+                    "bwd_act": bwd_act, "bwd_wgt": bwd_wgt}
 
         p_specs = jax.tree.map(lambda _: P(), p_ex)
         c_specs = _specs(c_ex, ndev)
@@ -303,21 +323,44 @@ class PipelineRunner:
         def bwd_body(p, c, mb, dout):
             return dp_of(p, c, mb, dout), dc_of(p, c, mb, dout)
 
+        return {"mesh": mesh, "fwd": fwd_body, "bwd": bwd_body,
+                "bwd_act": dc_of, "bwd_wgt": dp_of,
+                "p_specs": p_specs, "c_specs": c_specs,
+                "mb_specs": mb_specs, "fwd_out_specs": fwd_out_specs,
+                "dout_specs": dout_specs}
+
+    def _build(self, u: int, p_ex, c_ex, mb_ex):
+        """Compile virtual stage ``u``'s forward and backward callables
+        (joint backward, plus the split activation-grad / weight-grad
+        pair when the schedule zero-bubbles)."""
+        B = self._make_bodies(u, p_ex, c_ex, mb_ex)
+        mesh = B["mesh"]
+        if mesh is None:
+            self._fwd[u] = jax.jit(B["fwd"])
+            if self.has_w:
+                self._bwd_act[u] = jax.jit(B["bwd_act"])
+                self._bwd_wgt[u] = jax.jit(B["bwd_wgt"])
+            else:
+                self._bwd[u] = jax.jit(B["bwd"])
+            return
+
         self._fwd[u] = jax.jit(shard_map(
-            fwd_body, mesh=mesh, in_specs=(p_specs, c_specs, mb_specs),
-            out_specs=fwd_out_specs, check_rep=False))
-        in_specs = (p_specs, c_specs, mb_specs, dout_specs)
+            B["fwd"], mesh=mesh,
+            in_specs=(B["p_specs"], B["c_specs"], B["mb_specs"]),
+            out_specs=B["fwd_out_specs"], check_rep=False))
+        in_specs = (B["p_specs"], B["c_specs"], B["mb_specs"],
+                    B["dout_specs"])
         if self.has_w:
             self._bwd_act[u] = jax.jit(shard_map(
-                dc_of, mesh=mesh, in_specs=in_specs, out_specs=c_specs,
-                check_rep=False))
+                B["bwd_act"], mesh=mesh, in_specs=in_specs,
+                out_specs=B["c_specs"], check_rep=False))
             self._bwd_wgt[u] = jax.jit(shard_map(
-                dp_of, mesh=mesh, in_specs=in_specs, out_specs=p_specs,
-                check_rep=False))
+                B["bwd_wgt"], mesh=mesh, in_specs=in_specs,
+                out_specs=B["p_specs"], check_rep=False))
         else:
             self._bwd[u] = jax.jit(shard_map(
-                bwd_body, mesh=mesh, in_specs=in_specs,
-                out_specs=(p_specs, c_specs), check_rep=False))
+                B["bwd"], mesh=mesh, in_specs=in_specs,
+                out_specs=(B["p_specs"], B["c_specs"]), check_rep=False))
 
     # ------------------------------------------------------------- step
     def step(self, params_list, batch, *, record: bool = False) -> tuple:
@@ -455,7 +498,12 @@ class PipelineRunner:
             kind, s, m, dur, chunk = e[:5]
             start = e[5] if len(e) > 5 else 0.0
             spec = self.plan.stages[s] if s < len(self.plan.stages) else None
-            flops_m = (spec.flops / self.n_micro / self.V) if spec else 0.0
+            if spec is None:
+                flops_m = 0.0
+            elif m < 0:      # scan engine: one event spans all microbatches
+                flops_m = spec.flops / self.V
+            else:
+                flops_m = spec.flops / self.n_micro / self.V
             if kind == "F":
                 frac = FWD_FRAC
             elif kind == "W":
@@ -501,3 +549,274 @@ class PipelineRunner:
                          "mb": m, "chunk": chunk,
                          "schedule": self.schedule}})
         self.spool.emit_many(recs)
+
+
+class CompiledPipelineRunner(PipelineRunner):
+    """Scan-rolled pipeline engine: the same stage math as the eager
+    ``PipelineRunner`` (shared un-jitted bodies, ``_make_bodies``), but
+    compiled into O(U) rolled ``lax.scan`` programs instead of
+    O(U * n_micro) per-event dispatches.
+
+    Per virtual stage ``u``: one forward scan over the stacked
+    microbatch axis, and one gradient-accumulating backward scan (split
+    into activation-grad / weight-grad scans when the schedule
+    zero-bubbles), executed in dataflow order — forwards ascending the
+    virtual pipeline, backwards descending it. Gradients are
+    schedule-independent (sum over microbatches / n_micro), so the
+    result is parity with the eager engine under every schedule family;
+    the schedule still decides validation (n_micro / chunk
+    constraints), the predicted timeline, and the event program the
+    verifier preflights.
+
+    The trade the cost model and the memory prover both see:
+
+      * boundary transfers become ONE bulk stacked ``[n_micro, ...]``
+        ``device_put`` per boundary, dispatched asynchronously — the
+        copy for stage u streams while jax is still executing earlier
+        work (double-buffered boundaries: producer output + consumer
+        copy coexist). ``exec.schedule.simulate_schedule(...,
+        overlap="full")`` is this engine's timeline model.
+      * every stage stashes all ``n_micro`` inputs until its backward
+        (GPipe-like activation memory, whatever the schedule family);
+        ``verify.memory.analyze_memory(..., engine="scan")`` proves the
+        budget under that accounting.
+
+    ``unroll`` forwards to ``lax.scan`` — the default 1 keeps the
+    compiled program (and compile time) flat in ``n_micro * n_chunks``;
+    larger values trade compile time for less loop overhead.
+    """
+
+    def __init__(self, *args, unroll: int = 1, **kw):
+        super().__init__(*args, **kw)
+        self.unroll = max(1, int(unroll))
+        self._fscan = [None] * self.U
+        self._bscan = [None] * self.U        # joint (dp sum, dcs)
+        self._bscan_act = [None] * self.U    # zb: dcs only
+        self._bscan_wgt = [None] * self.U    # zb: dp sum only
+
+    # ------------------------------------------------------- placement
+    def place_stacked(self, s: int, tree):
+        """Commit stacked ``[n_micro, batch, ...]`` activations to
+        physical stage ``s``: microbatch axis unsharded, per-microbatch
+        batch axis sharded over the stage's "dp" submesh."""
+        if tree is None:
+            return None
+        mesh = self.meshes[s]
+        if mesh is None:
+            return jax.device_put(tree, self.device_sets[s][0])
+        ndev = self._ndev(s)
+
+        def spec(x):
+            shape = getattr(x, "shape", ())
+            if len(shape) >= 2 and shape[1] and shape[1] % ndev == 0:
+                return P(None, "dp", *([None] * (len(shape) - 2)))
+            return P()
+        shardings = jax.tree.map(lambda x: NamedSharding(mesh, spec(x)),
+                                 tree)
+        return jax.device_put(tree, shardings)
+
+    @staticmethod
+    def _stack_specs(specs):
+        """Partition specs of per-microbatch values, lifted to the
+        stacked layout (unsharded microbatch axis prepended)."""
+        return jax.tree.map(lambda sp: P(None, *sp), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    # ----------------------------------------------------- compiled fns
+    def _build_scan(self, u: int, p_ex, cs_ex, mbs_ex):
+        """Compile virtual stage ``u``'s scan programs from the shared
+        bodies: a forward scan over the microbatch axis and a backward
+        scan accumulating the parameter gradient in its carry (split
+        activation-grad / weight-grad scans under zero-bubble)."""
+        def one(t):
+            return jax.tree.map(lambda x: x[0], t)
+        c_ex = one(cs_ex) if cs_ex is not None else None
+        B = self._make_bodies(u, p_ex, c_ex, one(mbs_ex))
+        unroll = self.unroll
+        has_c = cs_ex is not None
+
+        def xs_of(cs, mbs, douts=None):
+            xs = {"mb": mbs}
+            if has_c:
+                xs["c"] = cs
+            if douts is not None:
+                xs["dout"] = douts
+            return xs
+
+        def f_scan(p, cs, mbs):
+            def body(_, x):
+                return 0, B["fwd"](p, x.get("c"), x["mb"])
+            return jax.lax.scan(body, 0, xs_of(cs, mbs),
+                                unroll=unroll)[1]
+
+        def zeros_like_p(p):
+            return jax.tree.map(jnp.zeros_like, p)
+
+        def b_scan(p, cs, mbs, douts):
+            def body(acc, x):
+                dp, dc = B["bwd"](p, x.get("c"), x["mb"], x["dout"])
+                return jax.tree.map(jnp.add, acc, dp), dc
+            return jax.lax.scan(body, zeros_like_p(p),
+                                xs_of(cs, mbs, douts), reverse=True,
+                                unroll=unroll)
+
+        def b_scan_act(p, cs, mbs, douts):
+            def body(_, x):
+                return 0, B["bwd_act"](p, x.get("c"), x["mb"], x["dout"])
+            return jax.lax.scan(body, 0, xs_of(cs, mbs, douts),
+                                reverse=True, unroll=unroll)[1]
+
+        def b_scan_wgt(p, cs, mbs, douts):
+            def body(acc, x):
+                dp = B["bwd_wgt"](p, x.get("c"), x["mb"], x["dout"])
+                return jax.tree.map(jnp.add, acc, dp), 0
+            return jax.lax.scan(body, zeros_like_p(p),
+                                xs_of(cs, mbs, douts), reverse=True,
+                                unroll=unroll)[0]
+
+        mesh = B["mesh"]
+        if mesh is None:
+            self._fscan[u] = jax.jit(f_scan)
+            if self.has_w:
+                self._bscan_act[u] = jax.jit(b_scan_act)
+                self._bscan_wgt[u] = jax.jit(b_scan_wgt)
+            else:
+                self._bscan[u] = jax.jit(b_scan)
+            return
+
+        cs_specs = self._stack_specs(B["c_specs"])
+        mbs_specs = self._stack_specs(B["mb_specs"])
+        outs_specs = self._stack_specs(B["fwd_out_specs"])
+        douts_specs = self._stack_specs(B["dout_specs"])
+        p_specs = B["p_specs"]
+        self._fscan[u] = jax.jit(shard_map(
+            f_scan, mesh=mesh, in_specs=(p_specs, cs_specs, mbs_specs),
+            out_specs=outs_specs, check_rep=False))
+        in_specs = (p_specs, cs_specs, mbs_specs, douts_specs)
+        if self.has_w:
+            self._bscan_act[u] = jax.jit(shard_map(
+                b_scan_act, mesh=mesh, in_specs=in_specs,
+                out_specs=cs_specs, check_rep=False))
+            self._bscan_wgt[u] = jax.jit(shard_map(
+                b_scan_wgt, mesh=mesh, in_specs=in_specs,
+                out_specs=p_specs, check_rep=False))
+        else:
+            self._bscan[u] = jax.jit(shard_map(
+                b_scan, mesh=mesh, in_specs=in_specs,
+                out_specs=(p_specs, cs_specs), check_rep=False))
+
+    # ------------------------------------------------------------- step
+    def step(self, params_list, batch, *, record: bool = False) -> tuple:
+        """One pipelined train step via the scan programs.
+
+        Returns ``(grads_list, StepStats)`` under the same gradient
+        contract as the eager engine. ``StepStats.events`` holds ONE
+        entry per scan program (``mb == -1``: all microbatches), so a
+        step dispatches ``U * 2`` (``U * 3`` for zero-bubble) compiled
+        calls instead of the eager engine's ``U * n_micro`` and up.
+        """
+        t_start = time.perf_counter()
+        record = record or self.spool is not None   # spooling needs events
+        S, U, M = self.S, self.U, self.n_micro
+        stacked = stack_microbatches(batch, M)
+
+        params_eff = list(params_list)
+        if self.tied_ref is not None:
+            src_key, dst_key = self.tied_ref
+            head = self.place(self.phys(U - 1), params_list[0][src_key])
+            params_eff[U - 1] = dict(params_list[U - 1],
+                                     **{dst_key: head})
+
+        mbs_cache: list = [None] * U
+
+        def mb_at(u):
+            if mbs_cache[u] is None:
+                mbs_cache[u] = self.place_stacked(
+                    self.phys(u), self._mb_for(u, stacked))
+            return mbs_cache[u]
+
+        stage_in: list = [None] * U     # stacked stashed inputs (all M)
+        fouts: list = [None] * U
+        losses = mets = None
+        events: list = []
+
+        for u in range(U):
+            s = self.phys(u)
+            t0 = time.perf_counter()
+            cs = None
+            if u > 0:
+                # double-buffered boundary: one bulk stacked device_put,
+                # dispatched asynchronously — the copy streams while jax
+                # still executes the producer's scan
+                cs = self.place_stacked(s, fouts[u - 1])
+                fouts[u - 1] = None
+            stage_in[u] = cs
+            mbs = mb_at(u)
+            if self._fscan[u] is None:
+                self._build_scan(u, params_eff[u], cs, mbs)
+            out = self._fscan[u](params_eff[u], cs, mbs)
+            if u == U - 1:
+                losses, mets = out
+            else:
+                fouts[u] = out
+            if record:
+                jax.block_until_ready(out)
+                events.append(("F", s, -1, time.perf_counter() - t0,
+                               u // S, t0 - t_start))
+
+        grads: list = [None] * U
+        seed_last = 1.0 / self._ndev(self.phys(U - 1))
+        dcs = None
+        for u in reversed(range(U)):
+            s = self.phys(u)
+            t0 = time.perf_counter()
+            if u == U - 1:
+                douts = self.place_stacked(
+                    s, jnp.full((M,), seed_last, jnp.float32))
+            else:
+                douts = self.place_stacked(s, dcs)
+            cs, mbs = stage_in[u], mb_at(u)
+            if self.has_w:
+                dcs = self._bscan_act[u](params_eff[u], cs, mbs, douts)
+                if record:
+                    jax.block_until_ready(dcs)
+                    events.append(("B", s, -1,
+                                   time.perf_counter() - t0, u // S,
+                                   t0 - t_start))
+                t1 = time.perf_counter()
+                grads[u] = self._bscan_wgt[u](params_eff[u], cs, mbs,
+                                              douts)
+                if record:
+                    jax.block_until_ready(grads[u])
+                    events.append(("W", s, -1,
+                                   time.perf_counter() - t1, u // S,
+                                   t1 - t_start))
+            else:
+                grads[u], dcs = self._bscan[u](params_eff[u], cs, mbs,
+                                               douts)
+                if record:
+                    jax.block_until_ready(grads[u])
+                    events.append(("B", s, -1,
+                                   time.perf_counter() - t0, u // S,
+                                   t0 - t_start))
+            stage_in[u] = None
+
+        grads = [jax.tree.map(lambda g: g / M, g_u) for g_u in grads]
+        if self.tied_ref is not None:
+            src_key, dst_key = self.tied_ref
+            dhead = grads[U - 1].pop(dst_key)
+            dhead = self.place(0, dhead)
+            grads[0] = dict(grads[0], **{
+                src_key: grads[0][src_key] + dhead})
+
+        loss = float(jnp.mean(losses))
+        metrics = {k: float(jnp.mean(mets[k])) for k in mets}
+        wall = time.perf_counter() - t_start
+        stats = StepStats(loss=loss, metrics=metrics, wall_time=wall,
+                          events=events, peak_stash=U * M)
+        self.last_stats = stats
+        if self.store is not None:
+            self._record_telemetry(stats)
+        if self.spool is not None:
+            self._spool_events(stats, t_start)
+        return grads, stats

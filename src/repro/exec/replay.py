@@ -38,11 +38,15 @@ def execute_pipeline(plan: StagePlan, true_topo: Topology, *,
                      graph_fp: str = "", topo_fp: str = "",
                      step: int = 0, noise: float = 0.0, seed: int = 0,
                      store: MeasurementStore | None = None,
-                     meta: dict | None = None, spool=None) -> tuple:
+                     meta: dict | None = None, spool=None,
+                     overlap: str = "link") -> tuple:
     """Execute one pipelined step on ``true_topo``; returns
     ``(StepRecord, Timeline)``. ``noise`` adds multiplicative jitter
     (relative std-dev) per recorded sample. ``n_chunks`` only applies to
-    the interleaved schedule (virtual chunks per stage).
+    the interleaved schedule (virtual chunks per stage). ``overlap`` is
+    the transfer/compute overlap model the replayed timeline runs under
+    (default: the legacy link-serialization model, so predicted and
+    replayed timelines agree event-for-event).
 
     ``spool`` (an ``obs.collector.SpoolWriter``) streams the executed
     events into the cross-process trace spool: simulated seconds are
@@ -56,7 +60,8 @@ def execute_pipeline(plan: StagePlan, true_topo: Topology, *,
 
     order = make_schedule(schedule, plan.n_stages, plan.n_micro,
                           n_chunks=n_chunks)
-    tl: Timeline = simulate_schedule(plan, true_topo, order)
+    tl: Timeline = simulate_schedule(plan, true_topo, order,
+                                     overlap=overlap)
     M = max(plan.n_micro, 1)
     has_w = any(e.kind == "W" for e in tl.events)
     bwd_frac = 1.0 - FWD_FRAC

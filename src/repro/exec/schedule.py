@@ -71,9 +71,22 @@ DEFAULT_CHUNKS = 2
 # B-edge the activation-grad half
 BOUNDARY_DIR_FRAC = 0.5
 
+# transfer/compute overlap models for the timeline simulator:
+#   "link" — transfers serialize only per directed device-group link
+#            (the legacy model; both stage rows keep computing)
+#   "none" — the transfer ALSO occupies the destination stage row, the
+#            way the eager engine's synchronous per-event ``device_put``
+#            dispatch does
+#   "full" — double-buffered boundaries: back-to-back transfers on the
+#            same link form a stream, and only the first pays the wire
+#            latency (the scan engine's bulk stacked transfer)
+OVERLAP_MODES = ("link", "none", "full")
+
 
 @dataclass(frozen=True)
 class Event:
+    """One schedule slot: kind F/B/W on (stage, microbatch, chunk)."""
+
     kind: str                 # "F" | "B" | "W"
     stage: int                # physical stage
     mb: int
@@ -115,8 +128,9 @@ def one_f_one_b_schedule(n_stages: int,
 def interleaved_1f1b_schedule(
         n_stages: int, n_micro: int,
         n_chunks: int = DEFAULT_CHUNKS) -> list[list[Event]]:
-    """Megatron-style interleaved 1F1B over ``n_chunks`` virtual stages
-    per physical stage.
+    """Megatron-style interleaved 1F1B over virtual stages.
+
+    Runs ``n_chunks`` virtual stages per physical stage.
 
     Virtual microbatches are issued in groups of ``S`` per chunk
     (forwards walk chunks 0..V-1, backwards V-1..0), which requires
@@ -136,6 +150,7 @@ def interleaved_1f1b_schedule(
     total = M * V
 
     def chunk_mb(k: int, forward: bool) -> tuple[int, int]:
+        """Map virtual-microbatch index ``k`` to its (chunk, mb)."""
         c = (k % (S * V)) // S
         if not forward:
             c = V - 1 - c
@@ -166,9 +181,11 @@ def interleaved_1f1b_schedule(
 
 def zero_bubble_schedule(n_stages: int,
                          n_micro: int) -> list[list[Event]]:
-    """ZB-H1-style split-backward schedule: the 1F1B skeleton with each
-    backward split into ``B`` (activation grad, cross-stage dependency)
-    and ``W`` (weight grad, stage-local). ``W(m)`` is issued promptly
+    """ZB-H1-style split-backward schedule.
+
+    The 1F1B skeleton with each backward split into ``B`` (activation
+    grad, cross-stage dependency) and ``W`` (weight grad, stage-local).
+    ``W(m)`` is issued promptly
     after ``B(m)`` — releasing the activation stash BEFORE the next
     forward acquires one, so peak stash stays exactly at 1F1B's
     ``min(S - s, M)`` bound — and in the drain phase it fills the gap
@@ -194,6 +211,7 @@ def zero_bubble_schedule(n_stages: int,
 
 def make_schedule(name: str, n_stages: int, n_micro: int, *,
                   n_chunks: int = DEFAULT_CHUNKS) -> list[list[Event]]:
+    """Build the named schedule's per-stage event lists."""
     if name == "gpipe":
         return gpipe_schedule(n_stages, n_micro)
     if name == "1f1b":
@@ -211,10 +229,12 @@ def n_chunks_of(order: Sequence[Sequence[Event]]) -> int:
 
 
 def _dep_of(e: Event, n_stages: int, n_chunks: int) -> Event | None:
-    """The cross-event dependency of ``e`` (None when it has none beyond
-    its own stage's F). Virtual stage ``u = chunk * S + stage``: forwards
-    chain up the virtual pipeline, backwards chain down it, ``W`` waits
-    on its own ``B``."""
+    """Cross-event dependency of ``e`` (None when only its own F).
+
+    Virtual stage ``u = chunk * S + stage``: forwards chain up the
+    virtual pipeline, backwards chain down it, ``W`` waits on its own
+    ``B``.
+    """
     S, U = n_stages, n_stages * n_chunks
     u = e.chunk * S + e.stage
     if e.kind == "F":
@@ -232,7 +252,7 @@ def _dep_of(e: Event, n_stages: int, n_chunks: int) -> Event | None:
 
 def validate_schedule(order: list[list[Event]], n_stages: int,
                       n_micro: int) -> None:
-    """Schedule invariants; raises ``ValueError`` on violation:
+    """Check schedule invariants; raises ``ValueError`` on violation.
 
       * every stage issues F and B of every (chunk, microbatch) exactly
         once (chunk count inferred from the events);
@@ -272,8 +292,10 @@ def validate_schedule(order: list[list[Event]], n_stages: int,
 
 def flatten_schedule(order: list[list[Event]], n_stages: int,
                      n_micro: int) -> list[Event]:
-    """A single dependency-consistent global issue order (the eager
-    engine executes events in this order). Raises on deadlock."""
+    """Build a single dependency-consistent global issue order.
+
+    The eager engine executes events in this order. Raises on deadlock.
+    """
     del n_micro
     V = n_chunks_of(order)
     ptr = [0] * n_stages
@@ -301,11 +323,13 @@ def flatten_schedule(order: list[list[Event]], n_stages: int,
 
 def peak_stash(order: "Sequence[Sequence[Event | TimedEvent]]"
                ) -> list[int]:
-    """Per-stage peak number of in-flight forward activations (stash) —
-    the pipeline's activation-memory driver: GPipe peaks at n_micro,
+    """Per-stage peak number of in-flight forward activations (stash).
+
+    The pipeline's activation-memory driver: GPipe peaks at n_micro,
     1F1B at min(S - s, M). A stash is released by the event that last
     consumes the stage input: ``W`` when the stage splits its backward
-    (zero-bubble), else ``B``."""
+    (zero-bubble), else ``B``.
+    """
     peaks: list[int] = []
     for evs in order:
         release = "W" if any(e.kind == "W" for e in evs) else "B"
@@ -325,14 +349,16 @@ def max_feasible_micro(plan: "StagePlan", schedule: str, *,
                        mem_budget: float | Sequence[float],
                        cap: int = 64,
                        n_chunks: int = DEFAULT_CHUNKS) -> int:
-    """Largest microbatch count whose peak activation stash fits the
-    memory budget per stage at a FIXED microbatch size. ``mb_act_bytes``
+    """Largest microbatch count whose peak stash fits the memory budget.
+
+    Evaluated per stage at a FIXED microbatch size. ``mb_act_bytes``
     and ``mem_budget`` are scalars (uniform across stages) or per-stage
     sequences. GPipe stashes all M microbatches, so its feasible M is
     memory-capped; 1F1B/zero-bubble stash is bounded by the stage depth
     regardless of M; interleaved stashes more warm-up activations (its
     M must also be a multiple of the stage count — other M are skipped
-    as infeasible)."""
+    as infeasible).
+    """
     S = plan.n_stages
     acts = list(mb_act_bytes) if isinstance(mb_act_bytes, Sequence) \
         else [float(mb_act_bytes)] * S
@@ -354,6 +380,8 @@ def max_feasible_micro(plan: "StagePlan", schedule: str, *,
 
 @dataclass
 class TimedEvent:
+    """A schedule event placed on the simulated clock."""
+
     kind: str                 # "F" | "B" | "W" | "X" (boundary transfer)
     stage: int                # executing stage (transfers: dst stage)
     mb: int
@@ -366,11 +394,14 @@ class TimedEvent:
 
     @property
     def dur(self) -> float:
+        """Event duration in simulated seconds."""
         return self.finish - self.start
 
 
 @dataclass
 class Timeline:
+    """Simulated execution of one schedule: events plus summary stats."""
+
     events: list[TimedEvent]
     makespan: float
     stage_busy: list[float]              # compute seconds per stage
@@ -387,6 +418,7 @@ class Timeline:
 
     def finish_of(self, kind: str, stage: int, mb: int,
                   chunk: int = 0) -> float:
+        """Finish time of the matching event; raises ``KeyError``."""
         for e in self.events:
             if e.kind == kind and e.stage == stage and e.mb == mb \
                     and e.chunk == chunk:
@@ -401,12 +433,14 @@ def _stage_speed(plan: "StagePlan", topo: Topology, s: int) -> float:
 
 def boundary_bytes(plan: "StagePlan", u_lo: int,
                    n_micro: int) -> float:
-    """Per-direction, per-microbatch bytes crossing the virtual boundary
-    (u_lo, u_lo + 1). Interior boundaries carry the traced stage-crossing
-    activation; chunk-wrap boundaries (last physical stage back to the
-    first, between chunks) are estimated as the mean interior crossing —
-    the wrapped tensor is the same hidden-state carry, just not present
-    in the unchunked trace."""
+    """Per-direction, per-microbatch bytes over boundary (u_lo, u_lo+1).
+
+    Interior boundaries carry the traced stage-crossing activation;
+    chunk-wrap boundaries (last physical stage back to the first,
+    between chunks) are estimated as the mean interior crossing — the
+    wrapped tensor is the same hidden-state carry, just not present in
+    the unchunked trace.
+    """
     S = plan.n_stages
     s = u_lo % S
     if s < S - 1:
@@ -420,7 +454,8 @@ def boundary_bytes(plan: "StagePlan", u_lo: int,
 
 def simulate_schedule(plan: "StagePlan", topo: Topology,
                       order: list[list[Event]], *,
-                      fwd_frac: float = FWD_FRAC) -> Timeline:
+                      fwd_frac: float = FWD_FRAC,
+                      overlap: str = "link") -> Timeline:
     """Dependency-driven timeline of a schedule on a topology.
 
     Per-stage compute is serial in the stage's issue order; forward of
@@ -432,7 +467,20 @@ def simulate_schedule(plan: "StagePlan", topo: Topology,
     as pipeline bubble exactly like on a real cluster. Interleaved
     chunks split each stage's compute by the chunk count and pay the
     extra chunk-boundary transfers.
+
+    ``overlap`` picks the transfer/compute overlap model
+    (``OVERLAP_MODES``): ``"link"`` (legacy) lets transfers overlap all
+    compute and serialize only per directed link; ``"none"`` charges
+    each transfer to the destination stage row as well, matching the
+    eager engine's synchronous per-event ``device_put``; ``"full"``
+    models double-buffered boundaries — a transfer departing while (or
+    exactly when) its link is still streaming the previous one joins
+    the stream and pays only the bandwidth term, not the wire latency.
     """
+    if overlap not in OVERLAP_MODES:
+        raise ValueError(
+            f"unknown overlap mode {overlap!r} (use one of "
+            f"{OVERLAP_MODES})")
     S = len(order)
     V = n_chunks_of(order)
     U = S * V
@@ -447,20 +495,23 @@ def simulate_schedule(plan: "StagePlan", topo: Topology,
         bwd_t.append(compute_time(flops_m * (1.0 - fwd_frac), speed))
 
     def dur_of(e: Event) -> float:
+        """Compute duration of one event on its stage."""
         if e.kind == "F":
             return fwd_t[e.stage] / V
         if e.kind == "W":
             return bwd_t[e.stage] / V * (1.0 - ZB_DGRAD_FRAC)
         return bwd_t[e.stage] / V * (ZB_DGRAD_FRAC if has_w else 1.0)
 
-    def xfer_t(u_lo: int, src_stage: int,
-               dst_stage: int) -> tuple[float, float]:
+    def xfer_t(u_lo: int, src_stage: int, dst_stage: int,
+               streamed: bool = False) -> tuple[float, float]:
+        """(transfer seconds, bytes) across one virtual boundary."""
         gi = plan.stages[src_stage].device_group
         gj = plan.stages[dst_stage].device_group
         nb = boundary_bytes(plan, u_lo, M)
         if nb <= 0 or gi == gj:
             return 0.0, 0.0
-        return transfer_time(nb, topo.bw(gi, gj), topo.latency), nb
+        lat = 0.0 if streamed else topo.latency
+        return transfer_time(nb, topo.bw(gi, gj), lat), nb
 
     # (kind, stage, mb, chunk) -> finish time
     finish: dict[tuple[str, int, int, int], float] = {}
@@ -493,12 +544,21 @@ def simulate_schedule(plan: "StagePlan", topo: Topology,
         t0 = finish[key]
         src = key[1]
         u_lo = min(u, p)
-        dur, nb = xfer_t(u_lo, src, e.stage)
-        if dur <= 0:
-            return t0, None
         gi = plan.stages[src].device_group
         gj = plan.stages[e.stage].device_group
-        s0 = max(t0, link_free.get((gi, gj), 0.0))
+        free = link_free.get((gi, gj), 0.0)
+        # "full": joining a still-busy (or just-freed) link streams
+        # behind the previous transfer — latency already paid once
+        streamed = overlap == "full" and free > 0.0 and t0 <= free
+        dur, nb = xfer_t(u_lo, src, e.stage, streamed=streamed)
+        if dur <= 0:
+            return t0, None
+        s0 = max(t0, free)
+        if overlap == "none":
+            # eager engine: the synchronous device_put blocks the
+            # destination stage's dispatch thread
+            s0 = max(s0, stage_free[e.stage])
+            stage_free[e.stage] = s0 + dur
         link_free[(gi, gj)] = s0 + dur
         return s0 + dur, TimedEvent("X", e.stage, e.mb, s0, s0 + dur,
                                     src=src, chunk=e.chunk, nbytes=nb)
@@ -531,17 +591,20 @@ def simulate_schedule(plan: "StagePlan", topo: Topology,
     makespan = max((e.finish for e in events), default=0.0)
     return Timeline(events=events, makespan=makespan, stage_busy=busy,
                     n_stages=S, n_micro=M, n_chunks=V,
-                    meta={"fwd_t": fwd_t, "bwd_t": bwd_t})
+                    meta={"fwd_t": fwd_t, "bwd_t": bwd_t,
+                          "overlap": overlap})
 
 
 # ------------------------------------------------ search-facing costing
 
 def stage_sync_time(plan: "StagePlan", topo: Topology) -> float:
-    """Worst per-stage gradient-sync time (intra-group collective after
-    the flush). Stages sync on disjoint device groups, so they overlap —
-    the slowest one bounds the step. SFB stages broadcast sufficient
+    """Worst per-stage gradient-sync time (collective after the flush).
+
+    Stages sync on disjoint device groups, so they overlap — the
+    slowest one bounds the step. SFB stages broadcast sufficient
     factors with the activations and recompute locally, so they add no
-    post-flush sync."""
+    post-flush sync.
+    """
     worst = 0.0
     for st in plan.stages:
         if st.grad_bytes <= 0 or st.n_devices <= 1 or st.sync == "sfb":
@@ -561,7 +624,8 @@ def schedule_step_cost(plan: "StagePlan", topo: Topology,
                        n_chunks: int = DEFAULT_CHUNKS,
                        mb_act_bytes: Sequence[float] | None = None,
                        mem_budget: Sequence[float] | None = None,
-                       include_sync: bool = True
+                       include_sync: bool = True,
+                       overlap: str = "full"
                        ) -> dict[str, object] | None:
     """Memory-capped effective per-global-batch cost of one schedule.
 
@@ -573,6 +637,13 @@ def schedule_step_cost(plan: "StagePlan", topo: Topology,
     overflow is infeasible. Returns ``None`` when no microbatch depth
     fits, else a dict with ``n_micro/flushes/flush_time_s/step_time_s/
     bubble_frac/sync_time_s/timeline``.
+
+    ``overlap`` is the transfer/compute overlap model the timeline runs
+    under (``OVERLAP_MODES``). The default is ``"full"`` — the
+    double-buffered streaming model of the compiled scan engine — so
+    MCTS and the feedback loop rank strategies under the costing of the
+    engine that actually executes them; pass ``"link"`` for the legacy
+    per-link-serialization model.
     """
     S = plan.n_stages
     if mb_act_bytes is None:
@@ -595,7 +666,7 @@ def schedule_step_cost(plan: "StagePlan", topo: Topology,
     m = min(m, global_micro)
     flushes = -(-global_micro // m)
     order = make_schedule(schedule, S, m, n_chunks=n_chunks)
-    tl = simulate_schedule(plan, topo, order)
+    tl = simulate_schedule(plan, topo, order, overlap=overlap)
     sync = stage_sync_time(plan, topo) if include_sync else 0.0
     return {"schedule": schedule, "n_micro": m, "flushes": flushes,
             "flush_time_s": tl.makespan,
@@ -609,12 +680,14 @@ def timeline_to_simresult(plan: "StagePlan", tl: Timeline,
                           gg: "GroupedGraph | None" = None, *,
                           flushes: int = 1,
                           sync_time: float = 0.0) -> "SimResult":
-    """Project a schedule ``Timeline`` into the ``SimResult`` shape the
-    GNN featurization consumes (runtime-feedback features part 3), so
-    schedule-aware MCTS evaluations feed the policy the same way FIFO
-    evaluations do: per-device busy/idle, per-link busy, peak memory,
-    and per-op-group start/finish mapped through the stage that hosts
-    the group."""
+    """Project a schedule ``Timeline`` into the ``SimResult`` shape.
+
+    The GNN featurization consumes it (runtime-feedback features part
+    3), so schedule-aware MCTS evaluations feed the policy the same way
+    FIFO evaluations do: per-device busy/idle, per-link busy, peak
+    memory, and per-op-group start/finish mapped through the stage that
+    hosts the group.
+    """
     from repro.core.simulator import SimResult
 
     step = flushes * tl.makespan + sync_time

@@ -113,9 +113,11 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, rules: AxisRules,
 
 def make_pipeline_train_step(opt: AdamW, runner,
                              options: StepOptions | None = None):
-    """Train-step builder for the pipeline execution engine.
+    """Train-step builder for the pipeline execution engines.
 
-    ``runner`` is a ``repro.exec.engine.PipelineRunner``; params/opt
+    ``runner`` is a ``repro.exec.engine.PipelineRunner`` or
+    ``CompiledPipelineRunner`` — both satisfy the same
+    ``step() -> (grads_list, StepStats)`` contract; params/opt
     state are per-stage lists committed to the stage devices. The
     optimizer update runs per stage (jitted once per stage, computation
     stays on the stage's devices); gradient clipping is by the GLOBAL

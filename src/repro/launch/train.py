@@ -116,10 +116,18 @@ def _drain_tracer_to_spool(spool):
 
 
 def run_pipeline(args, cfg, stage_plan):
-    """Train via the pipeline execution engine (repro.exec)."""
-    from repro.exec import PipelineRunner, split_model
+    """Train via a pipeline execution engine (repro.exec): the eager
+    per-event engine, or the scan-rolled compiled engine
+    (``--engine scan``)."""
+    from repro.exec import (
+        CompiledPipelineRunner, PipelineRunner, split_model)
     from repro.optim.adam import AdamW
 
+    # tests drive run_pipeline with hand-built Namespaces — default the
+    # newer knobs instead of requiring them
+    engine = getattr(args, "engine", "eager")
+    if engine not in ("eager", "scan"):
+        raise ValueError(f"unknown engine {engine!r} (eager|scan)")
     schedule = stage_plan.schedule if args.pipeline == "auto" \
         else args.pipeline
     n_chunks = max(2, args.n_chunks) if schedule == "interleaved" else 1
@@ -170,12 +178,20 @@ def run_pipeline(args, cfg, stage_plan):
         from repro.runtime.telemetry import MeasurementStore
         store = MeasurementStore(args.telemetry_dir)
     spool = _make_spool(args)
-    runner = PipelineRunner(
-        fns, stage_plan, device_sets, schedule=schedule, n_micro=n_micro,
-        n_chunks=n_chunks, mb_keys=mb_keys, tied_ref=tied, store=store,
-        spool=spool,
+    runner_kw = dict(
+        schedule=schedule, n_micro=n_micro, n_chunks=n_chunks,
+        mb_keys=mb_keys, tied_ref=tied, store=store, spool=spool,
         meta={"arch": args.arch, "batch": args.batch, "seq": args.seq,
-              "launcher": "train", "run_id": _run_id(args)})
+              "launcher": "train", "engine": engine,
+              "run_id": _run_id(args)})
+    if engine == "scan":
+        runner = CompiledPipelineRunner(
+            fns, stage_plan, device_sets,
+            unroll=max(1, getattr(args, "scan_unroll", 1)), **runner_kw)
+        print(f"pipeline engine: scan (rolled lax.scan programs, "
+              f"unroll={runner.unroll})", flush=True)
+    else:
+        runner = PipelineRunner(fns, stage_plan, device_sets, **runner_kw)
 
     opt = AdamW(lr=args.lr)
     params_list = runner.place_params(stage_params)
@@ -285,6 +301,16 @@ def main(argv=None):
                          "auto uses the schedule the searched strategy "
                          "voted for (legacy plans: 1f1b), off forces "
                          "single-mesh rules")
+    ap.add_argument("--engine", choices=["eager", "scan"],
+                    default="eager",
+                    help="pipeline execution engine: eager dispatches "
+                         "every schedule event from Python; scan runs "
+                         "the compiled scan-rolled engine (per-stage "
+                         "lax.scan programs, bulk double-buffered "
+                         "boundary transfers, GPipe-like stash)")
+    ap.add_argument("--scan-unroll", type=int, default=1,
+                    help="lax.scan unroll factor for --engine scan "
+                         "(1 keeps compile time flat in n_micro)")
     ap.add_argument("--n-micro", type=int, default=4,
                     help="microbatches per pipelined step")
     ap.add_argument("--n-chunks", type=int, default=2,

@@ -1,7 +1,8 @@
-"""Static plan verifier (device-free analyses over searched
-deployments): happens-before deadlock/race detection, per-device
-memory-budget proofs, collective-matching and placement-feasibility
-lint — all emitted as stable ``TAGxxx`` diagnostics.
+"""Static plan verifier: device-free analyses over searched deployments.
+
+Happens-before deadlock/race detection, per-device memory-budget
+proofs, collective-matching and placement-feasibility lint — all
+emitted as stable ``TAGxxx`` diagnostics.
 
     from repro.verify import verify_deployment
     report = verify_deployment(gg, strategy, topo)

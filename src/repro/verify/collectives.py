@@ -51,6 +51,7 @@ def analyze_collectives(plan: "StagePlan", topo: "Topology | None" = None,
                         strat: Strategy | None = None,
                         device_counts: Sequence[int] | None = None
                         ) -> Report:
+    """Lint every stage's gradient-sync collective (TAG301-TAG306)."""
     rep = Report()
     for s, st in enumerate(plan.stages):
         ndev = _stage_ndev(plan, s, topo, device_counts)
@@ -84,8 +85,10 @@ def analyze_collectives(plan: "StagePlan", topo: "Topology | None" = None,
 
 def _check_votes(plan: "StagePlan", gg: "GroupedGraph",
                  strat: Strategy, rep: Report) -> None:
-    """Cross-check each stage's mode against its member op groups'
-    searched actions: mixed votes and placement drift."""
+    """Cross-check each stage's mode against its members' searched actions.
+
+    Flags mixed sync votes (TAG303) and placement drift (TAG305).
+    """
     for s, st in enumerate(plan.stages):
         modes: set[str] = set()
         drifted: list[int] = []

@@ -25,6 +25,8 @@ from typing import Iterable, Iterator
 
 
 class Severity(enum.Enum):
+    """Diagnostic severity: ``error`` is unsound, the rest is lint."""
+
     ERROR = "error"
     WARN = "warn"
     INFO = "info"
@@ -74,6 +76,7 @@ CODES: dict[str, tuple[Severity, str]] = {
 @dataclass(frozen=True)
 class Loc:
     """Source location of a diagnostic inside a deployment."""
+
     stage: int | None = None
     mb: int | None = None
     chunk: int | None = None
@@ -92,6 +95,7 @@ class Loc:
         return ", ".join(parts)
 
     def to_dict(self) -> dict[str, int]:
+        """JSON-safe dict with only the populated location fields."""
         out: dict[str, int] = {}
         for k in ("stage", "mb", "chunk", "event_index"):
             v = getattr(self, k)
@@ -102,6 +106,8 @@ class Loc:
 
 @dataclass(frozen=True)
 class Diagnostic:
+    """One finding: a stable ``TAGxxx`` code, severity, message, location."""
+
     code: str
     severity: Severity
     message: str
@@ -109,14 +115,17 @@ class Diagnostic:
 
     @property
     def title(self) -> str:
+        """Short title the code table assigns to this code."""
         return CODES[self.code][1] if self.code in CODES else self.code
 
     def format(self) -> str:
+        """One human-readable ``CODE severity: [loc] message`` line."""
         where = str(self.loc)
         at = f" [{where}]" if where else ""
         return f"{self.code} {self.severity}:{at} {self.message}"
 
     def to_dict(self) -> dict[str, object]:
+        """JSON-safe dict form (code, severity, title, message, loc)."""
         return {"code": self.code, "severity": str(self.severity),
                 "title": self.title, "message": self.message,
                 "loc": self.loc.to_dict()}
@@ -135,17 +144,20 @@ def make(code: str, message: str, *, stage: int | None = None,
 @dataclass
 class Report:
     """An ordered collection of diagnostics plus convenience views."""
+
     diagnostics: list[Diagnostic] = field(default_factory=list)
 
     def add(self, code: str, message: str, *, stage: int | None = None,
             mb: int | None = None, chunk: int | None = None,
             event_index: int | None = None) -> Diagnostic:
+        """Append (and return) a diagnostic built from the code table."""
         d = make(code, message, stage=stage, mb=mb, chunk=chunk,
                  event_index=event_index)
         self.diagnostics.append(d)
         return d
 
     def extend(self, other: "Report") -> "Report":
+        """Absorb another report's diagnostics; returns ``self``."""
         self.diagnostics.extend(other.diagnostics)
         return self
 
@@ -156,13 +168,16 @@ class Report:
         return iter(self.diagnostics)
 
     def errors(self) -> list[Diagnostic]:
+        """Error-severity diagnostics, in report order."""
         return [d for d in self.diagnostics
                 if d.severity is Severity.ERROR]
 
     def warnings(self) -> list[Diagnostic]:
+        """Warn-severity diagnostics, in report order."""
         return [d for d in self.diagnostics if d.severity is Severity.WARN]
 
     def infos(self) -> list[Diagnostic]:
+        """Info-severity diagnostics, in report order."""
         return [d for d in self.diagnostics if d.severity is Severity.INFO]
 
     @property
@@ -172,6 +187,7 @@ class Report:
 
     @property
     def verdict(self) -> str:
+        """Worst severity present: ``error`` | ``warn`` | ``clean``."""
         if self.errors():
             return "error"
         if self.warnings():
@@ -179,6 +195,7 @@ class Report:
         return "clean"
 
     def codes(self) -> set[str]:
+        """The set of distinct codes present in the report."""
         return {d.code for d in self.diagnostics}
 
     def has(self, *codes: str) -> bool:
@@ -195,10 +212,12 @@ class Report:
                 "codes": sorted(self.codes())}
 
     def to_dict(self) -> dict[str, object]:
+        """JSON-safe dict: the summary plus every diagnostic."""
         return {"summary": self.summary(),
                 "diagnostics": [d.to_dict() for d in self.diagnostics]}
 
     def format(self, *, max_lines: int = 0) -> str:
+        """Multi-line human rendering; truncated past ``max_lines``."""
         lines = [d.format() for d in self.diagnostics]
         if max_lines and len(lines) > max_lines:
             lines = [*lines[:max_lines],
@@ -220,6 +239,7 @@ class PlanVerificationError(RuntimeError):
 
 
 def merge(reports: Iterable[Report]) -> Report:
+    """Concatenate reports into one, preserving order."""
     out = Report()
     for r in reports:
         out.extend(r)

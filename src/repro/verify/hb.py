@@ -121,9 +121,11 @@ def _check_local_order(order: list[list[Event]], rep: Report) -> None:
 
 
 def _dep_key(e: Event, n_stages: int, n_chunks: int) -> EventKey | None:
-    """Cross-event dependency key (``exec.schedule._dep_of`` semantics,
-    re-derived here so the verifier stays independent of executor
-    internals it is checking)."""
+    """Cross-event dependency key of ``e`` (or None).
+
+    Re-derives ``exec.schedule._dep_of`` semantics so the verifier stays
+    independent of the executor internals it is checking.
+    """
     S, U = n_stages, n_stages * n_chunks
     u = e.chunk * S + e.stage
     if e.kind == "F":
@@ -160,6 +162,7 @@ def build_hb_graph(order: list[list[Event]], n_stages: int,
     succs: dict[EventKey, list[EventKey]] = {k: [] for k in nodes}
 
     def edge(a: EventKey, b: EventKey) -> None:
+        """Add ``a -> b`` when both endpoints exist (and differ)."""
         if a in present and b in present and a != b:
             succs[a].append(b)
 
@@ -179,9 +182,12 @@ def build_hb_graph(order: list[list[Event]], n_stages: int,
 def _find_cycle(nodes: list[EventKey],
                 succs: dict[EventKey, list[EventKey]]
                 ) -> list[EventKey]:
-    """One cycle of the graph (empty list when acyclic): Kahn's
-    algorithm leaves exactly the nodes on/behind cycles unprocessed;
-    walk successors inside that residue until a node repeats."""
+    """One cycle of the graph, as a node list (empty when acyclic).
+
+    Kahn's algorithm leaves exactly the nodes on/behind cycles
+    unprocessed; walk predecessors inside that residue until a node
+    repeats.
+    """
     indeg: dict[EventKey, int] = {k: 0 for k in nodes}
     for k in nodes:
         for j in succs[k]:
@@ -245,8 +251,10 @@ def _boundary_seq(order: list[list[Event]], kind: str, stage: int,
 
 def _check_boundaries(order: list[list[Event]], n_stages: int,
                       n_chunks: int, rep: Report) -> None:
-    """Pair producer sends with consumer recvs per directed virtual
-    boundary; flag unmatched traffic (TAG106) and reorders (TAG107)."""
+    """Pair producer sends with consumer recvs per virtual boundary.
+
+    Flags unmatched traffic (TAG106) and reorders (TAG107).
+    """
     S, U = n_stages, n_stages * n_chunks
     n106 = n107 = 0
     for u in range(1, U):

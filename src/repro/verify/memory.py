@@ -16,12 +16,21 @@ with the exact overshoot when it fails:
 (GPipe: n_micro; 1F1B/zero-bubble: min(S - s, M); interleaved: the
 deeper virtual warm-up), so the proof is per (plan, topology, schedule,
 n_micro) — exactly the deployment that would run.
+
+The proof is ALSO engine-specific (``engine=``): the eager engine
+follows the schedule's ``peak_stash`` exactly, but the scan-rolled
+engine (``exec.engine.CompiledPipelineRunner``) executes in dataflow
+order and stashes ALL ``n_micro`` inputs per hosted virtual stage —
+GPipe-like memory whatever the schedule family — plus one extra
+``n_micro``-deep stacked boundary buffer per stage (the double-buffered
+transfer: producer output and consumer copy coexist while the bulk
+``device_put`` streams).
 """
 from __future__ import annotations
 
 from typing import TYPE_CHECKING
 
-from repro.exec.schedule import Event, peak_stash
+from repro.exec.schedule import Event, n_chunks_of, peak_stash
 from repro.verify.diagnostics import Report
 
 if TYPE_CHECKING:
@@ -42,22 +51,45 @@ def _fmt_bytes(n: float) -> str:
 
 
 def stage_act_bytes(plan: "StagePlan", n_micro: int) -> list[float]:
-    """Per-stage, per-microbatch boundary activation bytes: the stage's
-    input (previous stage's crossing bytes; stage 0 stashes its own
-    microbatch input, approximated by its out edge as in
-    ``schedule_step_cost``)."""
+    """Per-stage, per-microbatch boundary activation bytes.
+
+    Each stage stashes its input — the previous stage's crossing bytes;
+    stage 0 stashes its own microbatch input, approximated by its out
+    edge as in ``schedule_step_cost``.
+    """
     S = plan.n_stages
     return [
         (plan.stages[s - 1].out_bytes if s else plan.stages[0].out_bytes)
         / max(n_micro, 1) for s in range(S)]
 
 
+def engine_peak_stash(order: list[list[Event]], n_micro: int,
+                      engine: str = "eager") -> list[int]:
+    """Per-stage peak stash count under the executing engine.
+
+    ``"eager"`` follows the schedule (``peak_stash``). ``"scan"`` is the
+    compiled engine's dataflow execution: every hosted virtual chunk
+    stashes all ``n_micro`` inputs, plus one ``n_micro``-deep stacked
+    boundary double-buffer per stage.
+    """
+    if engine == "eager":
+        return peak_stash(order)
+    if engine == "scan":
+        V = n_chunks_of(order)
+        return [n_micro * V + n_micro for _ in order]
+    raise ValueError(f"unknown engine {engine!r} (use 'eager' or 'scan')")
+
+
 def analyze_memory(plan: "StagePlan", topo: "Topology",
-                   order: list[list[Event]], n_micro: int) -> Report:
-    """Prove every stage's device group holds its residents plus the
-    schedule's peak activation stash."""
+                   order: list[list[Event]], n_micro: int, *,
+                   engine: str = "eager") -> Report:
+    """Prove every stage's device group fits its peak working set.
+
+    Residents (params, grads, optimizer state) plus the engine's peak
+    activation stash under this schedule (TAG201/TAG202).
+    """
     rep = Report()
-    peaks = peak_stash(order)
+    peaks = engine_peak_stash(order, n_micro, engine)
     acts = stage_act_bytes(plan, n_micro)
     for s, st in enumerate(plan.stages):
         if not (0 <= st.device_group < topo.m):

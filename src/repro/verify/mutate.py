@@ -31,6 +31,7 @@ from repro.verify.diagnostics import Report
 @dataclass
 class MutationContext:
     """Everything one verification pass consumes, mutable in place."""
+
     plan: StagePlan
     topo: Topology
     order: list[list[Event]]
@@ -43,11 +44,14 @@ class MutationContext:
 
     @property
     def n_stages(self) -> int:
+        """Stage count of the context's plan."""
         return self.plan.n_stages
 
 
 @dataclass(frozen=True)
 class Mutation:
+    """One seeded violation: a mutator plus the codes it must trigger."""
+
     name: str
     klass: str                 # violation class (acceptance taxonomy)
     expect: tuple[str, ...]    # every listed code must be reported
@@ -56,9 +60,12 @@ class Mutation:
 
 def make_context(schedule: str, *, n_stages: int = 4, n_micro: int = 8,
                  n_chunks: int = 2) -> MutationContext:
-    """A small, clean, fully synthetic deployment: ``n_stages`` stages
-    over a homogeneous V100 topology, modest tensors, well inside every
-    budget — the verifier must report zero errors on it."""
+    """Build a small, clean, fully synthetic deployment.
+
+    ``n_stages`` stages over a homogeneous V100 topology, modest
+    tensors, well inside every budget — the verifier must report zero
+    errors on it.
+    """
     gbps = 1e9 / 8
     groups = [DeviceGroup(g, "V100", 2, intra_bw=300 * gbps)
               for g in range(n_stages)]
@@ -103,8 +110,10 @@ def _mid_stage(ctx: MutationContext) -> int:
 
 
 def _drop_event(ctx: MutationContext) -> bool:
-    """Remove one backward from a middle stage: a coverage hole and an
-    unmatched boundary recv downstream."""
+    """Remove one backward from a middle stage.
+
+    Creates a coverage hole and an unmatched boundary recv downstream.
+    """
     s = _mid_stage(ctx)
     evs = ctx.order[s]
     idx = next((i for i, e in enumerate(evs) if e.kind == "B"), None)
@@ -126,9 +135,11 @@ def _duplicate_event(ctx: MutationContext) -> bool:
 
 
 def _swap_dependency_deadlock(ctx: MutationContext) -> bool:
-    """Move stage 0's last forward behind its own backward chain: the
-    downstream stages' forwards now wait on an event that waits (through
-    the backward chain) on them — a pure happens-before cycle."""
+    """Move stage 0's last forward behind its own backward chain.
+
+    The downstream stages' forwards now wait on an event that waits
+    (through the backward chain) on them — a pure happens-before cycle.
+    """
     if ctx.n_stages < 2:
         return False
     evs = ctx.order[0]
@@ -138,9 +149,11 @@ def _swap_dependency_deadlock(ctx: MutationContext) -> bool:
 
 
 def _reorder_transfer_race(ctx: MutationContext) -> bool:
-    """Swap the last stage's first two forward arrivals (within chunk
-    0): the producer still emits mb 0 then 1, the consumer now awaits
-    1 then 0 — reordered traffic on a FIFO boundary link."""
+    """Swap the last stage's first two forward arrivals (chunk 0).
+
+    The producer still emits mb 0 then 1, the consumer now awaits 1
+    then 0 — reordered traffic on a FIFO boundary link.
+    """
     if ctx.n_stages < 2:
         return False
     evs = ctx.order[ctx.n_stages - 1]
@@ -154,8 +167,7 @@ def _reorder_transfer_race(ctx: MutationContext) -> bool:
 
 
 def _w_before_b(ctx: MutationContext) -> bool:
-    """Hoist a weight-grad above the backward it consumes (zero-bubble
-    schedules only)."""
+    """Hoist a weight-grad above the backward it consumes (zb only)."""
     for evs in ctx.order:
         wi = next((i for i, e in enumerate(evs) if e.kind == "W"), None)
         if wi is None:
@@ -201,8 +213,10 @@ def _capacity_mismatch(ctx: MutationContext) -> bool:
 
 
 def _non_contiguous_span(ctx: MutationContext) -> bool:
-    """Swap an op group between the first and last stages: both spans
-    now straddle each other in topological order."""
+    """Swap an op group between the first and last stages.
+
+    Both spans now straddle each other in topological order.
+    """
     if ctx.n_stages < 2:
         return False
     a, b = ctx.plan.stages[0], ctx.plan.stages[-1]

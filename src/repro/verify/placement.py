@@ -31,8 +31,10 @@ if TYPE_CHECKING:
 
 
 def group_positions(gg: "GroupedGraph") -> dict[int, float]:
-    """Mean topological position per op group (the order
-    ``build_stage_plan`` cut along)."""
+    """Mean topological position per op group.
+
+    This is the order ``build_stage_plan`` cut along.
+    """
     order = {op: i for i, op in enumerate(gg.base.topo_order())}
     pos: dict[int, float] = {}
     for g in gg.groups:
@@ -44,6 +46,7 @@ def group_positions(gg: "GroupedGraph") -> dict[int, float]:
 def analyze_placement(plan: "StagePlan", topo: "Topology | None" = None,
                       *, positions: Mapping[int, float] | None = None,
                       n_chunks: int = 1) -> Report:
+    """Check stage spans and device references (TAG401-TAG406)."""
     rep = Report()
     m = topo.m if topo is not None else None
 

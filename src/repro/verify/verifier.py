@@ -48,10 +48,12 @@ def resolve_schedule_params(plan: "StagePlan",
                             n_micro: int | None = None,
                             n_chunks: int | None = None
                             ) -> tuple[str, int, int, Report]:
-    """The (schedule, n_micro, n_chunks) triple that would actually run,
-    normalized the same way the launcher normalizes it (interleaved
+    """Resolve the (schedule, n_micro, n_chunks) triple that would run.
+
+    Normalized the same way the launcher normalizes it (interleaved
     needs ``n_micro % n_stages == 0``), with an info diagnostic when
-    normalization changed the request."""
+    normalization changed the request.
+    """
     rep = Report()
     sched = schedule or plan.schedule or "1f1b"
     m = int(n_micro if n_micro is not None else plan.n_micro)
@@ -78,8 +80,15 @@ def verify_stage_plan(plan: "StagePlan",
                       schedule: str | None = None,
                       n_micro: int | None = None,
                       n_chunks: int | None = None,
-                      order: list[list[Event]] | None = None) -> Report:
-    """Full static verification of one executable stage plan."""
+                      order: list[list[Event]] | None = None,
+                      engine: str = "eager") -> Report:
+    """Full static verification of one executable stage plan.
+
+    ``engine`` selects the memory-proof accounting: ``"eager"`` follows
+    the schedule's peak stash, ``"scan"`` proves the compiled engine's
+    all-microbatch stash plus double-buffered boundary stacks
+    (``memory.engine_peak_stash``).
+    """
     sched, m, V, rep = resolve_schedule_params(
         plan, schedule=schedule, n_micro=n_micro, n_chunks=n_chunks)
     if plan.n_stages < 1:
@@ -103,15 +112,18 @@ def verify_stage_plan(plan: "StagePlan",
     rep.extend(collectives_mod.analyze_collectives(plan, topo, gg=gg,
                                                    strat=strat))
     if topo is not None:
-        rep.extend(memory_mod.analyze_memory(plan, topo, order, m))
+        rep.extend(memory_mod.analyze_memory(plan, topo, order, m,
+                                             engine=engine))
     return rep
 
 
 def _verify_strategy_structure(strat: Strategy,
                                topo: "Topology") -> Report:
-    """Strategy-level structure checks that apply with or without a
-    pipeline: placements must reference real device groups, and SFB
-    (DUP) needs >= 2 devices to broadcast factors between."""
+    """Structure checks that apply with or without a pipeline.
+
+    Placements must reference real device groups, and SFB (DUP) needs
+    >= 2 devices to broadcast factors between.
+    """
     rep = Report()
     for gid, a in enumerate(strat.actions):
         if a is None:
@@ -137,10 +149,12 @@ def _verify_strategy_structure(strat: Strategy,
 def verify_deployment(gg: "GroupedGraph", strat: Strategy,
                       topo: "Topology", *,
                       n_micro: int | None = None) -> Report:
-    """Verify a searched strategy end to end: strategy structure, and —
-    when it pipelines — the lowered stage plan under its voted
-    schedule. This is the check ``PlannerService`` runs before caching
-    and the ``repro-plan verify`` CLI renders."""
+    """Verify a searched strategy end to end.
+
+    Strategy structure, and — when it pipelines — the lowered stage
+    plan under its voted schedule. This is the check ``PlannerService``
+    runs before caching and the ``repro-plan verify`` CLI renders.
+    """
     rep = _verify_strategy_structure(strat, topo)
     if rep.errors():
         return rep          # a broken placement cannot be lowered
@@ -157,11 +171,14 @@ def verify_preflight(plan: "StagePlan",
                      order: list[list[Event]], n_micro: int, *,
                      n_chunks: int = 1,
                      device_counts: list[int] | None = None) -> Report:
-    """Device-free preflight for the engine/launcher: happens-before
-    over the exact event lists about to execute, plus collective and
-    structural checks from the plan alone (no topology on the host).
-    ``device_counts`` are the per-stage device-set sizes the run will
-    actually use (they override the plan's recorded topology counts)."""
+    """Device-free preflight for the engine/launcher.
+
+    Happens-before over the exact event lists about to execute, plus
+    collective and structural checks from the plan alone (no topology
+    on the host). ``device_counts`` are the per-stage device-set sizes
+    the run will actually use (they override the plan's recorded
+    topology counts).
+    """
     rep = hb_mod.analyze_schedule(order, plan.n_stages, n_micro,
                                   n_chunks=n_chunks)
     rep.extend(placement_mod.analyze_placement(plan, None,

@@ -407,6 +407,121 @@ def test_bubble_decreases_with_microbatching():
     assert bubbles[1] < bubbles[0]
 
 
+# ------------------------------------------------- overlap-aware timeline
+
+def _xfer_link(plan, e):
+    return (plan.stages[e.src].device_group,
+            plan.stages[e.stage].device_group)
+
+
+def test_overlap_modes_order_makespans():
+    """The three overlap models order as expected on a transfer-heavy
+    pipeline: "full" (streamed double-buffered boundaries) beats "link"
+    (legacy: transfers overlap compute, serialize per link) beats
+    "none" (eager-faithful: transfers block the destination row)."""
+    topo = make_testbed()
+    plan = _uniform_plan(S=3, M=6, out_bytes=5e8)
+    order = make_schedule("gpipe", 3, 6)
+    tls = {m: simulate_schedule(plan, topo, order, overlap=m)
+           for m in ("none", "link", "full")}
+    assert tls["full"].makespan < tls["link"].makespan
+    assert tls["link"].makespan < tls["none"].makespan
+    for m, tl in tls.items():
+        assert tl.meta["overlap"] == m
+    with pytest.raises(ValueError, match="overlap"):
+        simulate_schedule(plan, topo, order, overlap="bogus")
+
+
+def test_overlap_transfers_overlap_compute_on_distinct_resources():
+    """Under "link"/"full" a boundary transfer may run while its
+    destination stage computes something else (distinct resources);
+    under "none" the destination row is occupied by the transfer."""
+    topo = make_testbed()
+    plan = _uniform_plan(S=3, M=6, out_bytes=5e8)
+    order = make_schedule("gpipe", 3, 6)
+
+    def overlaps(tl):
+        comp = [e for e in tl.events if e.kind != "X"]
+        n = 0
+        for x in (e for e in tl.events if e.kind == "X"):
+            for c in comp:
+                if c.stage == x.stage and c.start < x.finish - 1e-15 \
+                        and x.start < c.finish - 1e-15:
+                    n += 1
+        return n
+    assert overlaps(simulate_schedule(plan, topo, order,
+                                      overlap="link")) > 0
+    assert overlaps(simulate_schedule(plan, topo, order,
+                                      overlap="full")) > 0
+    assert overlaps(simulate_schedule(plan, topo, order,
+                                      overlap="none")) == 0
+
+
+def test_overlap_shared_link_still_serializes():
+    """Every overlap mode keeps transfers on the SAME directed link
+    serialized — streaming amortizes latency, it does not parallelize
+    the wire."""
+    topo = make_testbed()
+    plan = _uniform_plan(S=3, M=6, out_bytes=5e8)
+    order = make_schedule("gpipe", 3, 6)
+    for mode in ("none", "link", "full"):
+        tl = simulate_schedule(plan, topo, order, overlap=mode)
+        by_link: dict = {}
+        for e in tl.events:
+            if e.kind == "X":
+                by_link.setdefault(_xfer_link(plan, e), []).append(e)
+        assert by_link, "plan should cross device groups"
+        for evs in by_link.values():
+            evs.sort(key=lambda e: e.start)
+            for a, b in zip(evs, evs[1:]):
+                assert b.start >= a.finish - 1e-12, (mode, a, b)
+
+
+def test_overlap_full_streams_latency():
+    """"full" only drops the wire latency on back-to-back transfers:
+    every streamed transfer is shorter than a cold one by exactly the
+    topology latency, and the first transfer on each link stays cold."""
+    topo = make_testbed()
+    plan = _uniform_plan(S=3, M=6, out_bytes=5e8)
+    order = make_schedule("gpipe", 3, 6)
+    cold = {}
+    for e in simulate_schedule(plan, topo, order,
+                               overlap="link").events:
+        if e.kind == "X":
+            cold.setdefault((_xfer_link(plan, e), e.nbytes), e.dur)
+    streamed = 0
+    firsts: dict = {}
+    for e in sorted((e for e in simulate_schedule(
+            plan, topo, order, overlap="full").events if e.kind == "X"),
+            key=lambda e: e.start):
+        link = _xfer_link(plan, e)
+        base = cold[(link, e.nbytes)]
+        if link not in firsts:
+            firsts[link] = e
+            assert e.dur == pytest.approx(base)
+        elif e.dur < base:
+            assert e.dur == pytest.approx(base - topo.latency)
+            streamed += 1
+    assert streamed > 0
+
+
+def test_schedule_step_cost_defaults_to_full_overlap():
+    """The search-facing cost model prices pipelines under the scan
+    engine's streaming overlap by default; the legacy model stays
+    available via overlap="link" and is never cheaper."""
+    from repro.exec import schedule_step_cost
+    topo = make_testbed()
+    plan = _uniform_plan(S=3, M=6, out_bytes=5e8)
+    c_def = schedule_step_cost(plan, topo, "gpipe", global_micro=6)
+    c_full = schedule_step_cost(plan, topo, "gpipe", global_micro=6,
+                                overlap="full")
+    c_link = schedule_step_cost(plan, topo, "gpipe", global_micro=6,
+                                overlap="link")
+    assert c_def["step_time_s"] == pytest.approx(c_full["step_time_s"])
+    assert c_full["step_time_s"] < c_link["step_time_s"]
+    assert c_def["timeline"].meta["overlap"] == "full"
+
+
 # -------------------------------------------- replay + simulator agreement
 
 @pytest.mark.parametrize("name", ["gpipe", "1f1b", "interleaved", "zb"])
@@ -655,6 +770,120 @@ def test_pipeline_parity_new_schedules():
         print("NEW_SCHED_PARITY_OK")
     """)
     assert "NEW_SCHED_PARITY_OK" in out
+
+
+def test_scan_engine_matches_eager():
+    """The compiled scan engine (CompiledPipelineRunner) produces loss
+    and gradients allclose to the single-device reference for ALL four
+    schedule families, with O(U) recorded scan-program events instead of
+    the eager engine's O(U * n_micro) — including a 2-way stage-DP SFB
+    spot check where the sync collectives run inside the scan."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_reduced
+        from repro.models import init_params, loss_fn
+        from repro.exec import (CompiledPipelineRunner, PipelineRunner,
+                                split_model)
+        from repro.exec.stages import StagePlan, StageSpec
+
+        cfg = get_reduced("qwen2-1.5b").replace(dtype="float32")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.ones((8, 16), jnp.int32),
+                 "labels": jnp.ones((8, 16), jnp.int32)}
+        ref_loss, _ = jax.jit(
+            lambda p, b: loss_fn(cfg, p, b, remat=False))(params, batch)
+        ref_grads = jax.jit(jax.grad(
+            lambda p, b: loss_fn(cfg, p, b, remat=False)[0]))(params, batch)
+
+        def maxerr(a, b):
+            return max(float(jnp.max(jnp.abs(x - y))) for x, y in
+                       zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+        def plan2(n_micro, sync="allreduce", n_devices=1):
+            return StagePlan(
+                stages=[StageSpec(i, i, [i], flops=1e9, param_bytes=0,
+                                  grad_bytes=0, out_bytes=1e5, sync=sync,
+                                  n_devices=n_devices, gpu_type="V100")
+                        for i in range(2)],
+                placement=(0, 1), n_micro=n_micro)
+
+        devs = jax.devices()
+        P = cfg.num_periods
+        hi = P // 2
+        M = 4
+        for sched in ("gpipe", "1f1b", "interleaved", "zb"):
+            nc = 2 if sched == "interleaved" else 1
+            plan = plan2(M)
+            splits = plan.layer_splits(P, n_chunks=nc) if nc > 1 else None
+            sp, fns, keys, tied = split_model(cfg, params, 2 * nc,
+                                              splits=splits)
+            runner = CompiledPipelineRunner(
+                fns, plan, [[devs[0]], [devs[1]]], schedule=sched,
+                n_micro=M, n_chunks=nc, mb_keys=keys, tied_ref=tied)
+            grads, stats = runner.step(runner.place_params(sp), batch,
+                                       record=True)
+            assert abs(stats.loss - float(ref_loss)) < 1e-4, \\
+                (sched, stats.loss)
+            errs = [maxerr(grads[0]["embed"], ref_grads["embed"]),
+                    maxerr(grads[2 * nc - 1]["final_norm"],
+                           ref_grads["final_norm"])]
+            if nc == 1:
+                errs += [maxerr(grads[0]["blocks"], jax.tree.map(
+                             lambda a: a[:hi], ref_grads["blocks"])),
+                         maxerr(grads[1]["blocks"], jax.tree.map(
+                             lambda a: a[hi:], ref_grads["blocks"]))]
+            else:
+                for u, (lo, hiu) in enumerate(splits):
+                    if lo < hiu:
+                        errs.append(maxerr(grads[u]["blocks"],
+                            jax.tree.map(lambda a: a[lo:hiu],
+                                         ref_grads["blocks"])))
+            assert max(errs) < 1e-4, (sched, errs)
+            # one event per scan program, mb=-1: U fwd + U bwd
+            # (+ U wgrad for zb), vs the eager engine's U*M + U*M
+            U = 2 * nc
+            want = U * (3 if sched == "zb" else 2)
+            assert len(stats.events) == want, (sched, stats.events)
+            assert all(e[2] == -1 for e in stats.events), stats.events
+            # scan engine is GPipe-like in memory whatever the schedule
+            assert stats.peak_stash == U * M, stats.peak_stash
+
+        # eager engine on the same plan records per-microbatch events
+        sp, fns, keys, tied = split_model(cfg, params, 2)
+        eager = PipelineRunner(fns, plan2(M), [[devs[0]], [devs[1]]],
+                               schedule="1f1b", n_micro=M, mb_keys=keys,
+                               tied_ref=tied)
+        _, est = eager.step(eager.place_params(sp), batch, record=True)
+        assert len(est.events) == 2 * 2 * M, len(est.events)
+
+        # 2-way stage DP: sync collectives run inside the scan
+        sp, fns, keys, tied = split_model(cfg, params, 2)
+        runner = CompiledPipelineRunner(
+            fns, plan2(2, sync="sfb", n_devices=2),
+            [devs[:2], devs[2:]], schedule="1f1b", n_micro=2,
+            mb_keys=keys, tied_ref=tied)
+        grads, stats = runner.step(runner.place_params(sp), batch)
+        errs = [maxerr(grads[0]["embed"], ref_grads["embed"]),
+                maxerr(grads[0]["blocks"], jax.tree.map(
+                    lambda a: a[:hi], ref_grads["blocks"])),
+                maxerr(grads[1]["blocks"], jax.tree.map(
+                    lambda a: a[hi:], ref_grads["blocks"]))]
+        assert max(errs) < 1e-4, ("sfb", errs)
+        print("SCAN_ENGINE_OK")
+    """)
+    assert "SCAN_ENGINE_OK" in out
+
+
+def test_stack_microbatches_shape_guard():
+    """stack_microbatches reshapes [B, ...] -> [M, B/M, ...] and rejects
+    batch sizes not divisible by n_micro."""
+    import numpy as np
+    from repro.exec import stack_microbatches
+    batch = {"tokens": np.ones((8, 16), np.int32)}
+    out = stack_microbatches(batch, 4)
+    assert out["tokens"].shape == (4, 2, 16)
+    with pytest.raises(ValueError, match="n_micro"):
+        stack_microbatches(batch, 3)
 
 
 def test_pipeline_kill_and_resume_parity():

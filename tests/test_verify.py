@@ -73,6 +73,50 @@ def test_generated_schedules_verify_clean(sched, n_stages, n_micro):
     assert not rep.diagnostics
 
 
+def test_memory_proof_is_engine_aware():
+    """The memory prover accounts per engine: the eager engine follows
+    the schedule's peak stash (1F1B drains as it goes) while the scan
+    engine stashes all n_micro inputs per hosted chunk plus an
+    n_micro-deep boundary double-buffer — so a plan can prove clean for
+    eager and OOM for scan on the same devices."""
+    from repro.exec.schedule import peak_stash
+    from repro.exec.stages import StagePlan, StageSpec
+    from repro.verify import verify_stage_plan
+    from repro.verify.memory import analyze_memory, engine_peak_stash
+
+    topo = make_testbed()
+    M = 8
+    # two 1080Ti pairs: 2 x 11 GB = 22 GB per stage. act/mb = 2 GB:
+    # eager 1F1B stashes [2, 1] mbs -> fits; scan stashes M*V + M = 16
+    # -> 32 GB -> OOM.
+    plan = StagePlan(
+        stages=[StageSpec(i, 1 + i, [i], flops=1e9, param_bytes=1e5,
+                          grad_bytes=1e5, out_bytes=16e9,
+                          n_devices=2, gpu_type="1080Ti")
+                for i in range(2)],
+        placement=(1, 2), n_micro=M)
+    order = make_schedule("1f1b", 2, M)
+
+    assert engine_peak_stash(order, M, "eager") == peak_stash(order)
+    assert engine_peak_stash(order, M, "scan") == [M + M, M + M]
+    with pytest.raises(ValueError, match="engine"):
+        engine_peak_stash(order, M, "tpu")
+
+    assert analyze_memory(plan, topo, order, M).ok
+    rep = analyze_memory(plan, topo, order, M, engine="scan")
+    assert not rep.ok
+    assert {d.code for d in rep.errors()} == {"TAG201"}
+
+    # threads through the orchestrator entry point too
+    assert verify_stage_plan(plan, topo, schedule="1f1b").ok
+    assert not verify_stage_plan(plan, topo, schedule="1f1b",
+                                 engine="scan").ok
+
+    # interleaved chunks multiply the scan stash: M * V + M
+    order_v = make_schedule("interleaved", 2, M, n_chunks=2)
+    assert engine_peak_stash(order_v, M, "scan") == [M * 2 + M] * 2
+
+
 # --------------------------------------------------- mutation self-test
 
 def test_selftest_catches_every_injected_violation():
